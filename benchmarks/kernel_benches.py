@@ -1,0 +1,76 @@
+"""Kernel benches: interpret-mode correctness + XLA-path latency probes.
+
+Wall-clock on CPU is NOT the TPU number — these rows exist to (a) prove
+the Pallas kernels validate against their oracles in the bench harness
+and (b) track the XLA twin-path latency for regressions.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _row(name, us, derived):
+    return {"name": name, "us_per_call": f"{us:.1f}", "derived": derived}
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def bench_kernels(quick: bool = True) -> list[dict]:
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.kernels.rmsnorm.ops import rmsnorm
+    from repro.kernels.wkv6.ops import wkv6
+    from repro.kernels.wkv6.ref import wkv6_ref
+
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, S, H, Dh = 1, 256, 4, 64
+    q = jax.random.normal(key, (B, S, H, Dh), jnp.float32)
+    k = jax.random.normal(key, (B, S, 2, Dh), jnp.float32)
+    v = jax.random.normal(key, (B, S, 2, Dh), jnp.float32)
+    out = flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    us = _time(lambda a, b, c: flash_attention(a, b, c, block_q=64, block_k=64,
+                                               interpret=True), q, k, v)
+    rows.append(_row("kernels/flash_attention", us, f"max_err_vs_ref={err:.2e}"))
+
+    r = jax.random.normal(key, (1, 128, 2, 32))
+    kk = jax.random.normal(key, (1, 128, 2, 32))
+    vv = jax.random.normal(key, (1, 128, 2, 32))
+    w = -jnp.exp(jax.random.uniform(key, (1, 128, 2, 32), minval=-6, maxval=0.5))
+    u = jax.random.normal(key, (2, 32)) * 0.5
+    o = wkv6(r, kk, vv, w, u, chunk=32, interpret=True)
+    oref = wkv6_ref(r.transpose(0, 2, 1, 3), kk.transpose(0, 2, 1, 3),
+                    vv.transpose(0, 2, 1, 3), w.transpose(0, 2, 1, 3), u
+                    ).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(o - oref)))
+    us = _time(lambda *a: wkv6(*a, chunk=32, interpret=True), r, kk, vv, w, u)
+    rows.append(_row("kernels/wkv6", us, f"max_err_vs_ref={err:.2e}"))
+
+    x = jax.random.normal(key, (64, 512))
+    s = jax.random.normal(key, (512,)) + 1
+    o = rmsnorm(x, s, interpret=True)
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+    err = float(jnp.max(jnp.abs(o - rmsnorm_ref(x, s))))
+    us = _time(lambda *a: rmsnorm(*a, interpret=True), x, s)
+    rows.append(_row("kernels/rmsnorm", us, f"max_err_vs_ref={err:.2e}"))
+    return rows
+
+
+ALL_KERNEL_BENCHES = [bench_kernels]

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only PREFIX]``
+
+Prints ``name,us_per_call,derived`` CSV — one section per paper
+table/figure plus framework-side kernel and roofline benchmarks.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="full sweeps (slow)")
+    ap.add_argument("--only", default="", help="only benches whose name starts with this")
+    args = ap.parse_args()
+
+    from benchmarks.paper_benches import ALL_BENCHES
+
+    benches = list(ALL_BENCHES)
+    try:
+        from benchmarks.kernel_benches import ALL_KERNEL_BENCHES
+
+        benches += ALL_KERNEL_BENCHES
+    except ImportError:
+        pass
+    try:
+        from benchmarks.roofline_bench import ALL_ROOFLINE_BENCHES
+
+        benches += ALL_ROOFLINE_BENCHES
+    except ImportError:
+        pass
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for bench in benches:
+        if args.only and not bench.__name__.startswith(
+            ("bench_" + args.only, args.only)
+        ):
+            continue
+        try:
+            for row in bench(quick=not args.full):
+                print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+            sys.stdout.flush()
+        except Exception:
+            failed += 1
+            print(f"{bench.__name__},ERROR,see_stderr")
+            traceback.print_exc()
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

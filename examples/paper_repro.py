@@ -1,0 +1,31 @@
+"""Reproduce the paper's headline results (Figs. 2-3) via the calibrated
+cluster simulator + analytic model (Eqs. 1-11), printed as a table.
+
+    PYTHONPATH=src python examples/paper_repro.py
+"""
+from repro.core.model import ClusterSpec, MiB, Workload, lustre_bounds, sea_bounds
+from repro.core.simulator import Simulator
+
+PAPER = ClusterSpec()
+
+def run(cl, w, system="sea"):
+    return Simulator(cl, w, system).run().makespan
+
+print(f"{'experiment':34s} {'lustre':>8s} {'sea':>8s} {'speedup':>8s}  paper")
+rows = [
+    ("base (5 nodes, 6 procs, 10 iters)", PAPER, Workload(n=10), "~2.4x"),
+    ("1 node", PAPER.with_(c=1), Workload(n=10), "~1.0x"),
+    ("1 iteration", PAPER, Workload(n=1), "<=1.0x"),
+    ("32 procs, 5 iters", PAPER.with_(p=32), Workload(n=5), "~3.0x"),
+    ("1 disk, 5 iters", PAPER.with_(g=1), Workload(n=5), "<1.0x"),
+]
+for name, cl, w, paper in rows:
+    tl, ts = run(cl, w, "lustre"), run(cl, w, "sea")
+    print(f"{name:34s} {tl:7.0f}s {ts:7.0f}s {tl/ts:7.2f}x  {paper}")
+
+cl, w = PAPER.with_(p=64), Workload(n=5)
+tl = run(cl, w, "lustre"); ts = run(cl, w, "sea"); tf = run(cl, w, "sea-flushall")
+print(f"\nFig 3 (64 procs): flush-all/in-memory = {tf/ts:.2f}x (paper 3.5x), "
+      f"flush-all/lustre = {tf/tl:.2f}x (paper 1.3x)")
+lo, hi = sea_bounds(w, cl)
+print(f"model bounds for Sea: [{lo:.0f}s, {hi:.0f}s], simulated {ts:.0f}s")

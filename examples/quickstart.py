@@ -1,0 +1,49 @@
+"""Quickstart: the Sea data-placement library in 60 seconds.
+
+1. Declare a tiered hierarchy (tmpfs -> disk -> 'PFS').
+2. Run an UNMODIFIED numpy pipeline under SeaMount interception.
+3. Watch files land on the fast tier, finals flush to the PFS.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.core import Sea, SeaConfig, SeaMount, TierSpec
+
+workdir = tempfile.mkdtemp(prefix="sea_quickstart_")
+cfg = SeaConfig(
+    mount=os.path.join(workdir, "mount"),
+    tiers=[
+        TierSpec(name="tmpfs", roots=("/dev/shm/sea_quickstart",)),
+        TierSpec(name="disk", roots=(os.path.join(workdir, "disk"),)),
+        TierSpec(name="pfs", roots=(os.path.join(workdir, "pfs"),), persistent=True),
+    ],
+    max_file_size=1 << 22,
+    n_procs=1,
+    flushlist=("results/*",),            # finals -> long-term storage
+    evictlist=("results/*", "*.tmp"),    # ... and drop from cache after
+)
+
+with Sea(cfg) as sea:
+    mount = sea.fs.mount
+    with SeaMount(sea.fs):               # <- LD_PRELOAD analogue
+        # unmodified application code: plain numpy + open()
+        data = np.arange(1 << 18, dtype=np.int32)
+        np.save(os.path.join(mount, "input.npy"), data)            # cache tier
+        for i in range(3):
+            data = np.load(os.path.join(mount, "input.npy" if i == 0
+                                        else f"iter_{i - 1}.npy")) + 1
+            np.save(os.path.join(mount, f"iter_{i}.npy"), data)    # intermediates
+        np.save(os.path.join(mount, "results/final.npy"), data)    # final output
+    print("input lives on   :", sea.fs.where(os.path.join(mount, "input.npy")))
+    print("intermediate on  :", sea.fs.where(os.path.join(mount, "iter_1.npy")))
+
+# after shutdown (final flush): results are on the persistent tier
+final = os.path.join(workdir, "pfs", "results", "final.npy")
+print("final on PFS      :", os.path.exists(final))
+print("final[:3]         :", np.load(final)[:3], "(= input + 3)")
+print("telemetry         :", {k: v for k, v in sea.fs.telemetry.snapshot().items()
+                              if k in ("flushed_files", "evicted_files", "redirect_hits")})

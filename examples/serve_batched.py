@@ -1,0 +1,14 @@
+"""Batched serving: prefill + KV/state-cache decode on a reduced config of
+any assigned architecture (try rwkv6-7b for state-space decode, or
+jamba-v0.1-52b for the hybrid cache).
+
+    PYTHONPATH=src python examples/serve_batched.py [arch]
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "jamba-v0.1-52b"
+    main(["--arch", arch, "--batch", "4", "--prompt-len", "32",
+          "--new-tokens", "16"])

@@ -1,0 +1,17 @@
+"""End-to-end training: Sea-staged data, pjit train loop, burst-buffer
+checkpoints, crash-safe resume. Trains a ~20M-param LM for 200 steps
+(pass --steps/--params-m to scale up to the ~100M configuration).
+
+    PYTHONPATH=src python examples/train_e2e.py [--steps 200] [--params-m 20]
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or [
+        "--arch", "small", "--params-m", "20", "--steps", "200",
+        "--batch", "4", "--seq", "256", "--ckpt-every", "50",
+        "--workdir", "/tmp/sea_train_e2e",
+    ]
+    main(argv)

@@ -1,0 +1,110 @@
+"""Pytree (de)serialization to per-leaf .npy files + a JSON manifest.
+
+bfloat16 leaves are stored as uint16 bit patterns (numpy-portable) with
+the logical dtype recorded in the manifest. Every leaf carries a crc32 so
+restore can verify integrity after a crash or partial flush.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import zlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _to_numpy(x) -> tuple[np.ndarray, str]:
+    arr = np.asarray(x)
+    logical = str(arr.dtype)
+    if logical == "bfloat16":
+        return arr.view(np.uint16), "bfloat16"
+    return arr, logical
+
+
+def _from_numpy(arr: np.ndarray, logical: str) -> np.ndarray:
+    if logical == "bfloat16":
+        import ml_dtypes
+
+        return arr.view(ml_dtypes.bfloat16)
+    return arr
+
+
+def save_tree(tree, dirpath: str, open_fn: Callable = open,
+              makedirs_fn: Callable | None = None) -> dict:
+    """Write every leaf to ``dirpath/<idx>.npy``; returns the manifest."""
+    if makedirs_fn is not None:
+        makedirs_fn(dirpath, exist_ok=True)
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    manifest: dict[str, Any] = {"leaves": {}}
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        key = _path_str(path)
+        arr, logical = _to_numpy(leaf)
+        fname = f"{i:05d}.npy"
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        data = buf.getvalue()
+        with open_fn(f"{dirpath}/{fname}", "wb") as f:
+            f.write(data)
+        manifest["leaves"][key] = {
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": logical,
+            "crc32": zlib.crc32(data) & 0xFFFFFFFF,
+            "bytes": len(data),
+        }
+    with open_fn(f"{dirpath}/manifest.json", "w") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+def load_manifest(dirpath: str, open_fn: Callable = open) -> dict:
+    with open_fn(f"{dirpath}/manifest.json", "r") as f:
+        return json.load(f)
+
+
+def load_tree(template, dirpath: str, open_fn: Callable = open,
+              shardings=None, verify: bool = True):
+    """Load into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs). ``shardings``: optional matching tree of
+    jax.sharding.Sharding for elastic restore onto a different mesh."""
+    manifest = load_manifest(dirpath, open_fn)
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    out = []
+    for i, (path, leaf) in enumerate(leaves_with_paths):
+        key = _path_str(path)
+        meta = manifest["leaves"][key]
+        with open_fn(f"{dirpath}/{meta['file']}", "rb") as f:
+            data = f.read()
+        if verify and (zlib.crc32(data) & 0xFFFFFFFF) != meta["crc32"]:
+            raise IOError(f"checksum mismatch for {key} in {dirpath}")
+        arr = np.load(io.BytesIO(data), allow_pickle=False)
+        arr = _from_numpy(arr, meta["dtype"])
+        expected = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != expected:
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs {expected}"
+            )
+        if shard_leaves is not None:
+            out.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            out.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,37 @@
+"""repro.core — the Sea data-placement library (the paper's contribution).
+
+Public surface:
+    SeaConfig / TierSpec      configuration (paper §3.1.1)
+    SeaFS                     stateless path translation + file ops (§3.1.2)
+    SeaMount                  Python-level interception context (LD_PRELOAD analogue)
+    Flusher / Sea             flush-and-evict daemon, prefetcher (§3.3)
+    Mode                      copy / remove / move / keep (Table 1)
+    perf model                ``repro.core.model`` (Eqs. 1–11)
+    simulator                 ``repro.core.simulator`` (paper-scale experiments)
+"""
+
+from .config import SeaConfig, default_local_config
+from .flusher import Flusher, Sea
+from .intercept import SeaMount
+from .lists import Mode, matches, resolve_mode
+from .placement import PlacementPolicy
+from .seafs import SeaFS
+from .telemetry import Telemetry
+from .tiers import Hierarchy, Tier, TierSpec
+
+__all__ = [
+    "SeaConfig",
+    "default_local_config",
+    "Flusher",
+    "Sea",
+    "SeaMount",
+    "Mode",
+    "matches",
+    "resolve_mode",
+    "PlacementPolicy",
+    "SeaFS",
+    "Telemetry",
+    "Hierarchy",
+    "Tier",
+    "TierSpec",
+]

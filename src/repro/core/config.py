@@ -1,0 +1,193 @@
+"""Sea configuration.
+
+Mirrors the paper's configuration surface (§3.1.1/§5.1): a mountpoint, an
+ordered storage hierarchy, the maximum file size the workflow produces, the
+number of concurrent processes, and the three list files
+(.sea_flushlist / .sea_evictlist / .sea_prefetchlist).
+
+"At minimum, Sea requires the specification of a configuration file for it
+to work." — we accept a Python dataclass, a TOML/INI-style file, or
+environment variables, keeping the minimal-configuration requirement.
+"""
+
+from __future__ import annotations
+
+import configparser
+import os
+from dataclasses import dataclass, field, replace
+
+from .tiers import Hierarchy, TierSpec
+
+#: default basenames, identical to the paper
+FLUSHLIST_NAME = ".sea_flushlist"
+EVICTLIST_NAME = ".sea_evictlist"
+PREFETCHLIST_NAME = ".sea_prefetchlist"
+
+
+@dataclass
+class SeaConfig:
+    mount: str                          # virtual mountpoint the app writes under
+    tiers: list[TierSpec]               # fastest first; last = persistent base
+    max_file_size: int = 1 << 20        # F: max bytes one workflow file may have
+    n_procs: int = 1                    # p: concurrent writer processes
+    flushlist: tuple[str, ...] = ()     # glob patterns, relative to mount
+    evictlist: tuple[str, ...] = ()
+    prefetchlist: tuple[str, ...] = ()
+    #: flusher behaviour
+    flush_interval_s: float = 0.05      # poll period of the flush-and-evict daemon
+    max_inflight_flush_bytes: int = 1 << 30  # beyond-paper: bounded async flushing
+    #: beyond-paper options (all default OFF for paper faithfulness)
+    stripe_chunk_bytes: int = 0         # >0 enables striping across same-level roots
+    lru_evict: bool = False             # auto-evict LRU when a tier is full
+
+    def __post_init__(self) -> None:
+        self.mount = os.path.abspath(self.mount)
+        self.flushlist = tuple(self.flushlist)
+        self.evictlist = tuple(self.evictlist)
+        self.prefetchlist = tuple(self.prefetchlist)
+        if self.max_file_size <= 0:
+            raise ValueError("max_file_size must be positive")
+        if self.n_procs <= 0:
+            raise ValueError("n_procs must be positive")
+
+    # -- presets (paper §3.1.1: "two main modes based on flushing spec") ----
+    def in_memory(self, final_globs: tuple[str, ...]) -> "SeaConfig":
+        """In-memory computing: only final outputs are flushed (and evicted
+        once flushed); intermediates never touch the base tier."""
+        return replace(self, flushlist=tuple(final_globs), evictlist=tuple(final_globs))
+
+    def copy_all(self) -> "SeaConfig":
+        """Copy-all: everything is materialized to long-term storage."""
+        return replace(self, flushlist=("*",), evictlist=())
+
+    def build_hierarchy(self) -> Hierarchy:
+        return Hierarchy.from_specs(list(self.tiers))
+
+    # -- parsing -------------------------------------------------------------
+    @classmethod
+    def from_file(cls, path: str) -> "SeaConfig":
+        """Parse an INI-style Sea configuration file::
+
+            [sea]
+            mount = /sea
+            max_file_size = 647088128
+            n_procs = 6
+
+            [tier.tmpfs]
+            roots = /dev/shm/sea
+            write_bw = 2684354560
+            read_bw = 7000000000
+
+            [tier.pfs]
+            roots = /lustre/scratch
+            persistent = true
+        """
+        cp = configparser.ConfigParser()
+        with open(path) as f:
+            cp.read_file(f)
+        sea = cp["sea"]
+        tiers: list[TierSpec] = []
+        for section in cp.sections():
+            if not section.startswith("tier."):
+                continue
+            t = cp[section]
+            tiers.append(
+                TierSpec(
+                    name=section[len("tier."):],
+                    roots=tuple(x.strip() for x in t["roots"].split(",")),
+                    read_bw=t.getfloat("read_bw", 0.0),
+                    write_bw=t.getfloat("write_bw", 0.0),
+                    capacity=t.getint("capacity", fallback=None),
+                    persistent=t.getboolean("persistent", fallback=False),
+                )
+            )
+        base = os.path.dirname(os.path.abspath(path))
+
+        def _read_list(name: str) -> tuple[str, ...]:
+            p = os.path.join(base, name)
+            if not os.path.exists(p):
+                return ()
+            with open(p) as f:
+                return tuple(
+                    ln.strip() for ln in f if ln.strip() and not ln.startswith("#")
+                )
+
+        return cls(
+            mount=sea["mount"],
+            tiers=tiers,
+            max_file_size=sea.getint("max_file_size", 1 << 20),
+            n_procs=sea.getint("n_procs", 1),
+            flushlist=_read_list(FLUSHLIST_NAME),
+            evictlist=_read_list(EVICTLIST_NAME),
+            prefetchlist=_read_list(PREFETCHLIST_NAME),
+        )
+
+    @classmethod
+    def from_env(cls, env: dict[str, str] | None = None) -> "SeaConfig":
+        """SEA_CONFIG=<path> or SEA_MOUNT/SEA_TIERS=<root:root:...>."""
+        env = dict(os.environ if env is None else env)
+        if "SEA_CONFIG" in env:
+            return cls.from_file(env["SEA_CONFIG"])
+        roots = [r for r in env.get("SEA_TIERS", "").split(":") if r]
+        if len(roots) < 2:
+            raise ValueError("SEA_TIERS must list >=2 roots (fastest first)")
+        tiers = [TierSpec(name=f"t{i}", roots=(r,)) for i, r in enumerate(roots)]
+        tiers[-1] = replace(tiers[-1], persistent=True)
+        return cls(
+            mount=env.get("SEA_MOUNT", "/sea"),
+            tiers=tiers,
+            max_file_size=int(env.get("SEA_MAX_FILE_SIZE", 1 << 20)),
+            n_procs=int(env.get("SEA_NPROCS", "1")),
+        )
+
+
+def default_local_config(
+    workdir: str,
+    *,
+    max_file_size: int = 1 << 20,
+    n_procs: int = 1,
+    tmpfs_capacity: int | None = None,
+    disk_capacity: int | None = None,
+    n_disks: int = 1,
+) -> SeaConfig:
+    """A convenient single-node hierarchy rooted under ``workdir``:
+    tmpfs (/dev/shm) -> local disk -> 'pfs' directory (base tier).
+
+    Used by tests, examples, and the framework's checkpoint/data layers.
+    """
+    shm = "/dev/shm" if os.path.isdir("/dev/shm") else workdir
+    # namespace the tmpfs root by the FULL workdir path (hashed) — basename
+    # collisions across runs must never share a burst buffer
+    import hashlib
+
+    tag = hashlib.sha1(os.path.abspath(workdir).encode()).hexdigest()[:12]
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(
+                name="tmpfs",
+                roots=(os.path.join(shm, f"sea_{tag}"),),
+                capacity=tmpfs_capacity,
+                read_bw=7.0e9,
+                write_bw=2.7e9,
+            ),
+            TierSpec(
+                name="disk",
+                roots=tuple(
+                    os.path.join(workdir, f"disk{i}") for i in range(n_disks)
+                ),
+                capacity=disk_capacity,
+                read_bw=5.26e8,
+                write_bw=4.47e8,
+            ),
+            TierSpec(
+                name="pfs",
+                roots=(os.path.join(workdir, "pfs"),),
+                read_bw=1.45e9,
+                write_bw=1.27e8,
+                persistent=True,
+            ),
+        ],
+        max_file_size=max_file_size,
+        n_procs=n_procs,
+    )

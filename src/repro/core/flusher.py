@@ -1,0 +1,239 @@
+"""Background flush-and-evict daemon + prefetcher (paper §3.3, §5.1).
+
+"If only a single instance of Sea is called on a compute node, there will
+only be a single flush and evict process." — one worker thread per SeaFS.
+
+The daemon reacts to file-close events and also runs periodic stateless
+scans of the cache tiers (so files written before the daemon started, or
+by other processes sharing the tiers, are still picked up). Flushes are
+atomic: copy to ``<dst>.sea_tmp`` on the base tier, then ``os.replace``;
+eviction of a MOVEd file happens only after the rename commits, so readers
+resolving the hierarchy always find a complete copy (fixes the paper's
+§5.5 in-flight-access limitation).
+"""
+
+from __future__ import annotations
+
+import os
+import queue
+import shutil
+import threading
+
+from .lists import Mode, resolve_mode
+from .seafs import SeaFS
+
+_TMP_SUFFIX = ".sea_tmp"
+
+
+class Flusher:
+    def __init__(self, fs: SeaFS):
+        self.fs = fs
+        self.config = fs.config
+        self._q: "queue.Queue[str | None]" = queue.Queue()
+        self._pending: set[str] = set()
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._idle = threading.Event()
+        self._idle.set()
+        self._thread: threading.Thread | None = None
+        fs.add_close_listener(self._on_close)
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "Flusher":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._run, name="sea-flusher", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._stop.set()
+        self._q.put(None)
+        if self._thread is not None:
+            self._thread.join(timeout=30)
+
+    def drain(self) -> None:
+        """Final flush: process every pending + scannable file, then return.
+        Called at application shutdown ('materialize onto long-term
+        storage')."""
+        self.scan()
+        while True:
+            with self._lock:
+                empty = not self._pending and self._q.unfinished_tasks == 0
+            if empty and self._idle.is_set():
+                break
+            if self._thread is None or not self._thread.is_alive():
+                # synchronous fallback: no daemon running
+                self._process_all_sync()
+                break
+            self._idle.wait(timeout=0.5)
+
+    # -- event plumbing --------------------------------------------------------
+    def _on_close(self, key: str, writing: bool) -> None:
+        if not writing:
+            return
+        self.submit(key)
+
+    def submit(self, key: str) -> None:
+        with self._lock:
+            if key in self._pending:
+                return
+            self._pending.add(key)
+        self._q.put(key)
+
+    def scan(self) -> int:
+        """Stateless sweep of cache tiers for files needing flush/evict."""
+        n = 0
+        for tier in self.fs.hierarchy.cache_tiers:
+            for root in tier.roots:
+                for dirpath, _dirs, files in os.walk(root):
+                    for fn in files:
+                        if fn.endswith(_TMP_SUFFIX):
+                            continue
+                        key = os.path.relpath(os.path.join(dirpath, fn), root)
+                        mode = resolve_mode(
+                            key, self.config.flushlist, self.config.evictlist
+                        )
+                        if mode is not Mode.KEEP:
+                            self.submit(key)
+                            n += 1
+        return n
+
+    # -- worker ------------------------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                key = self._q.get(timeout=self.config.flush_interval_s)
+            except queue.Empty:
+                continue
+            if key is None:
+                self._q.task_done()
+                break
+            self._idle.clear()
+            try:
+                self.process(key)
+            finally:
+                with self._lock:
+                    self._pending.discard(key)
+                self._q.task_done()
+                if self._q.empty():
+                    self._idle.set()
+
+    def _process_all_sync(self) -> None:
+        while True:
+            try:
+                key = self._q.get_nowait()
+            except queue.Empty:
+                return
+            if key is not None:
+                self.process(key)
+            with self._lock:
+                self._pending.discard(key)
+            self._q.task_done()
+
+    # -- the four modes ------------------------------------------------------------
+    def process(self, key: str) -> Mode:
+        mode = resolve_mode(key, self.config.flushlist, self.config.evictlist)
+        if mode is Mode.KEEP:
+            return mode
+        with self.fs.key_lock(key):
+            if self.fs.open_count(key):
+                # busy: requeue for a later pass rather than moving underneath
+                # the application (paper §5.5 limitation, handled here).
+                self.submit(key)
+                return mode
+            located = self.fs.hierarchy.locate(key)
+            if located is None:
+                return mode
+            tier, real = located
+            if tier.persistent:
+                return mode  # already on long-term storage: nothing to do
+            if mode in (Mode.COPY, Mode.MOVE):
+                self._flush_one(key, real)
+            if mode in (Mode.MOVE, Mode.REMOVE):
+                self._evict_one(key, real)
+        return mode
+
+    def _flush_one(self, key: str, src: str) -> None:
+        base_root = self.fs.hierarchy.base.roots[0]
+        dst = os.path.join(base_root, key)
+        os.makedirs(os.path.dirname(dst), exist_ok=True)
+        if os.path.exists(dst) and os.path.getmtime(dst) >= os.path.getmtime(src):
+            return  # already materialized and fresh
+        tmp = dst + _TMP_SUFFIX
+        shutil.copyfile(src, tmp)
+        os.replace(tmp, dst)  # atomic commit
+        self.fs.telemetry.record_flush(os.path.getsize(dst))
+
+    def _evict_one(self, key: str, src: str) -> None:
+        try:
+            nbytes = os.path.getsize(src)
+            os.remove(src)
+            self.fs.telemetry.record_evict(nbytes)
+        except OSError:
+            pass
+
+    # -- prefetch -----------------------------------------------------------------
+    def prefetch(self) -> int:
+        """Stage .sea_prefetchlist matches from the base tier into the
+        fastest cache tier with room ("For files to be prefetched, they
+        must be located within Sea's mountpoint at startup")."""
+        from .lists import matches
+
+        total = 0
+        base = self.fs.hierarchy.base
+        for root in base.roots:
+            for dirpath, _dirs, files in os.walk(root):
+                for fn in files:
+                    real = os.path.join(dirpath, fn)
+                    key = os.path.relpath(real, root)
+                    if not matches(key, self.config.prefetchlist):
+                        continue
+                    with self.fs.key_lock(key):
+                        cur = self.fs.hierarchy.locate(key)
+                        if cur is not None and not cur[0].persistent:
+                            continue  # already cached
+                        nbytes = os.path.getsize(real)
+                        slot = self.fs.policy.select_cache_for_prefetch(nbytes)
+                        if slot is None:
+                            continue
+                        _tier, croot = slot
+                        dst = os.path.join(croot, key)
+                        os.makedirs(os.path.dirname(dst), exist_ok=True)
+                        tmp = dst + _TMP_SUFFIX
+                        shutil.copyfile(real, tmp)
+                        os.replace(tmp, dst)
+                        self.fs.telemetry.record_prefetch(nbytes)
+                        total += nbytes
+        return total
+
+
+class Sea:
+    """Top-level convenience bundle: SeaFS + running Flusher.
+
+    >>> sea = Sea(config).start()
+    >>> with sea.fs.open(f"{config.mount}/x.bin", "wb") as f: ...
+    >>> sea.shutdown()      # drain & stop (final flush)
+    """
+
+    def __init__(self, config):
+        self.fs = SeaFS(config)
+        self.flusher = Flusher(self.fs)
+
+    def start(self) -> "Sea":
+        self.flusher.start()
+        if self.fs.config.prefetchlist:
+            self.flusher.prefetch()
+        return self
+
+    def shutdown(self) -> None:
+        self.flusher.drain()
+        self.flusher.stop()
+
+    def __enter__(self) -> "Sea":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -1,0 +1,149 @@
+"""SeaMount — Python-level I/O interception (the LD_PRELOAD analogue).
+
+The paper intercepts POSIX file-system calls made through glibc so that
+*unmodified* applications get data placement for free. Our applications are
+Python programs, so the equivalent syscall boundary is Python's I/O layer:
+``builtins.open`` plus the ``os``/``os.path``/``shutil`` entry points that
+take paths. Inside a ``SeaMount`` context every such call whose path falls
+under the Sea mountpoint is translated through :class:`SeaFS`; everything
+else passes through untouched — exactly the wrapper structure of Fig. 1.
+
+Like the paper's library, interception requires no change to the wrapped
+code, no root, and keeps Sea stateless. A real deployment on a TPU fleet
+would additionally ship the original C++ LD_PRELOAD library for non-Python
+tools; both enter the same placement logic.
+
+    with SeaMount(sea.fs):
+        run_unmodified_pipeline()          # open()/np.save()/... redirected
+"""
+
+from __future__ import annotations
+
+import builtins
+import os
+import shutil
+import threading
+
+from .seafs import SeaFS
+
+_PATCH_LOCK = threading.Lock()
+_ACTIVE: list["SeaMount"] = []
+
+
+class SeaMount:
+    def __init__(self, fs: SeaFS):
+        self.fs = fs
+        self._saved: dict = {}
+
+    # -- wrappers --------------------------------------------------------------
+    def _wrap_open(self, orig):
+        fs = self.fs
+
+        def sea_open(file, mode="r", *a, **kw):
+            try:
+                is_sea = isinstance(file, (str, os.PathLike)) and fs.is_sea_path(
+                    os.fspath(file)
+                )
+            except (TypeError, ValueError):
+                is_sea = False
+            if not is_sea:
+                return orig(file, mode, *a, **kw)
+            return fs.open(os.fspath(file), mode, *a, **kw)
+
+        return sea_open
+
+    def _path_fn(self, orig, handler):
+        fs = self.fs
+
+        def wrapper(path, *a, **kw):
+            try:
+                if isinstance(path, (str, os.PathLike)) and fs.is_sea_path(
+                    os.fspath(path)
+                ):
+                    return handler(os.fspath(path), *a, **kw)
+            except (TypeError, ValueError):
+                pass
+            return orig(path, *a, **kw)
+
+        return wrapper
+
+    def _two_path_fn(self, orig, handler):
+        fs = self.fs
+
+        def wrapper(src, dst, *a, **kw):
+            try:
+                s = isinstance(src, (str, os.PathLike)) and fs.is_sea_path(
+                    os.fspath(src)
+                )
+                d = isinstance(dst, (str, os.PathLike)) and fs.is_sea_path(
+                    os.fspath(dst)
+                )
+                if s or d:
+                    return handler(os.fspath(src), os.fspath(dst), *a, **kw)
+            except (TypeError, ValueError):
+                pass
+            return orig(src, dst, *a, **kw)
+
+        return wrapper
+
+    # -- context -----------------------------------------------------------------
+    def __enter__(self) -> "SeaMount":
+        fs = self.fs
+        with _PATCH_LOCK:
+            if _ACTIVE:
+                raise RuntimeError("nested SeaMount contexts are not supported")
+            _ACTIVE.append(self)
+            self._saved = {
+                "open": builtins.open,
+                "os.stat": os.stat,
+                "os.remove": os.remove,
+                "os.unlink": os.unlink,
+                "os.rename": os.rename,
+                "os.replace": os.replace,
+                "os.listdir": os.listdir,
+                "os.makedirs": os.makedirs,
+                "os.path.exists": os.path.exists,
+                "os.path.getsize": os.path.getsize,
+                "os.path.isfile": os.path.isfile,
+                "shutil.copyfile": shutil.copyfile,
+            }
+            builtins.open = self._wrap_open(builtins.open)
+            os.stat = self._path_fn(os.stat, fs.stat)
+            os.remove = self._path_fn(os.remove, fs.remove)
+            os.unlink = self._path_fn(os.unlink, fs.remove)
+            os.rename = self._two_path_fn(os.rename, fs.rename)
+            os.replace = self._two_path_fn(os.replace, fs.rename)
+            os.listdir = self._path_fn(os.listdir, fs.listdir)
+            os.makedirs = self._path_fn(
+                os.makedirs, lambda p, *a, **kw: fs.makedirs(p, **kw)
+            )
+            os.path.exists = self._path_fn(os.path.exists, fs.exists)
+            os.path.getsize = self._path_fn(os.path.getsize, fs.getsize)
+            os.path.isfile = self._path_fn(
+                os.path.isfile,
+                lambda p: fs.hierarchy.locate(fs.key_of(p)) is not None,
+            )
+
+            def _copyfile(src, dst, **kw):
+                with fs.open(src, "rb") as fi, fs.open(dst, "wb") as fo:
+                    shutil.copyfileobj(fi, fo)
+                return dst
+
+            shutil.copyfile = self._two_path_fn(shutil.copyfile, _copyfile)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        with _PATCH_LOCK:
+            builtins.open = self._saved["open"]
+            os.stat = self._saved["os.stat"]
+            os.remove = self._saved["os.remove"]
+            os.unlink = self._saved["os.unlink"]
+            os.rename = self._saved["os.rename"]
+            os.replace = self._saved["os.replace"]
+            os.listdir = self._saved["os.listdir"]
+            os.makedirs = self._saved["os.makedirs"]
+            os.path.exists = self._saved["os.path.exists"]
+            os.path.getsize = self._saved["os.path.getsize"]
+            os.path.isfile = self._saved["os.path.isfile"]
+            shutil.copyfile = self._saved["shutil.copyfile"]
+            _ACTIVE.clear()

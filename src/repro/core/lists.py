@@ -1,0 +1,59 @@
+"""Flush/evict/prefetch list semantics (paper §3.3, Table 1).
+
+Memory management in Sea is application-specific, configured via glob lists.
+A file's *mode* is resolved from membership in the flush and evict lists:
+
+    ============  ==============  ==============
+    Mode          .sea_flushlist  .sea_evictlist
+    ============  ==============  ==============
+    COPY          yes             no
+    REMOVE        no              yes
+    MOVE          yes             yes
+    KEEP          no              no
+    ============  ==============  ==============
+"""
+
+from __future__ import annotations
+
+import enum
+import fnmatch
+import os
+
+
+class Mode(enum.Enum):
+    COPY = "copy"      # materialize to base tier, keep in cache
+    REMOVE = "remove"  # drop from cache, never persisted
+    MOVE = "move"      # materialize then drop from cache (copy-and-remove)
+    KEEP = "keep"      # stay in cache, never persisted
+
+
+def _norm(relpath: str) -> str:
+    return relpath.replace(os.sep, "/").lstrip("/")
+
+
+def matches(relpath: str, patterns: tuple[str, ...]) -> bool:
+    """fnmatch against the full mount-relative path and the basename,
+    so users can write either ``results/*.npy`` or ``*.log``."""
+    rel = _norm(relpath)
+    base = os.path.basename(rel)
+    for pat in patterns:
+        p = _norm(pat)
+        if fnmatch.fnmatch(rel, p) or fnmatch.fnmatch(base, p):
+            return True
+    return False
+
+
+def resolve_mode(
+    relpath: str,
+    flushlist: tuple[str, ...],
+    evictlist: tuple[str, ...],
+) -> Mode:
+    flush = matches(relpath, flushlist)
+    evict = matches(relpath, evictlist)
+    if flush and evict:
+        return Mode.MOVE
+    if flush:
+        return Mode.COPY
+    if evict:
+        return Mode.REMOVE
+    return Mode.KEEP

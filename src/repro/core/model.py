@@ -1,0 +1,189 @@
+"""The Sea and Lustre makespan performance model (paper §3.4, Eqs. 1–11).
+
+All data quantities are bytes, bandwidths bytes/s, times seconds.
+Variable names follow the paper:
+
+    c   compute nodes                 N   network bandwidth per node
+    s   Lustre storage nodes          d   Lustre storage disks (OSTs)
+    p   parallel processes per node   d_r/d_w  per-OST read/write bandwidth
+    C_r/C_w  page-cache (memory) read/write bandwidth per node
+    g   local disks per compute node  G_r/G_w  local-disk read/write bandwidth
+    t   tmpfs capacity per node       r   capacity per local disk
+    F   size of a single workflow file
+
+Workload:
+    D_I  input bytes         D_m  intermediate bytes       D_f  final bytes
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+MiB = float(1 << 20)
+GiB = float(1 << 30)
+
+
+@dataclass(frozen=True)
+class ClusterSpec:
+    c: int = 5              # compute nodes (paper default: 5)
+    s: int = 4              # Lustre data nodes
+    d: int = 44             # OSTs (4 nodes x 11 disks)
+    N: float = 3125 * MiB   # 25 GbE
+    d_r: float = 250 * MiB  # per-OST HDD read bw
+    d_w: float = 121 * MiB  # per-OST write bw (Table 2 single-stream write)
+    C_r: float = 6676.48 * MiB   # tmpfs/page-cache read (Table 2)
+    C_w: float = 2560.00 * MiB   # tmpfs/page-cache write (Table 2)
+    G_r: float = 501.70 * MiB    # local SSD read (Table 2)
+    G_w: float = 426.00 * MiB    # local SSD write (Table 2)
+    g: int = 6              # local disks per node
+    t: float = 126 * GiB    # tmpfs space per node
+    r: float = 447 * GiB    # capacity per local disk
+    p: int = 6              # parallel processes per node
+    # --- simulator-only calibration (not part of the paper's model) ------
+    # Per-stream client limits and aggregate backend limits, calibrated so
+    # the simulated cluster reproduces the paper's measured behaviour
+    # (speedup ~1x at c=1, ~2.4x at the base condition, ~3x at p=32, and
+    # the Exp-4 above-model-bounds Lustre degradation at 30+ processes).
+    L_stream_w: float = 430 * MiB   # single client write stream to Lustre
+    L_stream_r: float = 1381 * MiB  # single client read stream (Table 2)
+    L_backend_w: float = 44 * 90 * MiB   # OSS/HDD collective write limit
+    L_backend_r: float = 44 * 250 * MiB  # OSS/HDD collective read limit
+    # User-space copy streams (the flush daemon) lack the client's
+    # write-behind aggregation; their collective backend efficiency is
+    # lower. Calibrated against the paper's Fig. 3 ratios (3.5x / 1.3x).
+    flush_efficiency: float = 0.75
+    # MDS/RPC contention: once concurrent write streams exceed the OST
+    # count, collective backend throughput degrades (paper §4.2: 'too many
+    # incoming requests to the server at 30+ parallel processes, that
+    # performance declined above model bounds').
+    mds_beta: float = 0.06
+
+    def with_(self, **kw) -> "ClusterSpec":
+        return replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class Workload:
+    """The incrementation application (paper Alg. 1): B blocks of F bytes,
+    n iterations; iteration i reads file i-1 and writes file i (tasks
+    communicate via the file system), the n-th file is the final output."""
+
+    B: int = 1000
+    F: float = 617 * MiB
+    n: int = 10
+
+    @property
+    def D_I(self) -> float:
+        return self.B * self.F
+
+    @property
+    def D_m(self) -> float:
+        return (self.n - 1) * self.B * self.F
+
+    @property
+    def D_f(self) -> float:
+        return self.B * self.F
+
+    @property
+    def total_written(self) -> float:
+        return self.D_m + self.D_f
+
+
+# ----------------------------------------------------------------- Lustre
+def lustre_read_bw(cl: ClusterSpec) -> float:
+    """Eq. 2:  L_r = min(cN, sN, d_r * min(d, cp))"""
+    return min(cl.c * cl.N, cl.s * cl.N, cl.d_r * min(cl.d, cl.c * cl.p))
+
+
+def lustre_write_bw(cl: ClusterSpec) -> float:
+    """Eq. 3:  L_w = min(cN, sN, d_w * min(d, cp))"""
+    return min(cl.c * cl.N, cl.s * cl.N, cl.d_w * min(cl.d, cl.c * cl.p))
+
+
+def lustre_makespan(w: Workload, cl: ClusterSpec) -> float:
+    """Eq. 1:  M_l = D_r/L_r + D_w/L_w  (no page-cache benefit).
+
+    D_r = input + re-read intermediates; D_w = intermediates + finals.
+    """
+    D_r = w.D_I + w.D_m
+    D_w = w.D_m + w.D_f
+    return D_r / lustre_read_bw(cl) + D_w / lustre_write_bw(cl)
+
+
+def pagecache_makespan(w: Workload, cl: ClusterSpec) -> float:
+    """Eq. 4:  M_c = D_cr/(c*C_r) + D_cw/(c*C_w) — all I/O in memory."""
+    return w.D_m / (cl.c * cl.C_r) + (w.D_m + w.D_f) / (cl.c * cl.C_w)
+
+
+def lustre_cached_makespan(w: Workload, cl: ClusterSpec) -> float:
+    """Eq. 5:  M_lc = D_I/L_r + M_c — everything but the first read cached."""
+    return w.D_I / lustre_read_bw(cl) + pagecache_makespan(w, cl)
+
+
+# -------------------------------------------------------------------- Sea
+def sea_tier_volumes(w: Workload, cl: ClusterSpec) -> dict:
+    """Spill-over volumes of Eqs. 8–10 (no eviction, as in the paper's
+    experiments: only last-iteration files were flushed/evicted)."""
+    reserve = cl.p * w.F
+    # Eq. 8 volumes — tmpfs
+    tmpfs_room = max(cl.c * (cl.t - reserve), 0.0)
+    D_tr = min(w.D_m, tmpfs_room)
+    D_tw = min(w.D_m + w.D_f, tmpfs_room)
+    # Eq. 9 volumes — local disks
+    disk_room = max(cl.c * (cl.g * cl.r - reserve), 0.0)
+    D_gr = min(max(w.D_m - D_tr, 0.0), disk_room)
+    D_gw = min(max(w.D_m + w.D_f - D_tw, 0.0), disk_room)
+    # Eq. 10 volumes — Lustre spill
+    D_Lr = max(w.D_m - D_gr - D_tr, 0.0)
+    D_Lw = max(w.D_m + w.D_f - D_gw - D_tw, 0.0)
+    return dict(D_tr=D_tr, D_tw=D_tw, D_gr=D_gr, D_gw=D_gw, D_Lr=D_Lr, D_Lw=D_Lw)
+
+
+def sea_makespan(w: Workload, cl: ClusterSpec) -> float:
+    """Eqs. 7–10:  M_S = M_SL + M_Sg + M_St (upper bound: no page cache)."""
+    v = sea_tier_volumes(w, cl)
+    M_St = v["D_tr"] / (cl.c * cl.C_r) + v["D_tw"] / (cl.c * cl.C_w)       # Eq. 8
+    M_Sg = v["D_gr"] / (cl.g * cl.c * cl.G_r) + v["D_gw"] / (cl.g * cl.c * cl.G_w)  # Eq. 9
+    M_SL = (
+        w.D_I / lustre_read_bw(cl)
+        + v["D_Lr"] / lustre_read_bw(cl)
+        + v["D_Lw"] / lustre_write_bw(cl)
+    )                                                                       # Eq. 10
+    return M_SL + M_Sg + M_St                                               # Eq. 7
+
+
+def sea_cached_makespan(w: Workload, cl: ClusterSpec) -> float:
+    """Eq. 11:  M_Sc = D_I/L_r + D_m/(c*C_r) + (D_m+D_f)/(c*C_w)
+    — identical lower bound to Lustre's."""
+    return (
+        w.D_I / lustre_read_bw(cl)
+        + w.D_m / (cl.c * cl.C_r)
+        + (w.D_m + w.D_f) / (cl.c * cl.C_w)
+    )
+
+
+# ------------------------------------------------------------------ bounds
+def lustre_bounds(w: Workload, cl: ClusterSpec) -> tuple[float, float]:
+    """(best, worst) = (Eq. 5 page-cache bound, Eq. 1 no-cache bound)."""
+    return lustre_cached_makespan(w, cl), lustre_makespan(w, cl)
+
+
+def sea_bounds(w: Workload, cl: ClusterSpec) -> tuple[float, float]:
+    """(best, worst) = (Eq. 11, Eq. 7)."""
+    return sea_cached_makespan(w, cl), sea_makespan(w, cl)
+
+
+def sea_flush_all_extra(w: Workload, cl: ClusterSpec) -> float:
+    """Copy-all mode: every byte written must ALSO be read back from its
+    cache tier and written to Lustre (the paper's Fig. 3 overhead when no
+    compute masks the flush)."""
+    v = sea_tier_volumes(w, cl)
+    flush_src_read = (
+        v["D_tw"] / (cl.c * cl.C_r) + v["D_gw"] / (cl.g * cl.c * cl.G_r)
+    )
+    flush_write = (v["D_tw"] + v["D_gw"]) / lustre_write_bw(cl)
+    return flush_src_read + flush_write
+
+
+def sea_flush_all_makespan(w: Workload, cl: ClusterSpec) -> float:
+    return sea_makespan(w, cl) + sea_flush_all_extra(w, cl)

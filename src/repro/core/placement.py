@@ -1,0 +1,62 @@
+"""Tier-selection policy (paper §3.1.2).
+
+"Sea will then go through the hierarchy of available storage devices and
+select the fastest storage device with sufficient available space."
+
+Eligibility: a root is eligible if ``free >= n_procs * max_file_size`` —
+Sea cannot predict output sizes, so it reserves worst-case room for every
+concurrent writer ("the number of threads multiplied by the file size does
+not exceed storage space"). Same-level roots are picked by random shuffle:
+no metadata server, no locking — decentralization over optimal packing.
+"""
+
+from __future__ import annotations
+
+import random
+
+from .tiers import Hierarchy, Tier
+
+
+class PlacementPolicy:
+    def __init__(
+        self,
+        hierarchy: Hierarchy,
+        *,
+        max_file_size: int,
+        n_procs: int,
+        rng: random.Random | None = None,
+    ):
+        self.hierarchy = hierarchy
+        self.max_file_size = max_file_size
+        self.n_procs = n_procs
+        self.rng = rng or random.Random()
+
+    @property
+    def required_bytes(self) -> int:
+        return self.max_file_size * self.n_procs
+
+    def eligible_roots(self, tier: Tier) -> list[str]:
+        roots = list(tier.roots)
+        self.rng.shuffle(roots)  # paper: "selected by Sea via a random shuffling"
+        return [r for r in roots if tier.free_bytes(r) >= self.required_bytes]
+
+    def select(self) -> tuple[Tier, str]:
+        """Fastest tier/root with sufficient space; the base tier is the
+        unconditional fallback (there is nowhere slower to go)."""
+        for tier in self.hierarchy.cache_tiers:
+            roots = self.eligible_roots(tier)
+            if roots:
+                return tier, roots[0]
+        base = self.hierarchy.base
+        roots = self.eligible_roots(base)
+        return base, roots[0] if roots else base.roots[0]
+
+    def select_cache_for_prefetch(self, nbytes: int) -> tuple[Tier, str] | None:
+        """Fastest cache root that can hold ``nbytes`` (prefetch staging)."""
+        for tier in self.hierarchy.cache_tiers:
+            roots = list(tier.roots)
+            self.rng.shuffle(roots)
+            for r in roots:
+                if tier.free_bytes(r) >= max(nbytes, self.required_bytes):
+                    return tier, r
+        return None

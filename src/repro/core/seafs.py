@@ -1,0 +1,466 @@
+"""SeaFS — stateless path translation + file operations over the hierarchy.
+
+This is the Python-level equivalent of the paper's glibc wrappers: "The
+wrappers take any input filepath that is located within the user-provided
+Sea mountpoint and convert it to a filepath pointing to the best available
+storage device." Every operation resolves mount-relative keys against the
+tier hierarchy at call time; the file systems themselves are the only state
+(decentralized/stateless, per the paper's design vs. BurstFS/GekkoFS).
+"""
+
+from __future__ import annotations
+
+import io
+import os
+import shutil
+import threading
+import time
+from collections import defaultdict
+
+from .config import SeaConfig
+from .lists import Mode, resolve_mode
+from .placement import PlacementPolicy
+from .telemetry import Stopwatch, Telemetry
+from .tiers import Hierarchy, Tier
+
+_WRITE_CHARS = ("w", "a", "x", "+")
+_STRIPE_MANIFEST_SUFFIX = ".sea_stripe.json"
+
+
+def _is_write_mode(mode: str) -> bool:
+    return any(c in mode for c in _WRITE_CHARS)
+
+
+class _SeaFile:
+    """Proxy around a real file object: forwards everything, and notifies
+    SeaFS on close so the flush-and-evict daemon can pick the file up.
+    Open files are refcounted — the flusher never moves a busy file
+    (beyond-paper fix for the paper's §5.5 known limitation)."""
+
+    def __init__(self, fs: "SeaFS", key: str, raw, tier: Tier, writing: bool):
+        self._fs = fs
+        self._key = key
+        self._raw = raw
+        self._tier = tier
+        self._writing = writing
+        self._t0 = time.perf_counter()
+        self._closed = False
+
+    def __getattr__(self, name):
+        return getattr(self._raw, name)
+
+    def __iter__(self):
+        return iter(self._raw)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        try:
+            try:
+                pos = self._raw.tell()
+            except (OSError, ValueError):
+                pos = 0
+            self._raw.close()
+        finally:
+            dt = time.perf_counter() - self._t0
+            self._fs._on_close(self._key, self._tier, self._writing, pos, dt)
+
+    @property
+    def closed(self):
+        return self._raw.closed
+
+    def __repr__(self):  # pragma: no cover
+        return f"<SeaFile key={self._key!r} tier={self._tier.name}>"
+
+
+class SeaFS:
+    """One Sea instance (one per node, as in the paper)."""
+
+    def __init__(self, config: SeaConfig, *, telemetry: Telemetry | None = None):
+        self.config = config
+        self.hierarchy: Hierarchy = config.build_hierarchy()
+        self.telemetry = telemetry or Telemetry()
+        self.policy = PlacementPolicy(
+            self.hierarchy,
+            max_file_size=config.max_file_size,
+            n_procs=config.n_procs,
+        )
+        self.mount = config.mount
+        os.makedirs(self.mount, exist_ok=True)
+        self._open_counts: dict[str, int] = defaultdict(int)
+        self._lock = threading.RLock()
+        self._key_locks: dict[str, threading.RLock] = {}
+        self._close_listeners: list = []  # flusher subscribes here
+        self._access_clock: dict[str, float] = {}  # LRU bookkeeping (opt-in)
+
+    # -- path plumbing -------------------------------------------------------
+    def is_sea_path(self, path: str) -> bool:
+        ap = os.path.abspath(path)
+        return ap == self.mount or ap.startswith(self.mount + os.sep)
+
+    def key_of(self, path: str) -> str:
+        """Mount-relative key of a path under the mountpoint."""
+        return os.path.relpath(os.path.abspath(path), self.mount)
+
+    def key_lock(self, key: str) -> threading.RLock:
+        with self._lock:
+            lk = self._key_locks.get(key)
+            if lk is None:
+                lk = self._key_locks[key] = threading.RLock()
+            return lk
+
+    def open_count(self, key: str) -> int:
+        with self._lock:
+            return self._open_counts.get(key, 0)
+
+    def add_close_listener(self, fn) -> None:
+        self._close_listeners.append(fn)
+
+    # -- resolution ----------------------------------------------------------
+    def resolve_read(self, key: str) -> tuple[Tier, str] | None:
+        """Locate an existing file, fastest tier first."""
+        with self.key_lock(key):
+            return self.hierarchy.locate(key)
+
+    def resolve_write(self, key: str) -> tuple[Tier, str]:
+        """Pick the destination for a (re)write.
+
+        If the file already exists somewhere, overwrite in place (the
+        hierarchy must never hold two divergent copies); otherwise select
+        the fastest tier with space.
+        """
+        with self.key_lock(key):
+            found = self.hierarchy.locate(key)
+            if found is not None:
+                return found
+            tier, root = self.policy.select()
+            if (
+                self.config.lru_evict
+                and tier is self.hierarchy.base
+                and self.hierarchy.cache_tiers
+            ):
+                freed = self._lru_make_room()
+                if freed:
+                    tier, root = self.policy.select()
+            real = os.path.join(root, key)
+            os.makedirs(os.path.dirname(real), exist_ok=True)
+            return tier, real
+
+    def resolve(self, path: str, mode: str = "r") -> str:
+        """Public path-translation API (for tools that want the real path
+        without going through ``open``)."""
+        if not self.is_sea_path(path):
+            return path
+        key = self.key_of(path)
+        if _is_write_mode(mode):
+            return self.resolve_write(key)[1]
+        found = self.resolve_read(key)
+        if found is not None:
+            return found[1]
+        # Not found anywhere: report the base-tier path so the caller gets
+        # POSIX ENOENT semantics against the persistent location.
+        return os.path.join(self.hierarchy.base.roots[0], key)
+
+    # -- file operations ------------------------------------------------------
+    def open(self, path: str, mode: str = "r", **kw):
+        if not self.is_sea_path(path):
+            self.telemetry.record_redirect(False)
+            return io.open(path, mode, **kw)
+        self.telemetry.record_redirect(True)
+        key = self.key_of(path)
+        writing = _is_write_mode(mode)
+        with self.key_lock(key):
+            if writing:
+                tier, real = self.resolve_write(key)
+            else:
+                found = self.resolve_read(key)
+                if found is None:
+                    # let io.open raise the canonical FileNotFoundError
+                    return io.open(
+                        os.path.join(self.hierarchy.base.roots[0], key), mode, **kw
+                    )
+                tier, real = found
+            raw = io.open(real, mode, **kw)
+            with self._lock:
+                self._open_counts[key] += 1
+                self._access_clock[key] = time.monotonic()
+        return _SeaFile(self, key, raw, tier, writing)
+
+    def _on_close(self, key: str, tier: Tier, writing: bool, nbytes: int, dt: float):
+        with self._lock:
+            self._open_counts[key] -= 1
+            if self._open_counts[key] <= 0:
+                del self._open_counts[key]
+            remaining = self._open_counts.get(key, 0)
+        if writing:
+            self.telemetry.record_io(tier.name, written=max(nbytes, 0), seconds=dt)
+        else:
+            self.telemetry.record_io(tier.name, read=max(nbytes, 0), seconds=dt)
+        if remaining == 0:
+            for fn in self._close_listeners:
+                fn(key, writing)
+
+    # convenience wrappers used by the framework ------------------------------
+    def write_bytes(self, path: str, data: bytes) -> str:
+        if (
+            self.config.stripe_chunk_bytes > 0
+            and len(data) > self.config.stripe_chunk_bytes
+            and self.is_sea_path(path)
+        ):
+            if self._write_striped(path, data):
+                return path
+        with Stopwatch() as sw:
+            with self.open(path, "wb") as f:
+                f.write(data)
+        del sw
+        return path
+
+    def read_bytes(self, path: str) -> bytes:
+        if self.is_sea_path(path) and self.exists(path + _STRIPE_MANIFEST_SUFFIX):
+            return self._read_striped(path)
+        with self.open(path, "rb") as f:
+            return f.read()
+
+    # -- striping (paper §6: 'splitting of individual files, as seen with
+    # the other burst buffer file systems' — implemented as a beyond-paper
+    # extension, opt-in via SeaConfig.stripe_chunk_bytes) ---------------------
+    def _write_striped(self, path: str, data: bytes) -> bool:
+        """Split across the same-level roots of the fastest eligible tier
+        (round-robin); parts parallelize device bandwidth the way BurstFS/
+        GekkoFS stripe. Returns False when no multi-root tier is eligible
+        (caller falls back to whole-file placement)."""
+        import json as _json
+
+        chunk = self.config.stripe_chunk_bytes
+        key = self.key_of(path)
+        n_parts = -(-len(data) // chunk)
+        target = None
+        for tier in self.hierarchy.cache_tiers:
+            roots = self.policy.eligible_roots(tier)
+            if len(roots) >= 2:
+                target = (tier, roots)
+                break
+        if target is None:
+            return False
+        tier, roots = target
+        with self.key_lock(key):
+            for i in range(n_parts):
+                root = roots[i % len(roots)]
+                real = os.path.join(root, f"{key}.sea_stripe.{i:04d}")
+                os.makedirs(os.path.dirname(real), exist_ok=True)
+                with open(real, "wb") as f:
+                    f.write(data[i * chunk:(i + 1) * chunk])
+            manifest = {"n_parts": n_parts, "chunk": chunk, "total": len(data),
+                        "tier": tier.name}
+            with self.open(path + _STRIPE_MANIFEST_SUFFIX, "w") as f:
+                f.write(_json.dumps(manifest))
+        self.telemetry.record_io(tier.name, written=len(data))
+        return True
+
+    def _read_striped(self, path: str) -> bytes:
+        import json as _json
+
+        key = self.key_of(path)
+        with self.open(path + _STRIPE_MANIFEST_SUFFIX) as f:
+            manifest = _json.loads(f.read())
+        parts = []
+        with self.key_lock(key):
+            for i in range(manifest["n_parts"]):
+                pkey = f"{key}.sea_stripe.{i:04d}"
+                located = self.hierarchy.locate(pkey)
+                if located is None:
+                    raise FileNotFoundError(f"missing stripe part {i} of {path}")
+                with open(located[1], "rb") as f:
+                    parts.append(f.read())
+        data = b"".join(parts)
+        if len(data) != manifest["total"]:
+            raise IOError(f"striped read size mismatch for {path}")
+        return data
+
+    # -- metadata ops (the other glibc wrappers) -------------------------------
+    def exists(self, path: str) -> bool:
+        if not self.is_sea_path(path):
+            return os.path.exists(path)
+        return self.hierarchy.locate(self.key_of(path)) is not None or os.path.isdir(
+            self._any_dir(self.key_of(path))
+        )
+
+    def _any_dir(self, key: str) -> str:
+        for tier in self.hierarchy:
+            for root in tier.roots:
+                p = os.path.join(root, key)
+                if os.path.isdir(p):
+                    return p
+        return os.path.join(self.hierarchy.base.roots[0], key)
+
+    def stat(self, path: str):
+        if not self.is_sea_path(path):
+            return os.stat(path)
+        key = self.key_of(path)
+        found = self.hierarchy.locate(key)
+        if found is not None:
+            return os.stat(found[1])
+        return os.stat(self._any_dir(key))  # raises FileNotFoundError if absent
+
+    def getsize(self, path: str) -> int:
+        return self.stat(path).st_size
+
+    def listdir(self, path: str) -> list[str]:
+        """Union of entries across tiers (a directory is virtual: its
+        children may be spread over several devices)."""
+        if not self.is_sea_path(path):
+            return os.listdir(path)
+        key = self.key_of(path)
+        key = "" if key == "." else key
+        seen: set[str] = set()
+        found_dir = False
+        for tier in self.hierarchy:
+            for root in tier.roots:
+                p = os.path.join(root, key) if key else root
+                if os.path.isdir(p):
+                    found_dir = True
+                    seen.update(os.listdir(p))
+        if not found_dir:
+            raise FileNotFoundError(path)
+        return sorted(seen)
+
+    def makedirs(self, path: str, exist_ok: bool = False) -> None:
+        """Directories are created lazily per tier on write; creating them
+        on the base tier gives tools a POSIX-visible directory."""
+        if not self.is_sea_path(path):
+            os.makedirs(path, exist_ok=exist_ok)
+            return
+        key = self.key_of(path)
+        os.makedirs(
+            os.path.join(self.hierarchy.base.roots[0], key), exist_ok=exist_ok
+        )
+
+    def remove(self, path: str) -> None:
+        if not self.is_sea_path(path):
+            os.remove(path)
+            return
+        key = self.key_of(path)
+        with self.key_lock(key):
+            removed = False
+            for tier in self.hierarchy:
+                real = tier.locate(key)
+                if real is not None:
+                    os.remove(real)
+                    removed = True
+            if not removed:
+                raise FileNotFoundError(path)
+
+    def rename(self, src: str, dst: str) -> None:
+        s_in, d_in = self.is_sea_path(src), self.is_sea_path(dst)
+        if not s_in and not d_in:
+            os.replace(src, dst)
+            return
+        if s_in and d_in:
+            skey, dkey = self.key_of(src), self.key_of(dst)
+            with self.key_lock(skey), self.key_lock(dkey):
+                found = self.hierarchy.locate(skey)
+                if found is None:
+                    raise FileNotFoundError(src)
+                tier, real = found
+                # same-tier rename keeps the file on its device (cheap)
+                droot = real[: -len(skey)] if real.endswith(skey) else None
+                if droot is None:
+                    droot = tier.roots[0]
+                dreal = os.path.join(droot, dkey)
+                os.makedirs(os.path.dirname(dreal), exist_ok=True)
+                # drop stale copies of dst on other tiers first
+                for t in self.hierarchy:
+                    old = t.locate(dkey)
+                    if old is not None and os.path.abspath(old) != os.path.abspath(dreal):
+                        os.remove(old)
+                os.replace(real, dreal)
+            return
+        # crossing the mount boundary: copy semantics via resolve
+        rsrc = self.resolve(src, "r")
+        rdst = self.resolve(dst, "w")
+        os.makedirs(os.path.dirname(rdst), exist_ok=True)
+        shutil.copyfile(rsrc, rdst)
+        if s_in:
+            self.remove(src)
+        else:
+            os.remove(src)
+
+    # -- LRU room-making (beyond-paper, opt-in) --------------------------------
+    def _lru_make_room(self) -> bool:
+        """Evict least-recently-used closed files from cache tiers until a
+        cache root becomes eligible again. Only files whose mode is KEEP or
+        REMOVE (i.e. not awaiting flush) are candidates."""
+        candidates: list[tuple[float, str, str]] = []  # (atime, key, real)
+        for tier in self.hierarchy.cache_tiers:
+            for root in tier.roots:
+                for dirpath, _d, files in os.walk(root):
+                    for fn in files:
+                        real = os.path.join(dirpath, fn)
+                        key = os.path.relpath(real, root)
+                        if self.open_count(key):
+                            continue
+                        mode = resolve_mode(
+                            key, self.config.flushlist, self.config.evictlist
+                        )
+                        if mode in (Mode.KEEP, Mode.REMOVE):
+                            at = self._access_clock.get(key, 0.0)
+                            candidates.append((at, key, real))
+        candidates.sort()
+        freed_any = False
+        for _at, key, real in candidates:
+            with self.key_lock(key):
+                if self.open_count(key):
+                    continue
+                try:
+                    nbytes = os.path.getsize(real)
+                    os.remove(real)
+                    self.telemetry.record_evict(nbytes)
+                    freed_any = True
+                except OSError:
+                    continue
+            for tier in self.hierarchy.cache_tiers:
+                if self.policy.eligible_roots(tier):
+                    return True
+        return freed_any
+
+    def persist(self, path: str) -> str:
+        """Ensure a durable copy exists on the base (persistent) tier,
+        keeping any cache copy (explicit COPY — used for input datasets
+        that eviction must never orphan)."""
+        import shutil
+
+        key = self.key_of(path)
+        with self.key_lock(key):
+            located = self.hierarchy.locate(key)
+            if located is None:
+                raise FileNotFoundError(path)
+            tier, real = located
+            base_root = self.hierarchy.base.roots[0]
+            dst = os.path.join(base_root, key)
+            if tier.persistent or os.path.abspath(real) == os.path.abspath(dst):
+                return dst
+            os.makedirs(os.path.dirname(dst), exist_ok=True)
+            tmp = dst + ".sea_tmp"
+            shutil.copyfile(real, tmp)
+            os.replace(tmp, dst)
+            self.telemetry.record_flush(os.path.getsize(dst))
+            return dst
+
+    # -- introspection ----------------------------------------------------------
+    def where(self, path: str) -> str | None:
+        """Tier name currently holding the file (fastest hit), or None."""
+        if not self.is_sea_path(path):
+            return None
+        found = self.hierarchy.locate(self.key_of(path))
+        return found[0].name if found else None
+
+    def wipe(self) -> None:
+        for tier in self.hierarchy:
+            tier.wipe()

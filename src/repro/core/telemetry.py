@@ -1,0 +1,101 @@
+"""Per-tier telemetry counters.
+
+Lightweight, thread-safe counters so benchmarks and the framework can see
+where bytes actually went (tier hit ratios, flush/evict volumes). Purely
+observational — placement never consults telemetry (Sea stays stateless).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+
+@dataclass
+class TierCounters:
+    bytes_written: int = 0
+    bytes_read: int = 0
+    files_written: int = 0
+    files_read: int = 0
+    read_seconds: float = 0.0
+    write_seconds: float = 0.0
+
+
+@dataclass
+class Telemetry:
+    per_tier: dict[str, TierCounters] = field(
+        default_factory=lambda: defaultdict(TierCounters)
+    )
+    flushed_bytes: int = 0
+    flushed_files: int = 0
+    evicted_bytes: int = 0
+    evicted_files: int = 0
+    prefetched_bytes: int = 0
+    redirect_hits: int = 0     # paths under the mount that Sea translated
+    passthrough: int = 0       # paths outside the mount (left untouched)
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def record_io(
+        self, tier: str, *, read: int = 0, written: int = 0, seconds: float = 0.0
+    ) -> None:
+        with self._lock:
+            c = self.per_tier[tier]
+            if read:
+                c.bytes_read += read
+                c.files_read += 1
+                c.read_seconds += seconds
+            if written:
+                c.bytes_written += written
+                c.files_written += 1
+                c.write_seconds += seconds
+
+    def record_flush(self, nbytes: int) -> None:
+        with self._lock:
+            self.flushed_bytes += nbytes
+            self.flushed_files += 1
+
+    def record_evict(self, nbytes: int) -> None:
+        with self._lock:
+            self.evicted_bytes += nbytes
+            self.evicted_files += 1
+
+    def record_prefetch(self, nbytes: int) -> None:
+        with self._lock:
+            self.prefetched_bytes += nbytes
+
+    def record_redirect(self, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self.redirect_hits += 1
+            else:
+                self.passthrough += 1
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "tiers": {
+                    k: vars(v).copy() for k, v in sorted(self.per_tier.items())
+                },
+                "flushed_bytes": self.flushed_bytes,
+                "flushed_files": self.flushed_files,
+                "evicted_bytes": self.evicted_bytes,
+                "evicted_files": self.evicted_files,
+                "prefetched_bytes": self.prefetched_bytes,
+                "redirect_hits": self.redirect_hits,
+                "passthrough": self.passthrough,
+            }
+
+
+class Stopwatch:
+    """Context timer used around raw I/O calls."""
+
+    __slots__ = ("t0", "elapsed")
+
+    def __enter__(self) -> "Stopwatch":
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.elapsed = time.perf_counter() - self.t0

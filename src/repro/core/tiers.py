@@ -1,0 +1,154 @@
+"""Storage-tier abstraction for the Sea data-placement hierarchy.
+
+A *tier* is one level of the user-declared storage hierarchy (paper §3.1:
+"Sea requires the user to specify at least two storage devices, a fast
+temporary device used as cache and a slower long-term storage device").
+Levels are ordered fastest-first; the last tier is the *base* (long-term,
+persistent) tier — the Lustre/PFS analogue. A level may contain several
+*roots* (e.g. 6 local SSDs): Sea selects among same-level roots by random
+shuffle, mirroring the paper's metadata-server-free design.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+from dataclasses import dataclass, field
+
+
+@dataclass
+class TierSpec:
+    """Static description of one storage level.
+
+    Bandwidths are used by the performance model / simulator and by
+    benchmarks; placement itself only needs capacities.
+    """
+
+    name: str
+    roots: tuple[str, ...]
+    read_bw: float = 0.0          # bytes/s, 0 = unknown
+    write_bw: float = 0.0         # bytes/s, 0 = unknown
+    capacity: int | None = None   # per-root byte cap; None = ask the OS
+    persistent: bool = False      # True only for the base (PFS) tier
+
+    def __post_init__(self) -> None:
+        if isinstance(self.roots, str):
+            self.roots = (self.roots,)
+        self.roots = tuple(os.path.abspath(r) for r in self.roots)
+        if not self.roots:
+            raise ValueError(f"tier {self.name!r} needs at least one root")
+
+
+class Tier:
+    """A live tier: spec + capacity probing over its roots."""
+
+    def __init__(self, spec: TierSpec, level: int):
+        self.spec = spec
+        self.level = level
+        for root in spec.roots:
+            os.makedirs(root, exist_ok=True)
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def roots(self) -> tuple[str, ...]:
+        return self.spec.roots
+
+    @property
+    def persistent(self) -> bool:
+        return self.spec.persistent
+
+    # -- capacity ----------------------------------------------------------
+    def used_bytes(self, root: str) -> int:
+        """Bytes used under one root (stateless re-scan, as in the paper:
+        the file system itself is the source of truth)."""
+        total = 0
+        for dirpath, _dirnames, filenames in os.walk(root):
+            for fn in filenames:
+                try:
+                    total += os.path.getsize(os.path.join(dirpath, fn))
+                except OSError:
+                    pass
+        return total
+
+    def free_bytes(self, root: str) -> int:
+        """Free bytes on one root, honouring the configured cap if any.
+
+        The paper: "Sea queries all the available file systems directly to
+        determine the amount of available space."
+        """
+        if self.spec.capacity is not None:
+            return max(self.spec.capacity - self.used_bytes(root), 0)
+        try:
+            st = os.statvfs(root)
+            return st.f_bavail * st.f_frsize
+        except OSError:
+            return 0
+
+    def total_free_bytes(self) -> int:
+        return sum(self.free_bytes(r) for r in self.roots)
+
+    def locate(self, relpath: str) -> str | None:
+        """Return the real path of ``relpath`` if present on this tier."""
+        for root in self.roots:
+            p = os.path.join(root, relpath)
+            if os.path.lexists(p):
+                return p
+        return None
+
+    def wipe(self) -> None:
+        for root in self.roots:
+            if os.path.isdir(root):
+                shutil.rmtree(root, ignore_errors=True)
+            os.makedirs(root, exist_ok=True)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Tier(level={self.level}, name={self.name!r}, roots={self.roots})"
+
+
+@dataclass
+class Hierarchy:
+    """Ordered collection of tiers, fastest (level 0) first."""
+
+    tiers: list[Tier] = field(default_factory=list)
+
+    @classmethod
+    def from_specs(cls, specs: list[TierSpec]) -> "Hierarchy":
+        if len(specs) < 2:
+            raise ValueError(
+                "Sea requires at least two storage devices: a fast cache "
+                "tier and a slower long-term tier (paper §3.1)"
+            )
+        if not specs[-1].persistent:
+            specs[-1].persistent = True  # last tier is the base by definition
+        return cls([Tier(s, i) for i, s in enumerate(specs)])
+
+    @property
+    def base(self) -> Tier:
+        """The long-term (persistent) tier — Lustre/PFS analogue."""
+        return self.tiers[-1]
+
+    @property
+    def cache_tiers(self) -> list[Tier]:
+        """All ephemeral tiers, fastest first."""
+        return self.tiers[:-1]
+
+    def __iter__(self):
+        return iter(self.tiers)
+
+    def __len__(self) -> int:
+        return len(self.tiers)
+
+    def locate(self, relpath: str) -> tuple[Tier, str] | None:
+        """Find a file across the hierarchy, fastest tier first.
+
+        This is the stateless resolution at the heart of Sea: no metadata
+        server — a file's location IS its state on the file systems.
+        """
+        for tier in self.tiers:
+            real = tier.locate(relpath)
+            if real is not None:
+                return tier, real
+        return None

@@ -1,0 +1,214 @@
+"""Input pipeline on top of Sea: sharded token datasets with tiered
+prefetch, consumed-shard eviction, and straggler-tolerant work stealing.
+
+Dataset layout (all paths under the Sea mountpoint, physically on the
+persistent tier until prefetched):
+
+    dataset/<name>/meta.json
+    dataset/<name>/shard_00000.npy     int32 [tokens_per_shard]
+
+The pipeline stages upcoming shards into the fast tier (Sea prefetch),
+yields fixed-shape [B, S] batches double-buffered on the host, and drops
+cache copies once consumed (the in-memory-computing pattern: inputs are
+re-readable from the persistent tier, so cache space is better spent on
+the shards ahead).
+
+Work stealing: shards live in a global deque; each worker claims the next
+shard when idle. A straggler's unprocessed claims return to the queue
+when the StragglerDetector flags it (launcher side), so slow nodes cost
+their own throughput only.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core import Sea
+
+
+# ------------------------------------------------------------------ build
+def write_dataset(
+    sea: Sea,
+    name: str,
+    *,
+    n_shards: int,
+    tokens_per_shard: int,
+    vocab_size: int,
+    seed: int = 0,
+) -> str:
+    """Synthetic corpus: Zipfian tokens with local correlations (enough
+    structure for a CE-loss to visibly decrease)."""
+    rng = np.random.default_rng(seed)
+    root = os.path.join(sea.fs.mount, "dataset", name)
+    ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+    probs = 1.0 / ranks
+    probs /= probs.sum()
+    for i in range(n_shards):
+        toks = rng.choice(vocab_size, size=tokens_per_shard, p=probs).astype(
+            np.int32
+        )
+        # inject learnable bigram structure: every odd position repeats the
+        # previous token with p=0.5
+        repeat = rng.random(tokens_per_shard) < 0.5
+        toks[1::2] = np.where(repeat[1::2], toks[0::2], toks[1::2])
+        shard_path = os.path.join(root, f"shard_{i:05d}.npy")
+        with sea.fs.open(shard_path, "wb") as f:
+            np.save(f, toks, allow_pickle=False)
+        sea.fs.persist(shard_path)   # inputs must survive cache eviction
+    with sea.fs.open(os.path.join(root, "meta.json"), "w") as f:
+        json.dump(
+            {
+                "n_shards": n_shards,
+                "tokens_per_shard": tokens_per_shard,
+                "vocab_size": vocab_size,
+            },
+            f,
+        )
+    sea.fs.persist(os.path.join(root, "meta.json"))
+    return root
+
+
+# ------------------------------------------------------------------ pipeline
+@dataclass
+class PipelineStats:
+    shards_consumed: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    evictions: int = 0
+
+
+class DataPipeline:
+    """Iterator of {tokens, labels} numpy batches with Sea-tiered staging."""
+
+    def __init__(
+        self,
+        sea: Sea,
+        name: str,
+        *,
+        batch_size: int,
+        seq_len: int,
+        prefetch_shards: int = 2,
+        evict_consumed: bool = True,
+        start_shard: int = 0,
+        worker_id: int = 0,
+        n_workers: int = 1,
+    ):
+        self.sea = sea
+        self.fs = sea.fs
+        self.root = os.path.join(sea.fs.mount, "dataset", name)
+        with self.fs.open(os.path.join(self.root, "meta.json")) as f:
+            self.meta = json.load(f)
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.evict_consumed = evict_consumed
+        self.stats = PipelineStats()
+        # work-stealing queue of shard indices (strided start for locality)
+        ids = list(range(start_shard, self.meta["n_shards"]))
+        self._queue: "queue.Queue[int]" = queue.Queue()
+        for sid in ids[worker_id::n_workers] + ids[:0]:
+            self._queue.put(sid)
+        self._staged: "queue.Queue[tuple[int, np.ndarray]]" = queue.Queue(
+            maxsize=prefetch_shards
+        )
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._stage_loop, name="sea-data-prefetch", daemon=True
+        )
+        self._thread.start()
+
+    # -- staging thread: PFS -> cache tier -> host memory --------------------
+    def _shard_path(self, sid: int) -> str:
+        return os.path.join(self.root, f"shard_{sid:05d}.npy")
+
+    def _stage_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                sid = self._queue.get_nowait()
+            except queue.Empty:
+                self._staged.put((-1, None))
+                return
+            try:
+                self._stage_one(sid)
+            except Exception as e:  # surface failures to the consumer
+                self._staged.put((-2, e))
+                return
+
+    def _stage_one(self, sid: int) -> None:
+        path = self._shard_path(sid)
+        key = self.fs.key_of(path)
+        where = self.fs.where(path)
+        if where is not None and where != self.fs.hierarchy.base.name:
+            self.stats.cache_hits += 1
+        else:
+            self.stats.cache_misses += 1
+            # stage into the fastest cache tier with room (prefetch)
+            located = self.fs.hierarchy.locate(key)
+            if located is not None:
+                nbytes = os.path.getsize(located[1])
+                slot = self.fs.policy.select_cache_for_prefetch(nbytes)
+                if slot is not None:
+                    _tier, croot = slot
+                    dst = os.path.join(croot, key)
+                    os.makedirs(os.path.dirname(dst), exist_ok=True)
+                    import shutil
+
+                    shutil.copyfile(located[1], dst + ".sea_tmp")
+                    os.replace(dst + ".sea_tmp", dst)
+                    self.fs.telemetry.record_prefetch(nbytes)
+        with self.fs.open(path, "rb") as f:
+            arr = np.load(f, allow_pickle=False)
+        self._staged.put((sid, arr))
+
+    def _evict(self, sid: int) -> None:
+        """Drop the cache copy of a consumed shard (persistent copy stays)."""
+        key = self.fs.key_of(self._shard_path(sid))
+        with self.fs.key_lock(key):
+            if self.fs.hierarchy.base.locate(key) is None:
+                return  # never orphan the only copy
+            for tier in self.fs.hierarchy.cache_tiers:
+                real = tier.locate(key)
+                if real is not None:
+                    try:
+                        os.remove(real)
+                        self.stats.evictions += 1
+                        self.fs.telemetry.record_evict(0)
+                    except OSError:
+                        pass
+
+    # -- iteration --------------------------------------------------------------
+    def __iter__(self):
+        need = self.batch_size * (self.seq_len + 1)
+        buf = np.empty((0,), np.int32)
+        while True:
+            while buf.size < need:
+                sid, arr = self._staged.get()
+                if sid == -2:
+                    raise RuntimeError("data staging failed") from arr
+                if arr is None:
+                    if buf.size >= need:
+                        break
+                    return
+                buf = np.concatenate([buf, arr])
+                self.stats.shards_consumed += 1
+                if self.evict_consumed:
+                    self._evict(sid)
+            take, buf = buf[:need], buf[need:]
+            chunk = take.reshape(self.batch_size, self.seq_len + 1)
+            yield {
+                "tokens": chunk[:, :-1].copy(),
+                "labels": chunk[:, 1:].copy(),
+            }
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._staged.get_nowait()
+        except queue.Empty:
+            pass

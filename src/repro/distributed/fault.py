@@ -1,0 +1,115 @@
+"""Fault tolerance: heartbeats, straggler detection, restart policy.
+
+On a real multi-pod fleet the JAX runtime surfaces worker failure as a
+distributed-initialization error and the launcher restarts the job from
+the last checkpoint (ephemeral workers, exactly the batch-scheduler
+assumption of the paper's HPC setting — Sea's burst-buffer checkpoints
+make restart cheap). This module implements the *launcher-side* machinery
+so it can be exercised on one host:
+
+    HeartbeatMonitor    per-worker liveness file (mtime-based), through
+                        SeaFS so heartbeats live on the fast tier
+    StragglerDetector   per-step duration tracking; flags workers slower
+                        than median * threshold; the data pipeline then
+                        re-assigns their pending shards (work stealing)
+    RestartPolicy       bounded exponential backoff with a restart budget
+
+Integration test: tests/test_fault_tolerance.py kills a simulated worker
+mid-run and asserts training resumes from the latest checkpoint with
+identical loss trajectory modulo the lost steps.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass, field
+
+
+class HeartbeatMonitor:
+    def __init__(self, root: str, worker_id: int, timeout_s: float = 60.0,
+                 fs=None):
+        self.root = root
+        self.worker_id = worker_id
+        self.timeout_s = timeout_s
+        self.fs = fs
+        self._open = fs.open if fs is not None else open
+        self._exists = (
+            fs.exists if fs is not None else os.path.exists
+        )
+        self._stat = fs.stat if fs is not None else os.stat
+        if fs is None:
+            os.makedirs(root, exist_ok=True)
+
+    def _path(self, wid: int) -> str:
+        return os.path.join(self.root, f"heartbeat_{wid}")
+
+    def beat(self, step: int) -> None:
+        with self._open(self._path(self.worker_id), "w") as f:
+            f.write(f"{step} {time.time()}\n")
+
+    def live_workers(self, expected: list[int]) -> dict[int, bool]:
+        now = time.time()
+        out = {}
+        for wid in expected:
+            p = self._path(wid)
+            try:
+                st = self._stat(p)
+                out[wid] = (now - st.st_mtime) < self.timeout_s
+            except (FileNotFoundError, OSError):
+                out[wid] = False
+        return out
+
+    def dead_workers(self, expected: list[int]) -> list[int]:
+        return [w for w, ok in self.live_workers(expected).items() if not ok]
+
+
+@dataclass
+class StragglerDetector:
+    """Flags workers whose recent step times exceed median * threshold."""
+
+    threshold: float = 1.8
+    window: int = 16
+    _times: dict[int, list[float]] = field(default_factory=dict)
+
+    def record(self, worker_id: int, step_seconds: float) -> None:
+        h = self._times.setdefault(worker_id, [])
+        h.append(step_seconds)
+        if len(h) > self.window:
+            del h[0]
+
+    def medians(self) -> dict[int, float]:
+        out = {}
+        for wid, h in self._times.items():
+            s = sorted(h)
+            out[wid] = s[len(s) // 2]
+        return out
+
+    def stragglers(self) -> list[int]:
+        med = self.medians()
+        if len(med) < 2:
+            return []
+        global_med = sorted(med.values())[len(med) // 2]
+        return [
+            w for w, m in med.items() if m > self.threshold * global_med
+        ]
+
+
+@dataclass
+class RestartPolicy:
+    max_restarts: int = 8
+    backoff_base_s: float = 1.0
+    backoff_cap_s: float = 300.0
+    restarts: int = 0
+
+    def next_delay(self) -> float | None:
+        """None = restart budget exhausted, fail the job."""
+        if self.restarts >= self.max_restarts:
+            return None
+        d = min(self.backoff_base_s * (2 ** self.restarts), self.backoff_cap_s)
+        self.restarts += 1
+        return d
+
+    def reset(self) -> None:
+        """Call after a healthy stretch (e.g. N successful checkpoints)."""
+        self.restarts = 0

@@ -1,0 +1,117 @@
+"""Partitioning: logical spec trees -> physical NamedShardings.
+
+Parameters carry logical PartitionSpec tuples from their init functions
+(FSDP over data, TP over model, EP over experts). This module resolves
+them against a mesh + rule binding, and provides the activation/cache/
+batch shardings for every shape-cell kind.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.distributed.sharding import (
+    DP,
+    EP,
+    FSDP,
+    SP,
+    TP,
+    default_rules,
+    resolve_pspec,
+)
+
+
+def is_spec_leaf(v) -> bool:
+    return isinstance(v, tuple) and all(
+        a is None or isinstance(a, (str, tuple)) for a in v
+    )
+
+
+def tree_to_shardings(mesh: Mesh, rules: dict, spec_tree) -> Any:
+    """Logical spec tree -> NamedSharding tree (same structure)."""
+    return jax.tree.map(
+        lambda sp: NamedSharding(mesh, resolve_pspec(sp, rules)),
+        spec_tree,
+        is_leaf=is_spec_leaf,
+    )
+
+
+# ------------------------------------------------------------------ batches
+def batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Logical specs for one training/prefill batch dict."""
+    dp = DP if cell.global_batch > 1 else None
+    specs: dict[str, tuple] = {"tokens": (dp, None), "labels": (dp, None)}
+    if cfg.frontend_tokens:
+        specs["embeds"] = (dp, None, None)
+    if cfg.encdec is not None:
+        specs["frames"] = (dp, None, None)
+    return specs
+
+
+def decode_arg_specs(cfg: ModelConfig, cell: ShapeCell) -> tuple:
+    """(token, caches, lengths) logical specs for a decode cell.
+
+    Batched decode shards the cache over batch (DP); the long-context
+    cell (batch=1) shards the KV-cache *sequence* dim over the data axis
+    instead (sequence parallelism) — recurrent states shard over TP only.
+    """
+    long_ctx = cell.global_batch == 1
+    dp = None if long_ctx else DP
+    seq_ax = SP if long_ctx else None
+
+    def entry_specs(entry: str) -> dict:
+        mixer, _ffn = entry.split(":")
+        c: dict[str, tuple] = {}
+        if mixer in ("attn", "local", "attnx"):
+            # [B, S, Hk, Dh] (ring buffers for local are small: replicate S)
+            s_ax = seq_ax if mixer != "local" else None
+            c["k"] = (dp, s_ax, None, None)
+            c["v"] = (dp, s_ax, None, None)
+            if mixer == "attnx":
+                c["xk"] = (dp, None, None, None)
+                c["xv"] = (dp, None, None, None)
+        elif mixer == "mamba":
+            c["conv"] = (dp, None, TP)
+            c["h"] = (dp, TP, None)
+        elif mixer == "rwkv":
+            c["x_tm"] = (dp, None)
+            c["S"] = (dp, TP, None, None)
+        if entry.endswith(":rwkv"):
+            c["x_cm"] = (dp, None)
+        return c
+
+    caches: dict[str, Any] = {}
+    if cfg.n_periods > 0:
+        caches["stack"] = {
+            f"pat{pos}": jax.tree.map(
+                lambda sp: (None, *sp), entry_specs(e), is_leaf=is_spec_leaf
+            )
+            for pos, e in enumerate(cfg.pattern)
+        }
+    for i, e in enumerate(cfg.remainder):
+        caches[f"rem{i}"] = entry_specs(e)
+    token = (dp, None)
+    lengths = (dp,)
+    return token, caches, lengths
+
+
+def prefill_out_specs(cfg: ModelConfig, cell: ShapeCell):
+    """(logits, caches, lengths) output specs for prefill cells."""
+    token, caches, lengths = decode_arg_specs(cfg, cell)
+    logits = (DP if cell.global_batch > 1 else None, None)
+    return logits, caches, lengths
+
+
+__all__ = [
+    "tree_to_shardings",
+    "batch_specs",
+    "decode_arg_specs",
+    "prefill_out_specs",
+    "default_rules",
+    "is_spec_leaf",
+]

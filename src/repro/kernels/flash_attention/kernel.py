@@ -1,0 +1,158 @@
+"""Flash attention (GQA, causal, sliding-window) as a Pallas TPU kernel.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the kv dimension is
+sequential ("arbitrary"); the online-softmax statistics (m, l) and the
+output accumulator live in VMEM scratch and persist across kv steps.
+BlockSpecs tile Q/K/V so one program touches
+
+    q:   [block_q,  head_dim]     (VMEM)
+    k,v: [block_k,  head_dim]     (VMEM)
+
+with the GQA head mapping folded into the K/V index_map (q head h reads
+kv head h // group_size). Scores and softmax statistics are fp32; the
+P·V product feeds the MXU in the input dtype with fp32 accumulation.
+
+VMEM budget at the default 512x512 tiles, head_dim 128, bf16:
+q/k/v 128 KiB each + acc 256 KiB + p 1 MiB  « 16 MiB/core.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,        # inputs
+    o_ref,                      # output
+    m_ref, l_ref, acc_ref,      # scratch
+    *,
+    sm_scale: float,
+    causal: bool,
+    window: int | None,
+    block_q: int,
+    block_k: int,
+    seq_q: int,
+    seq_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                                   # [bq, dh]
+    k = k_ref[0, 0]                                   # [bk, dh]
+    v = v_ref[0, 0]
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * sm_scale                                      # [bq, bk]
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = (kpos < seq_k) & (qpos < seq_q)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                            # [bq, bk] fp32
+    corr = jnp.exp(m_prev - m_new)                    # [bq, 1]
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(
+    q: jax.Array,          # [B, H, Sq, Dh]
+    k: jax.Array,          # [B, Hk, Sk, Dh]
+    v: jax.Array,          # [B, Hk, Sk, Dh]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, Sq, Dh = q.shape
+    _, Hk, Sk, _ = k.shape
+    G = H // Hk
+    sm_scale = 1.0 / math.sqrt(Dh)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _flash_kernel,
+        sm_scale=sm_scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        seq_q=Sq,
+        seq_k=Sk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, Dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec(
+                (1, 1, block_k, Dh), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, Dh), lambda b, h, qi, ki, G=G: (b, h // G, ki, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, Dh), lambda b, h, qi, ki: (b, h, qi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, nq * block_q, Dh), q.dtype),
+        scratch_shapes=[
+            vmem_scratch((block_q, 1)),
+            vmem_scratch((block_q, 1)),
+            vmem_scratch((block_q, Dh)),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :Sq, :]
+
+
+def vmem_scratch(shape, dtype=jnp.float32):
+    """VMEM scratch allocation (also honoured by interpret mode)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array,          # [B, H, Sq, Dh]
+    k: jax.Array,          # [B, Hk, Sk, Dh]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+) -> jax.Array:
+    B, H, Sq, Dh = q.shape
+    _, Hk, Sk, _ = k.shape
+    G = H // Hk
+    qf = q.astype(jnp.float32).reshape(B, Hk, G, Sq, Dh)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) / math.sqrt(Dh)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, H, Sq, Dh).astype(q.dtype)

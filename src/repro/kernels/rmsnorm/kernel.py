@@ -1,0 +1,42 @@
+"""Fused RMSNorm(+scale) Pallas kernel: one HBM round-trip per row block,
+fp32 statistics, output in the input dtype."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)            # [blk, D]
+    scale = s_ref[...].astype(jnp.float32)        # [1, D]
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * scale).astype(o_ref.dtype)
+
+
+def rmsnorm_kernel(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+                   block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xr = x.reshape(-1, D)
+    R = xr.shape[0]
+    blk = min(block_rows, R)
+    pad = (-R) % blk
+    if pad:
+        xr = jnp.pad(xr, ((0, pad), (0, 0)))
+    grid = (xr.shape[0] // blk,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, D), lambda i: (i, 0)),
+            pl.BlockSpec((1, D), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xr.shape, x.dtype),
+        interpret=interpret,
+    )(xr, scale.reshape(1, D))
+    return out[:R].reshape(orig_shape)

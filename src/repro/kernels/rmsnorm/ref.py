@@ -1,0 +1,7 @@
+"""Oracle: the model's own rms_norm."""
+
+from repro.models.layers import rms_norm as _rms_norm
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    return _rms_norm(x, scale, eps)

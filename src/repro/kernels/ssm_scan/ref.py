@@ -1,0 +1,30 @@
+"""Naive sequential oracle for the selective scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt, x, Bm, Cm, A, D):
+    """dt,x: [B,T,d_in]; Bm,Cm: [B,T,N]; A: [d_in,N]; D: [d_in]."""
+    B, T, d_in = dt.shape
+    dtf, xf = dt.astype(jnp.float32), x.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af, Df = A.astype(jnp.float32), D.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * Af)           # [B, d_in, N]
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1)    # [B, d_in]
+        return h, y
+
+    h0 = jnp.zeros((B, d_in, Af.shape[-1]), jnp.float32)
+    xs = (
+        dtf.transpose(1, 0, 2), xf.transpose(1, 0, 2),
+        Bf.transpose(1, 0, 2), Cf.transpose(1, 0, 2),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2) + xf * Df
+    return y

@@ -1,0 +1,103 @@
+"""RWKV-6 chunked WKV as a Pallas TPU kernel.
+
+Grid: (batch, heads, chunks) — the chunk dimension is sequential; the
+per-head state S ∈ R^{N×N} persists in VMEM scratch across chunk steps.
+Each program loads one [L, N] chunk of r/k/v/log-decay, computes
+
+    inter-chunk: (r ⊙ e^{Λ_prev}) @ S                 (MXU)
+    intra-chunk: Σ_n r_t k_s e^{Λ_{t-1}−Λ_s} (s<t)    (VPU, bounded exps)
+    diagonal:    (r·(u ⊙ k)) v
+    state:       S ← e^{Λ_L} ⊙ S + (k e^{Λ_L−Λ})ᵀ V   (MXU)
+
+All decay exponentials are of non-positive arguments (Λ is a cumsum of
+log-decays ≤ 0), so fp32 is safe with no clamping. VMEM at L=64, N=64:
+the [L, L, N] intra tensor is 1 MiB; everything else is KiB-scale.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, S_ref, *, L: int, N: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        S_ref[...] = jnp.zeros_like(S_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)          # [L, N]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)          # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)             # [N]
+    S = S_ref[...]                               # [N, N]
+
+    lam = jnp.cumsum(w, axis=0)                  # Λ_t inclusive
+    lam_prev = lam - w                           # Λ_{t-1}
+    lam_end = lam[-1:, :]                        # Λ_L
+
+    r_in = r * jnp.exp(lam_prev)
+    o = jax.lax.dot_general(
+        r_in, S, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                            # [L, N]
+
+    dl = lam_prev[:, None, :] - lam[None, :, :]  # [L, L, N], <= 0 for s < t
+    tri = (
+        jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+        > jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    )
+    att = jnp.sum(
+        jnp.where(tri[:, :, None], jnp.exp(dl), 0.0)
+        * r[:, None, :]
+        * k[None, :, :],
+        axis=-1,
+    )                                            # [L, L]
+    o = o + jax.lax.dot_general(
+        att, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    diag = jnp.sum(r * u[None, :] * k, axis=-1, keepdims=True)
+    o = o + diag * v
+
+    k_out = k * jnp.exp(lam_end - lam)
+    S_ref[...] = jnp.exp(lam_end)[0][:, None] * S + jax.lax.dot_general(
+        k_out, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+def wkv6_kernel(
+    r: jax.Array,        # [B, H, T, N]
+    k: jax.Array,
+    v: jax.Array,
+    w_log: jax.Array,    # [B, H, T, N], log decay <= 0
+    u: jax.Array,        # [H, N]
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, T, N = r.shape
+    L = min(chunk, T)
+    assert T % L == 0, f"T={T} % chunk={L}"
+    nc = T // L
+    grid = (B, H, nc)
+    kern = functools.partial(_wkv6_kernel, L=L, N=N)
+    spec = pl.BlockSpec((1, 1, L, N), lambda b, h, c: (b, h, c, 0))
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            spec, spec, spec, spec,
+            pl.BlockSpec((1, N), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, T, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w_log, u)

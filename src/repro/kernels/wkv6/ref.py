@@ -1,0 +1,29 @@
+"""Naive sequential oracle for WKV6 (the textbook recurrence)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w_log, u):
+    """r,k,v,w_log: [B, H, T, N]; u: [H, N]. fp32 output.
+
+        S_t = diag(e^{w_t}) S_{t-1} + k_t ⊗ v_t
+        o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+    """
+    B, H, T, N = r.shape
+    rf, kf, vf, wf = (a.astype(jnp.float32) for a in (r, k, v, w_log))
+    uf = u.astype(jnp.float32)
+
+    def step(S, inputs):
+        rt, kt, vt, wt = inputs                      # [B, H, N]
+        kv = kt[..., :, None] * vt[..., None, :]     # [B, H, N, N]
+        o = jnp.einsum("bhn,bhnm->bhm", rt, S + uf[None, :, :, None] * kv)
+        S_new = jnp.exp(wt)[..., :, None] * S + kv
+        return S_new, o
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(a.transpose(2, 0, 1, 3) for a in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(step, S0, xs)
+    return outs.transpose(1, 2, 0, 3)                # [B, H, T, N]

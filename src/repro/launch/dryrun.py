@@ -1,0 +1,369 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct inputs — no allocation — and record
+memory/cost/collective analysis for the roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+        --mesh both --out benchmarks/artifacts/dryrun
+
+The two lines above MUST stay the first statements in this module: jax
+locks the device count at first init, and the production meshes need 512
+host placeholder devices.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs.base import (  # noqa: E402
+    SHAPES,
+    ModelConfig,
+    ShapeCell,
+    cell_supported,
+    get_config,
+    list_archs,
+)
+from repro.distributed import partitioning as part  # noqa: E402
+from repro.distributed.sharding import default_rules, logical_axis_rules  # noqa: E402
+from repro.launch import specs as lspecs  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import model_flops, parse_collectives, roofline_terms  # noqa: E402
+from repro.models.transformer import LM  # noqa: E402
+from repro.training.optimizer import AdamWConfig, OptimizerConfig, Schedule  # noqa: E402
+from repro.training.train_step import TrainConfig, make_train_step  # noqa: E402
+
+
+def analysis_twin(cfg: ModelConfig, cell: ShapeCell) -> ModelConfig:
+    """Cost-accounting twin: unrolled layer stack + single-tile attention
+    so XLA cost_analysis and the HLO collective parse count every layer
+    and the full attention quadratic (scan bodies are otherwise counted
+    once — verified 8x undercount on a synthetic probe; see EXPERIMENTS.md
+    §Roofline methodology). memory_analysis still comes from the scanned
+    production lowering."""
+    kw: dict = {"unroll_stack": True}
+    if cfg.attention is not None:
+        import dataclasses
+
+        S = cell.seq_len
+        if cfg.encdec is not None:
+            S = max(S // cfg.encdec.decoder_seq_divisor, 8)
+        kw["attention"] = dataclasses.replace(
+            cfg.attention,
+            q_chunk=max(S, 1),
+            kv_chunk=max(cell.seq_len, 1),
+        )
+    return cfg.replace(**kw)
+
+
+def _train_cfg(cfg: ModelConfig) -> TrainConfig:
+    return TrainConfig(
+        optimizer=OptimizerConfig(
+            kind="adamw",
+            adamw=AdamWConfig(
+                state_dtype=cfg.opt_state_dtype, schedule=Schedule()
+            ),
+        ),
+    )
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def _mem_dict(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    return {k: getattr(ma, k, None) for k in keys}
+
+
+def apply_variant(cfg: ModelConfig, variant: str) -> ModelConfig:
+    """§Perf hillclimb variants (see EXPERIMENTS.md):
+    zero1            params replicated over data, optimizer state sharded
+                     (ZeRO-1) — kills FSDP weight gathers for <=13B models
+    replicated-acts  decode: replicate activations over data, keep the KV
+                     cache batch-sharded — kills per-token weight gathers
+    bf16-scan        Mamba chunk temporaries in bf16 (halves scan HBM)
+    sschunk<L>       Mamba scan chunk length
+    """
+    if variant.startswith("sschunk") and cfg.ssm is not None:
+        import dataclasses
+
+        return cfg.replace(
+            ssm=dataclasses.replace(cfg.ssm, chunk=int(variant[7:]))
+        )
+    if variant == "bf16-scan" and cfg.ssm is not None:
+        import dataclasses
+
+        return cfg.replace(
+            ssm=dataclasses.replace(cfg.ssm, scan_dtype="bfloat16")
+        )
+    if "nokvhint" in variant and cfg.attention is not None:
+        import dataclasses
+
+        cfg = cfg.replace(
+            attention=dataclasses.replace(cfg.attention, kv_replicate_hint=False)
+        )
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             train_override: TrainConfig | None = None,
+             cfg_override: ModelConfig | None = None,
+             variant: str = "") -> dict:
+    """Lower + compile one cell; returns the JSON-able record."""
+    cfg = cfg_override or get_config(arch)
+    if variant:
+        cfg = apply_variant(cfg, variant)
+    cell = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, cell)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = default_rules(multi_pod)
+    if "zero1" in variant:
+        # ZeRO-1: params replicated over the data axis; grads all-reduce;
+        # optimizer state (and its update) stays data-sharded
+        param_rules = dict(rules, fsdp=None)
+    else:
+        param_rules = rules
+    param_specs = lspecs.param_spec_tree(cfg)
+    t0 = time.time()
+
+    if cell.kind == "train":
+        tcfg = train_override or _train_cfg(cfg)
+        init_state, train_step, state_specs = make_train_step(cfg, tcfg)
+        abstract_state = lspecs.abstract_train_state(cfg, init_state)
+        state_spec_tree = state_specs(param_specs)
+        state_sh = part.tree_to_shardings(mesh, rules, state_spec_tree)
+        if "zero1" in variant:
+            state_sh = {
+                "params": part.tree_to_shardings(
+                    mesh, param_rules, state_spec_tree["params"]
+                ),
+                "opt": part.tree_to_shardings(mesh, rules, state_spec_tree["opt"]),
+                "step": part.tree_to_shardings(mesh, rules, state_spec_tree["step"]),
+            }
+        batch_abs = lspecs.train_batch_specs(cfg, cell)
+        batch_sh = part.tree_to_shardings(
+            mesh, rules, part.batch_specs(cfg, cell)
+        )
+        # metrics are replicated scalars
+        _, metrics_abs = jax.eval_shape(train_step, abstract_state, batch_abs)
+        metrics_sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), metrics_abs
+        )
+        with logical_axis_rules(mesh, rules):
+            lowered = jax.jit(
+                train_step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, metrics_sh),
+                donate_argnums=0,
+            ).lower(abstract_state, batch_abs)
+    elif cell.kind == "prefill":
+        tokens_abs, kwargs_abs = lspecs.prefill_arg_shapes(cfg, cell)
+        cache_len = lspecs.decoder_len(cfg, cell)
+
+        def prefill_fn(params, tokens, kwargs):
+            return LM.prefill(
+                params, cfg, tokens, cache_len,
+                embeds=kwargs.get("embeds"), encoder_frames=kwargs.get("frames"),
+            )
+
+        params_abs = jax.eval_shape(
+            lambda k: LM.init(k, cfg)[0], lspecs.sds((2,), "uint32")
+        )
+        params_sh = part.tree_to_shardings(mesh, rules, param_specs)
+        dp_spec = P(rules["dp"]) if cell.global_batch > 1 else P()
+        tok_sh = NamedSharding(mesh, P(*dp_spec, None))
+        kw_sh = {
+            k: NamedSharding(mesh, P(*dp_spec, None, None))
+            for k in kwargs_abs
+        }
+        out_shape = jax.eval_shape(prefill_fn, params_abs, tokens_abs, kwargs_abs)
+        _, cache_specs, _ = part.prefill_out_specs(cfg, cell)
+        cache_sh = part.tree_to_shardings(mesh, rules, cache_specs)
+        logits_sh = NamedSharding(mesh, P(*dp_spec, None))
+        len_sh = NamedSharding(mesh, P(*dp_spec))
+        del out_shape
+        with logical_axis_rules(mesh, rules):
+            lowered = jax.jit(
+                prefill_fn,
+                in_shardings=(params_sh, tok_sh, kw_sh),
+                out_shardings=(logits_sh, cache_sh, len_sh),
+            ).lower(params_abs, tokens_abs, kwargs_abs)
+    else:  # decode
+        token_abs, caches_abs, len_abs = lspecs.decode_arg_shapes(cfg, cell)
+        tok_spec, cache_specs, len_spec = part.decode_arg_specs(cfg, cell)
+        if variant == "cache-seqshard":
+            # KV cache sequence dim over 'model': attention computes
+            # per-shard partial softmax; no whole-cache gather
+            def reshard(sp):
+                if len(sp) >= 4 and sp[-3] is None:   # [.., B, S, Hk, Dh]
+                    return (*sp[:-3], "tp", *sp[-2:])
+                return sp
+
+            cache_specs = jax.tree.map(
+                reshard, cache_specs, is_leaf=part.is_spec_leaf
+            )
+        if variant == "replicated-acts":
+            # activations/token replicated; cache keeps batch over 'data'
+            tok_spec = (None, None)
+            len_spec = (None,)
+            cache_specs = jax.tree.map(
+                lambda sp: tuple("fsdp" if a == "dp" else a for a in sp),
+                cache_specs,
+                is_leaf=part.is_spec_leaf,
+            )
+            rules = dict(rules, dp=None)  # model-internal hints replicate too
+        params_abs = jax.eval_shape(
+            lambda k: LM.init(k, cfg)[0], lspecs.sds((2,), "uint32")
+        )
+        params_sh = part.tree_to_shardings(mesh, rules, param_specs)
+        tok_sh = part.tree_to_shardings(mesh, rules, tok_spec)
+        cache_sh = part.tree_to_shardings(mesh, rules, cache_specs)
+        len_sh = part.tree_to_shardings(mesh, rules, len_spec)
+        logits_sh = NamedSharding(
+            mesh,
+            P(rules["dp"] if cell.global_batch > 1 and variant != "replicated-acts"
+              else None, None),
+        )
+
+        def decode_fn(params, token, caches, lengths):
+            return LM.decode_step(params, cfg, token, caches, lengths)
+
+        with logical_axis_rules(mesh, rules):
+            lowered = jax.jit(
+                decode_fn,
+                in_shardings=(params_sh, tok_sh, cache_sh, len_sh),
+                out_shardings=(logits_sh, cache_sh),
+                donate_argnums=2,
+            ).lower(params_abs, token_abs, caches_abs, len_abs)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = _cost_dict(compiled)
+    mem = _mem_dict(compiled)
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    n_chips = 512 if multi_pod else 256
+    terms = roofline_terms(flops, byts, coll["total_bytes"])
+    mflops = model_flops(cfg, cell)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "status": "ok",
+        "n_chips": n_chips,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": mem,
+        "cost": {k: cost.get(k) for k in ("flops", "bytes accessed",
+                                          "optimal_seconds") if k in cost},
+        "collectives": coll,
+        "roofline": terms.to_dict(),
+        "model_flops_global": mflops,
+        "model_flops_per_chip": mflops / n_chips,
+        "useful_flops_ratio": (mflops / n_chips) / flops if flops else None,
+        "hlo_bytes": len(hlo),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--analysis", action="store_true",
+                    help="unrolled cost-accounting lowering (see §Roofline)")
+    ap.add_argument("--variant", default="", help="hillclimb variant id")
+    args = ap.parse_args()
+
+    archs = list_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    n_ok = n_skip = n_fail = 0
+    for multi_pod in meshes:
+        mesh_name = "multi" if multi_pod else "single"
+        for arch in archs:
+            for shape in shapes:
+                prefix = "analysis__" if args.analysis else ""
+                if args.variant:
+                    prefix += f"variant-{args.variant}__"
+                fname = os.path.join(
+                    args.out, f"{prefix}{mesh_name}__{arch}__{shape}.json"
+                )
+                if args.skip_existing and os.path.exists(fname):
+                    print(f"[skip-existing] {fname}", flush=True)
+                    continue
+                t0 = time.time()
+                try:
+                    cfg_over = None
+                    if args.analysis:
+                        from repro.configs.base import get_config as _gc
+
+                        c = _gc(arch)
+                        cfg_over = analysis_twin(c, SHAPES[shape])
+                    rec = run_cell(arch, shape, multi_pod, cfg_override=cfg_over,
+                                   variant=args.variant)
+                    if args.analysis:
+                        rec["analysis_mode"] = True
+                    if args.variant:
+                        rec["variant"] = args.variant
+                except Exception as e:  # record the failure — it is a bug
+                    rec = {
+                        "arch": arch, "shape": shape, "mesh": mesh_name,
+                        "status": "error", "error": repr(e),
+                        "traceback": traceback.format_exc()[-4000:],
+                    }
+                with open(fname, "w") as f:
+                    json.dump(rec, f, indent=1)
+                dt = time.time() - t0
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "error"
+                extra = ""
+                if st == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dom={r['dominant']} comp={r['compute_s']:.3g}s "
+                             f"mem={r['memory_s']:.3g}s coll={r['collective_s']:.3g}s")
+                elif st == "error":
+                    extra = " " + rec["error"][:120]
+                print(f"[{mesh_name}] {arch} x {shape}: {st} ({dt:.0f}s){extra}",
+                      flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}", flush=True)
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

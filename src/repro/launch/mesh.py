@@ -1,0 +1,41 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module-level constants) so importing this module
+never touches jax device state. The dry-run forces 512 host platform
+devices before any jax import; real deployments get the same topology from
+the TPU runtime.
+
+    single-pod: (16, 16)        axes ("data", "model")    — 256 chips
+    multi-pod:  (2, 16, 16)     axes ("pod", "data", "model") — 512 chips
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, found {len(devices)}; "
+            "the dry-run must set XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before any jax import"
+        )
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_local_mesh(axes=("data", "model")):
+    """1x1 mesh over the single local device (tests/examples)."""
+    import jax
+
+    dev = np.asarray(jax.devices()[:1]).reshape((1,) * len(axes))
+    return jax.sharding.Mesh(dev, axes)

@@ -1,0 +1,142 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), TPU v5e-like constants:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs      (197 TFLOP/s bf16)
+    memory     = HLO_bytes_per_chip / HBM_bw          (819 GB/s)
+    collective = collective_bytes_per_chip / link_bw  (50 GB/s/link ICI)
+
+``cost_analysis()`` on the SPMD executable reports per-partition (per-
+chip) numbers. Collective bytes are parsed from the post-optimization
+HLO: per op we charge the RESULT bytes times an op-specific factor
+(all-reduce 2x for its reduce-scatter+all-gather ring phases; others 1x)
+— a documented, consistent approximation used for both the baseline and
+the hillclimbed variants, so deltas are meaningful.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*([^=]+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+#: bytes-moved multiplier per collective kind
+_OP_WEIGHT = {
+    "all-reduce": 2.0,          # ring: reduce-scatter + all-gather phases
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op-kind {count, bytes(weighted result bytes)} from HLO text."""
+    out: dict[str, dict] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, op, _start = m.group(1), m.group(2), m.group(3)
+        b = shape_bytes(type_str) * _OP_WEIGHT[op]
+        rec = out.setdefault(op, {"count": 0, "bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += b
+    out["total_bytes"] = sum(
+        v["bytes"] for k, v in out.items() if isinstance(v, dict)
+    )
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        """Perfect-overlap bound: the max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-resource roofline this step achieves
+        under perfect overlap (1.0 = the dominant term is the only cost)."""
+        s = self.compute_s + self.memory_s + self.collective_s
+        return self.step_time_lower_bound_s / s if s else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "step_lower_bound_s": self.step_time_lower_bound_s,
+        }
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float) -> RooflineTerms:
+    return RooflineTerms(
+        compute_s=flops_per_chip / PEAK_FLOPS,
+        memory_s=bytes_per_chip / HBM_BW,
+        collective_s=coll_bytes_per_chip / ICI_BW,
+        flops_per_chip=flops_per_chip,
+        bytes_per_chip=bytes_per_chip,
+        coll_bytes_per_chip=coll_bytes_per_chip,
+    )
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic 'useful' FLOPs for the step: 6·N·T (train, fwd+bwd) or
+    2·N_active·T (inference fwd), T = tokens processed globally."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    tokens = cell.global_batch  # one new token per sequence
+    return 2.0 * n * tokens

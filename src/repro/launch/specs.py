@@ -1,0 +1,94 @@
+"""Abstract input construction for every (arch x shape) cell.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every
+model input of that cell's step function — weak-type-correct, shardable,
+and allocation-free. Frontend-stub archs ([vlm]/[audio]) receive
+precomputed patch/frame embeddings as inputs, per the assignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.models.transformer import LM
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Batch dict for train/prefill cells. Sequence budget ``cell.seq_len``
+    is the TOTAL stream length: [vlm] spends ``frontend_tokens`` of it on
+    patch embeddings; [audio] spends it on encoder frames with
+    seq/divisor decoder tokens."""
+    B, S = cell.global_batch, cell.seq_len
+    batch: dict = {}
+    n_text = S
+    if cfg.frontend_tokens:
+        n_text = S - cfg.frontend_tokens
+        batch["embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), "bfloat16")
+    if cfg.encdec is not None:
+        batch["frames"] = sds((B, S, cfg.d_model), "bfloat16")
+        n_text = max(S // cfg.encdec.decoder_seq_divisor, 8)
+    batch["tokens"] = sds((B, n_text), "int32")
+    batch["labels"] = sds((B, n_text), "int32")
+    return batch
+
+
+def decoder_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    if cfg.encdec is not None:
+        return max(cell.seq_len // cfg.encdec.decoder_seq_divisor, 8)
+    return cell.seq_len
+
+
+def decode_arg_shapes(cfg: ModelConfig, cell: ShapeCell):
+    """(token, caches, lengths) ShapeDtypeStructs for decode cells.
+
+    The cache holds ``seq_len`` tokens (decode_* cells are 'one new token
+    against a seq_len cache')."""
+    B = cell.global_batch
+    cache_len = cell.seq_len
+    caches = jax.eval_shape(
+        lambda: LM.init_caches(cfg, B, cache_len, jnp.bfloat16)
+    )
+    token = sds((B, 1), "int32")
+    lengths = sds((B,), "int32")
+    return token, caches, lengths
+
+
+def prefill_arg_shapes(cfg: ModelConfig, cell: ShapeCell):
+    """(tokens [, embeds, frames]) for prefill cells; cache_len = seq_len."""
+    B, S = cell.global_batch, cell.seq_len
+    kwargs: dict = {}
+    n_text = S
+    if cfg.frontend_tokens:
+        n_text = S - cfg.frontend_tokens
+        kwargs["embeds"] = sds((B, cfg.frontend_tokens, cfg.d_model), "bfloat16")
+    if cfg.encdec is not None:
+        kwargs["frames"] = sds((B, S, cfg.d_model), "bfloat16")
+        n_text = decoder_len(cfg, cell)
+    tokens = sds((B, n_text), "int32")
+    return tokens, kwargs
+
+
+def abstract_train_state(cfg: ModelConfig, init_state_fn):
+    """eval_shape the full train state (params + optimizer) — no allocation."""
+    key = sds((2,), "uint32")
+    return jax.eval_shape(init_state_fn, key)
+
+
+def spec_twin(cfg: ModelConfig) -> ModelConfig:
+    """A structurally-identical but tiny config used ONLY to materialize the
+    logical PartitionSpec tree (spec trees depend on structure, not sizes)."""
+    from repro.configs.archs import reduced
+
+    return reduced(cfg).replace(n_layers=cfg.n_layers)
+
+
+def param_spec_tree(cfg: ModelConfig):
+    twin = spec_twin(cfg)
+    _, specs = LM.init(jax.random.PRNGKey(0), twin)
+    return specs

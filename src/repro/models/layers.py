@@ -1,0 +1,146 @@
+"""Core layer primitives: norms, rotary embeddings, GLU MLPs, embeddings.
+
+Every init function returns ``(params, specs)`` where ``specs`` mirrors the
+param tree with *logical* PartitionSpec tuples (see
+``repro.distributed.sharding``): "fsdp" shards over the data axis (ZeRO-3),
+"tp" over the model axis (Megatron TP), "ep" over experts.
+
+Numerics policy: params/activations bf16; RMSNorm statistics, softmax,
+router logits and final logits in fp32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import EP, FSDP, TP  # noqa: F401  (re-export)
+
+Dtype = jnp.dtype
+
+
+def to_dtype(name: str) -> Dtype:
+    return jnp.dtype(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    """Dtype bundle threaded through model construction."""
+
+    param_dtype: Dtype
+    compute_dtype: Dtype
+
+    @classmethod
+    def from_config(cls, cfg) -> "Layout":
+        return cls(to_dtype(cfg.param_dtype), to_dtype(cfg.compute_dtype))
+
+
+# ------------------------------------------------------------------ inits
+def dense_init(key, in_dim: int, out_dim: int, in_axis, out_axis, layout: Layout,
+               scale: float | None = None):
+    """Dense kernel [in, out] with truncated-normal fan-in init."""
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    w = jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim)) * std
+    return w.astype(layout.param_dtype), (in_axis, out_axis)
+
+
+def embed_init(key, vocab: int, dim: int, layout: Layout):
+    # unit-RMS after the sqrt(d_model) embed scaling in the model
+    w = jax.random.normal(key, (vocab, dim)) * (1.0 / math.sqrt(dim))
+    return w.astype(layout.param_dtype), (TP, FSDP)
+
+
+def norm_init(dim: int, layout: Layout):
+    # norm scales stay fp32 — they are tiny and numerically sensitive
+    return jnp.ones((dim,), jnp.float32), (None,)
+
+
+# ------------------------------------------------------------------ norms
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def qk_head_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """RMSNorm over the head dim (qwen3/gemma3-style qk-norm)."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------------ rotary
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: [..., S] (int). Pairwise rotation on
+    the last dim, fp32 trig."""
+    dt = x.dtype
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(ang)[..., :, None, :]                 # [..., S, 1, Dh/2]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(dt)
+
+
+# ------------------------------------------------------------------ acts
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "relu": jax.nn.relu,
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ------------------------------------------------------------------ MLP
+def mlp_init(key, d_model: int, d_ff: int, layout: Layout):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["wi"], s["wi"] = dense_init(k1, d_model, d_ff, FSDP, TP, layout)
+    p["wg"], s["wg"] = dense_init(k2, d_model, d_ff, FSDP, TP, layout)
+    p["wo"], s["wo"] = dense_init(k3, d_ff, d_model, TP, FSDP, layout)
+    return p, s
+
+
+def mlp_apply(p, x: jax.Array, act_name: str) -> jax.Array:
+    """SwiGLU/GeGLU MLP."""
+    act = activation(act_name)
+    h = act(x @ p["wg"]) * (x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------------ embed/logits
+def unembed_logits(x: jax.Array, table: jax.Array) -> jax.Array:
+    """fp32 logits; `table` may be the (tied) embedding [V, D] or an
+    untied head stored as [D, V]."""
+    if table.shape[0] == x.shape[-1]:
+        return jnp.einsum("...d,dv->...v", x, table, preferred_element_type=jnp.float32)
+    return jnp.einsum("...d,vd->...v", x, table, preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array | None = None):
+    """Mean CE over unmasked tokens, fp32. Returns (loss, n_tokens)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll), nll.size
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom, denom

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts FFN: top-k routing + grouped capacity dispatch.
+
+Dispatch strategy (TPU/SPMD-adapted GShard): tokens are routed *within
+their batch row* (group = batch element, which is data-parallel-sharded),
+so slot assignment (a cumulative sum) never crosses shards. Each group
+scatters its tokens into a per-expert capacity buffer [B, E, C, D]; the
+expert einsum contracts it against the expert stacks (E shards over the
+model axis → XLA emits the canonical MoE all-to-all), and outputs gather
+back into token order locally. The [T, E, C] one-hot einsum of the
+original GShard formulation — O(T·E·C) memory, prohibitive at our token
+counts — is avoided entirely.
+
+Router logits are fp32; a Switch-style load-balance auxiliary loss is
+returned. Padding experts (qwen2's 60 -> 64 for EP divisibility) carry
+zero traffic via -inf router logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.distributed.sharding import DP, EP, FSDP, shard_hint
+from repro.models.layers import Layout, activation, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg: MoEConfig, d_model: int, layout: Layout):
+    E = cfg.num_experts + cfg.padded_experts
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["router"], s["router"] = dense_init(ks[0], d_model, E, FSDP, None, layout)
+
+    def expert_stack(k, shape, in_dim):
+        w = (
+            jax.random.truncated_normal(k, -2.0, 2.0, shape)
+            * (1.0 / jnp.sqrt(in_dim))
+        ).astype(layout.param_dtype)
+        return w
+
+    F = cfg.d_ff_expert
+    p["w_in"] = expert_stack(ks[1], (E, d_model, F), d_model)
+    s["w_in"] = (EP, FSDP, None)
+    p["w_gate"] = expert_stack(ks[2], (E, d_model, F), d_model)
+    s["w_gate"] = (EP, FSDP, None)
+    p["w_out"] = expert_stack(ks[3], (E, F, d_model), F)
+    s["w_out"] = (EP, None, FSDP)
+    if cfg.d_ff_shared:
+        p["shared"], s["shared"] = mlp_init(ks[4], d_model, cfg.d_ff_shared, layout)
+        p["shared_gate"], s["shared_gate"] = dense_init(
+            ks[5], d_model, 1, FSDP, None, layout
+        )
+    return p, s
+
+
+def capacity_per_group(cfg: MoEConfig, group_tokens: int) -> int:
+    """Per-group expert capacity, MXU-aligned, never above group_tokens*k."""
+    raw = int(group_tokens * cfg.top_k * cfg.capacity_factor) // max(
+        cfg.num_experts, 1
+    )
+    cap = max(8, -(-max(raw, 1) // 8) * 8)
+    return min(cap, group_tokens * cfg.top_k)
+
+
+def moe_apply(p, cfg: MoEConfig, x: jax.Array, act_name: str):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E = cfg.num_experts + cfg.padded_experts
+    k = cfg.top_k
+    C = capacity_per_group(cfg, S)
+
+    # ---- router (fp32) -----------------------------------------------------
+    logits = jnp.einsum(
+        "bsd,de->bse", x, p["router"], preferred_element_type=jnp.float32
+    )
+    if cfg.padded_experts:
+        pad_mask = jnp.arange(E) >= cfg.num_experts
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)           # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- Switch-style load-balance auxiliary loss ---------------------------
+    me = jnp.mean(probs, axis=(0, 1))                          # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    )
+    aux = jnp.sum(me * ce) * (cfg.num_experts / max(k, 1))
+
+    # ---- group-local slot assignment (cumsum along S only) -------------------
+    flat_eid = expert_ids.reshape(B, S * k)                    # [B, Sk]
+    flat_gate = gate_vals.reshape(B, S * k)
+    onehot = jax.nn.one_hot(flat_eid, E, dtype=jnp.int32)      # [B, Sk, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot                  # exclusive
+    slot = jnp.take_along_axis(pos, flat_eid[..., None], axis=2)[..., 0]
+    keep = slot < C
+    safe_slot = jnp.where(keep, slot, C - 1)
+    tok_idx = jnp.repeat(jnp.arange(S), k)[None, :].repeat(B, axis=0)
+
+    # ---- dispatch into [B, E, C, D] -------------------------------------------
+    contrib = jnp.where(keep[..., None], jnp.take_along_axis(
+        x, tok_idx[..., None], axis=1
+    ), 0).astype(x.dtype)                                      # [B, Sk, D]
+    buf = jnp.zeros((B, E, C, D), x.dtype)
+    bidx = jnp.arange(B)[:, None].repeat(S * k, axis=1)
+    buf = buf.at[bidx, flat_eid, safe_slot].add(contrib, mode="drop")
+    buf = shard_hint(buf, DP, EP, None, None)
+
+    # ---- expert computation (batched einsum over E; EP all-to-all) ------------
+    act = activation(act_name)
+    h = act(jnp.einsum("becd,edf->becf", buf, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", buf, p["w_in"]
+    )
+    eo = jnp.einsum("becf,efd->becd", h, p["w_out"])
+    eo = shard_hint(eo, DP, EP, None, None)
+
+    # ---- combine: gather each assignment's expert output ----------------------
+    gathered = eo[bidx, flat_eid, safe_slot]                   # [B, Sk, D]
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    weighted = gathered.astype(jnp.float32) * flat_gate[..., None]
+    out = jnp.zeros((B, S, D), jnp.float32)
+    out = out.at[bidx, tok_idx].add(weighted)
+
+    # ---- shared experts (qwen2-style, sigmoid-gated) ---------------------------
+    if cfg.d_ff_shared:
+        gate = jax.nn.sigmoid(
+            jnp.einsum(
+                "bsd,dz->bsz", x, p["shared_gate"],
+                preferred_element_type=jnp.float32,
+            )
+        )
+        shared = mlp_apply(p["shared"], x, act_name).astype(jnp.float32)
+        out = out + gate * shared
+
+    out = out.astype(x.dtype)
+    return shard_hint(out, DP, None, None), aux

@@ -1,0 +1,236 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention (WKV6) with
+token-shift dd-lerp, plus the RWKV channel-mix FFN.
+
+TPU adaptation (DESIGN.md §2): the reference CUDA kernel walks the
+recurrence elementwise; here the sequence is processed in chunks of
+``L`` steps so the intra-chunk work becomes matmuls (MXU) while the state
+is carried across chunks by a ``lax.scan``. All decay exponentials are
+exponentials of *non-positive* log-decay differences (Λ is monotonically
+decreasing), so the chunked form is numerically safe in fp32 without the
+clamping tricks CUDA implementations need.
+
+    state S ∈ R^{N×N} per head;  per step t:
+        S_t = diag(w_t) S_{t-1} + k_t ⊗ v_t
+        o_t = r_t · (S_{t-1} + diag(u) k_t ⊗ v_t)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RWKVConfig
+from repro.distributed.sharding import DP, FSDP, TP, shard_hint
+from repro.models.layers import Layout, dense_init
+
+
+# ------------------------------------------------------------------ chunked WKV
+def wkv6_chunked(r, k, v, w_log, u, *, chunk: int, return_state: bool = False):
+    """r,k,v: [B, T, H, N]; w_log: [B, T, H, N] (log decay, <= 0);
+    u: [H, N]. Returns o: [B, T, H, N] (fp32), and the final state when
+    ``return_state``."""
+    B, T, H, N = r.shape
+    L = min(chunk, T)
+    assert T % L == 0, f"T={T} must be divisible by chunk={L}"
+    nc = T // L
+
+    rf = r.astype(jnp.float32).reshape(B, nc, L, H, N).transpose(1, 0, 3, 2, 4)
+    kf = k.astype(jnp.float32).reshape(B, nc, L, H, N).transpose(1, 0, 3, 2, 4)
+    vf = v.astype(jnp.float32).reshape(B, nc, L, H, N).transpose(1, 0, 3, 2, 4)
+    wf = w_log.astype(jnp.float32).reshape(B, nc, L, H, N).transpose(1, 0, 3, 2, 4)
+    # shapes now [nc, B, H, L, N]
+    uf = u.astype(jnp.float32)
+
+    def chunk_body(S, inputs):
+        rc, kc, vc, wc = inputs                    # [B, H, L, N]
+        lam = jnp.cumsum(wc, axis=2)               # Λ_t (inclusive), <= 0
+        lam_prev = lam - wc                        # Λ_{t-1} (exclusive)
+        lam_end = lam[:, :, -1:, :]                # Λ_L
+        # inter-chunk: o_t += (r_t ⊙ e^{Λ_{t-1}}) @ S
+        r_in = rc * jnp.exp(lam_prev)
+        o = jnp.einsum("bhln,bhnm->bhlm", r_in, S)
+        # intra-chunk (s < t):  A_ts = Σ_n r_tn k_sn e^{Λ_{t-1,n} − Λ_{s,n}}
+        dl = lam_prev[:, :, :, None, :] - lam[:, :, None, :, :]   # [B,H,L,L,N]
+        causal = jnp.tril(jnp.ones((L, L), bool), k=-1)[None, None, :, :, None]
+        att = jnp.sum(
+            jnp.where(causal, jnp.exp(dl), 0.0)
+            * rc[:, :, :, None, :]
+            * kc[:, :, None, :, :],
+            axis=-1,
+        )                                           # [B, H, L, L]
+        o = o + jnp.einsum("bhts,bhsn->bhtn", att, vc)
+        # diagonal bonus: r_t · (u ⊙ k_t) v_t
+        diag = jnp.sum(rc * uf[None, :, None, :] * kc, axis=-1, keepdims=True)
+        o = o + diag * vc
+        # state update: S' = e^{Λ_L} ⊙_rows S + Σ_s (k_s e^{Λ_L − Λ_s}) ⊗ v_s
+        k_out = kc * jnp.exp(lam_end - lam)
+        S_new = jnp.exp(lam_end)[:, :, 0, :, None] * S + jnp.einsum(
+            "bhln,bhlm->bhnm", k_out, vc
+        )
+        return S_new, o
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    S_fin, outs = jax.lax.scan(chunk_body, S0, (rf, kf, vf, wf))
+    # outs: [nc, B, H, L, N] -> [B, T, H, N]
+    o = outs.transpose(1, 0, 3, 2, 4).reshape(B, T, H, N)
+    return (o, S_fin) if return_state else o
+
+
+def wkv6_step(S, r, k, v, w_log, u):
+    """One decode step. S: [B,H,N,N]; r,k,v,w_log: [B,H,N]."""
+    Sf = S.astype(jnp.float32)
+    rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+    kv = kf[..., :, None] * vf[..., None, :]             # [B,H,N,N]
+    o = jnp.einsum(
+        "bhn,bhnm->bhm", rf, Sf + u.astype(jnp.float32)[None, :, :, None] * kv
+    )
+    S_new = jnp.exp(w_log.astype(jnp.float32))[..., :, None] * Sf + kv
+    return S_new, o
+
+
+# ------------------------------------------------------------------ module
+def rwkv_block_init(key, cfg: RWKVConfig, d_model: int, layout: Layout):
+    D = d_model
+    H = D // cfg.head_size
+    ks = jax.random.split(key, 10)
+    p, s = {}, {}
+    # token-shift dd-lerp
+    p["maa_x"] = jnp.zeros((D,), layout.param_dtype); s["maa_x"] = (None,)
+    p["maa_5"] = jnp.zeros((5, D), layout.param_dtype); s["maa_5"] = (None, None)
+    p["maa_w1"], s["maa_w1"] = dense_init(
+        ks[0], D, 5 * cfg.token_shift_lora, FSDP, None, layout
+    )
+    p["maa_w2"] = (
+        jax.random.normal(ks[1], (5, cfg.token_shift_lora, D)) * 0.01
+    ).astype(layout.param_dtype)
+    s["maa_w2"] = (None, None, TP)
+    # decay
+    p["decay_base"] = jnp.full((D,), -6.0, jnp.float32); s["decay_base"] = (None,)
+    p["decay_w1"], s["decay_w1"] = dense_init(ks[2], D, cfg.decay_lora, FSDP, None, layout)
+    p["decay_w2"], s["decay_w2"] = dense_init(ks[3], cfg.decay_lora, D, None, TP, layout)
+    # bonus
+    p["u"] = jnp.zeros((H, cfg.head_size), jnp.float32); s["u"] = (TP, None)
+    # projections
+    p["wr"], s["wr"] = dense_init(ks[4], D, D, FSDP, TP, layout)
+    p["wk"], s["wk"] = dense_init(ks[5], D, D, FSDP, TP, layout)
+    p["wv"], s["wv"] = dense_init(ks[6], D, D, FSDP, TP, layout)
+    p["wg"], s["wg"] = dense_init(ks[7], D, D, FSDP, TP, layout)
+    p["wo"], s["wo"] = dense_init(ks[8], D, D, TP, FSDP, layout)
+    # per-head group norm
+    p["ln_x_scale"] = jnp.ones((D,), jnp.float32); s["ln_x_scale"] = (None,)
+    p["ln_x_bias"] = jnp.zeros((D,), jnp.float32); s["ln_x_bias"] = (None,)
+    return p, s
+
+
+def _token_shift(x, x_prev):
+    """Shift sequence right by one; position 0 receives x_prev (decode carry
+    or zeros)."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+    return shifted
+
+
+def _ddlerp(p, x, shifted):
+    """RWKV6 data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    dx = shifted - x
+    xx = x + dx * p["maa_x"]
+    # low-rank adjustments, one per mixed stream (w,k,v,r,g)
+    a = jnp.tanh(xx @ p["maa_w1"])
+    a = a.reshape(*a.shape[:-1], 5, -1)
+    parts = []
+    for i in range(5):
+        ai = a[..., i, :]
+        adj_i = ai @ p["maa_w2"][i]
+        parts.append(x + dx * (p["maa_5"][i] + adj_i))
+    return parts  # [xw, xk, xv, xr, xg]
+
+
+def _project(p, cfg: RWKVConfig, x, shifted, head_size):
+    B, T, D = x.shape
+    H = D // head_size
+    xw, xk, xv, xr, xg = _ddlerp(p, x, shifted)
+    # decay (fp32, <= 0 after -exp)
+    w_raw = p["decay_base"].astype(jnp.float32) + (
+        jnp.tanh(xw @ p["decay_w1"]) @ p["decay_w2"]
+    ).astype(jnp.float32)
+    w_log = -jnp.exp(w_raw)                                   # log decay <= 0
+    r = (xr @ p["wr"]).reshape(B, T, H, head_size)
+    k = (xk @ p["wk"]).reshape(B, T, H, head_size)
+    v = (xv @ p["wv"]).reshape(B, T, H, head_size)
+    g = jax.nn.silu(xg @ p["wg"])
+    return r, k, v, w_log.reshape(B, T, H, head_size), g
+
+
+def _group_norm(p, o, eps=64e-5):
+    """Per-head LayerNorm (RWKV's GroupNorm(H))."""
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    yn = (o - mean) * jax.lax.rsqrt(var + eps)
+    B, T, H, N = o.shape
+    y = yn.reshape(B, T, H * N)
+    return y * p["ln_x_scale"] + p["ln_x_bias"]
+
+
+def rwkv_block_apply(p, cfg: RWKVConfig, x: jax.Array) -> jax.Array:
+    """Training/prefill time-mix. x: [B, T, D]."""
+    B, T, D = x.shape
+    shifted = _token_shift(x, jnp.zeros((B, D), x.dtype))
+    r, k, v, w_log, g = _project(p, cfg, x, shifted, cfg.head_size)
+    o = wkv6_chunked(r, k, v, w_log, p["u"], chunk=cfg.chunk)
+    y = _group_norm(p, o).astype(x.dtype)
+    y = shard_hint(y * g, DP, None, TP)
+    return y @ p["wo"]
+
+
+def rwkv_block_prefill(p, cfg: RWKVConfig, x: jax.Array):
+    """Like apply, but also returns (x_last, S_final) for decode."""
+    B, T, D = x.shape
+    shifted = _token_shift(x, jnp.zeros((B, D), x.dtype))
+    r, k, v, w_log, g = _project(p, cfg, x, shifted, cfg.head_size)
+    o, S_fin = wkv6_chunked(r, k, v, w_log, p["u"], chunk=cfg.chunk,
+                            return_state=True)
+    y = _group_norm(p, o).astype(x.dtype)
+    y = shard_hint(y * g, DP, None, TP)
+    return y @ p["wo"], (x[:, -1, :], S_fin)
+
+
+def rwkv_block_decode(p, cfg: RWKVConfig, x, state):
+    """x: [B, 1, D]; state = (x_prev [B,D], S [B,H,N,N])."""
+    B, _, D = x.shape
+    x_prev, S = state
+    shifted = x_prev[:, None, :]
+    r, k, v, w_log, g = _project(p, cfg, x, shifted, cfg.head_size)
+    S_new, o = wkv6_step(
+        S, r[:, 0], k[:, 0], v[:, 0], w_log[:, 0], p["u"]
+    )
+    y = _group_norm(p, o[:, None, :, :]).astype(x.dtype)
+    y = y * g
+    return y @ p["wo"], (x[:, 0, :], S_new)
+
+
+# ------------------------------------------------------------------ channel mix
+def rwkv_ffn_init(key, d_model: int, d_ff: int, layout: Layout):
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    p["maa_k"] = jnp.zeros((d_model,), layout.param_dtype); s["maa_k"] = (None,)
+    p["maa_r"] = jnp.zeros((d_model,), layout.param_dtype); s["maa_r"] = (None,)
+    p["wk"], s["wk"] = dense_init(ks[0], d_model, d_ff, FSDP, TP, layout)
+    p["wv"], s["wv"] = dense_init(ks[1], d_ff, d_model, TP, FSDP, layout)
+    p["wr"], s["wr"] = dense_init(ks[2], d_model, d_model, FSDP, None, layout)
+    return p, s
+
+
+def rwkv_ffn_apply(p, x: jax.Array, x_prev: jax.Array | None = None):
+    B = x.shape[0]
+    if x_prev is None:
+        x_prev = jnp.zeros((B, x.shape[-1]), x.dtype)
+    shifted = _token_shift(x, x_prev)
+    dx = shifted - x
+    xk = x + dx * p["maa_k"]
+    xr = x + dx * p["maa_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (kk @ p["wv"])
+
+
+def rwkv_ffn_decode(p, x, x_prev):
+    out = rwkv_ffn_apply(p, x, x_prev)
+    return out, x[:, 0, :]

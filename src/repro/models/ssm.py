@@ -1,0 +1,152 @@
+"""Mamba-1 selective SSM mixer (the Jamba 'mamba' sublayer).
+
+TPU adaptation: the CUDA selective-scan walks time sequentially per
+channel; here time is processed in chunks under ``lax.scan`` with a
+parallel ``associative_scan`` inside each chunk, so the O(T) dependency
+becomes O(T/L) sequential steps of MXU/VPU-friendly batched work. The
+[T, d_inner, N] state expansion only ever materializes one chunk at a
+time (d_inner shards over the model axis).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.distributed.sharding import DP, FSDP, TP, shard_hint
+from repro.models.layers import Layout, dense_init, rms_norm
+
+
+def ssm_init(key, cfg: SSMConfig, d_model: int, layout: Layout):
+    d_in = cfg.expand * d_model
+    dtr = cfg.dt_rank or math.ceil(d_model / 16)
+    N = cfg.d_state
+    ks = jax.random.split(key, 6)
+    p, s = {}, {}
+    p["in_proj"], s["in_proj"] = dense_init(ks[0], d_model, 2 * d_in, FSDP, TP, layout)
+    p["conv_w"] = (
+        jax.random.normal(ks[1], (cfg.d_conv, d_in)) / math.sqrt(cfg.d_conv)
+    ).astype(layout.param_dtype)
+    s["conv_w"] = (None, TP)
+    p["conv_b"] = jnp.zeros((d_in,), layout.param_dtype); s["conv_b"] = (TP,)
+    p["x_proj"], s["x_proj"] = dense_init(ks[2], d_in, dtr + 2 * N, TP, None, layout)
+    p["dt_proj"], s["dt_proj"] = dense_init(ks[3], dtr, d_in, None, TP, layout)
+    dt_init = jnp.exp(
+        jax.random.uniform(ks[4], (d_in,)) * (math.log(0.1) - math.log(0.001))
+        + math.log(0.001)
+    )
+    p["dt_bias"] = (dt_init + jnp.log(-jnp.expm1(-dt_init))).astype(jnp.float32)
+    s["dt_bias"] = (TP,)
+    p["A_log"] = jnp.log(
+        jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (d_in, 1))
+    )
+    s["A_log"] = (TP, None)
+    p["D"] = jnp.ones((d_in,), jnp.float32); s["D"] = (TP,)
+    p["out_proj"], s["out_proj"] = dense_init(ks[5], d_in, d_model, TP, FSDP, layout)
+    # Jamba normalizes dt/B/C (b_c_dt_rms)
+    p["dt_norm"] = jnp.ones((dtr,), jnp.float32); s["dt_norm"] = (None,)
+    p["b_norm"] = jnp.ones((N,), jnp.float32); s["b_norm"] = (None,)
+    p["c_norm"] = jnp.ones((N,), jnp.float32); s["c_norm"] = (None,)
+    return p, s
+
+
+def _dt_b_c(p, cfg: SSMConfig, xc, eps=1e-5):
+    """xc: [..., d_in] (post-conv). Returns dt [..., d_in], B,C [..., N]."""
+    N = cfg.d_state
+    dbl = xc @ p["x_proj"]
+    dtr = dbl.shape[-1] - 2 * N
+    dt_low, Bm, Cm = dbl[..., :dtr], dbl[..., dtr:dtr + N], dbl[..., dtr + N:]
+    dt_low = rms_norm(dt_low, p["dt_norm"], eps)
+    Bm = rms_norm(Bm, p["b_norm"], eps).astype(jnp.float32)
+    Cm = rms_norm(Cm, p["c_norm"], eps).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_low @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )
+    return dt, Bm, Cm
+
+
+def _causal_conv(p, cfg: SSMConfig, x, conv_state=None):
+    """Depthwise causal conv along T. x: [B, T, d_in]."""
+    K = cfg.d_conv
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :] * p["conv_w"][i]
+    out = out + p["conv_b"]
+    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    return jax.nn.silu(out), new_state
+
+
+def ssm_apply(p, cfg: SSMConfig, x: jax.Array, return_state: bool = False):
+    """Training/prefill. x: [B, T, D]. With ``return_state`` also returns
+    (conv_state, h_final) for decode."""
+    B, T, D = x.shape
+    N = cfg.d_state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = shard_hint(xin, DP, None, TP)
+    xc, _ = _causal_conv(p, cfg, xin)
+    conv_tail = xin[:, -(cfg.d_conv - 1):, :] if cfg.d_conv > 1 else None
+    dt, Bm, Cm = _dt_b_c(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])                                   # [d_in, N]
+
+    L = min(cfg.chunk, T)
+    assert T % L == 0, f"T={T} % chunk={L} != 0"
+    nc = T // L
+    sdt = jnp.dtype(cfg.scan_dtype)
+    xcf = xc.astype(sdt)
+
+    def seg(a):
+        return a.reshape(B, nc, L, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+
+    dt_c, B_c, C_c, x_c = seg(dt.astype(sdt)), seg(Bm), seg(Cm), seg(xcf)
+
+    def chunk_body(h, inputs):
+        dtc, Bc, Cc, xc_ = inputs                    # [B, L, ...]
+        da = jnp.exp(dtc[..., :, None] * A).astype(sdt)   # [B, L, d_in, N]
+        dbx = ((dtc * xc_)[..., :, None] * Bc[..., None, :]).astype(sdt)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        da_s, dbx_s = jax.lax.associative_scan(comb, (da, dbx), axis=1)
+        hs = da_s * h[:, None].astype(sdt) + dbx_s   # [B, L, d_in, N]
+        y = jnp.einsum("blcn,bln->blc", hs, Cc.astype(sdt),
+                       preferred_element_type=jnp.float32)
+        return hs[:, -1].astype(sdt), y
+
+    h0 = jnp.zeros((B, xc.shape[-1], N), sdt)
+    h_fin, ys = jax.lax.scan(chunk_body, h0, (dt_c, B_c, C_c, x_c))
+    y = ys.transpose(1, 0, 2, 3).reshape(B, T, -1)
+    y = y + xcf.astype(jnp.float32) * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = shard_hint(y, DP, None, TP)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, (conv_tail, h_fin)
+    return out
+
+
+def ssm_decode(p, cfg: SSMConfig, x, state):
+    """x: [B, 1, D]; state = (conv_state [B, K-1, d_in], h [B, d_in, N])."""
+    conv_state, h = state
+    xz = x @ p["in_proj"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc, new_conv = _causal_conv(p, cfg, xin, conv_state)
+    dt, Bm, Cm = _dt_b_c(p, cfg, xc)
+    A = -jnp.exp(p["A_log"])
+    dt0, B0, C0, x0 = dt[:, 0], Bm[:, 0], Cm[:, 0], xc[:, 0].astype(jnp.float32)
+    da = jnp.exp(dt0[..., None] * A)                           # [B, d_in, N]
+    h_new = da * h + (dt0 * x0)[..., None] * B0[:, None, :]
+    y = jnp.einsum("bcn,bn->bc", h_new, C0) + x0 * p["D"]
+    y = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"], (new_conv, h_new)

@@ -1,0 +1,218 @@
+"""Native optimizers (no optax): AdamW with configurable state dtype,
+Adafactor (factored second moment) for the 100B+ models, LR schedules,
+global-norm clipping, and optional gradient compression hooks.
+
+Optimizer state shards exactly like the parameters (same PartitionSpecs),
+which is what makes ZeRO-3-style FSDP work under pjit: XLA keeps m/v
+distributed and the update is fully local.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------------ schedules
+@dataclass(frozen=True)
+class Schedule:
+    base_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    kind: str = "cosine"            # cosine | linear | constant
+
+    def __call__(self, step: jax.Array) -> jax.Array:
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(self.warmup_steps, 1), 1.0)
+        if self.kind == "constant":
+            frac = jnp.ones(())
+        else:
+            t = jnp.clip(
+                (step - self.warmup_steps)
+                / jnp.maximum(self.decay_steps - self.warmup_steps, 1),
+                0.0,
+                1.0,
+            )
+            if self.kind == "cosine":
+                frac = 0.5 * (1 + jnp.cos(jnp.pi * t))
+            else:
+                frac = 1.0 - t
+        frac = self.min_lr_ratio + (1 - self.min_lr_ratio) * frac
+        return self.base_lr * warm * frac
+
+
+# ------------------------------------------------------------------ clipping
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+# ------------------------------------------------------------------ AdamW
+@dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    state_dtype: str = "float32"     # bf16 for >=100B-param models
+    schedule: Schedule = dataclasses.field(default_factory=Schedule)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_state_specs(param_specs):
+    """Optimizer-state PartitionSpecs mirror the parameter specs."""
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "step": (),
+    }
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    step = state["step"] + 1
+    lr = cfg.schedule(step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    sdt = jnp.dtype(cfg.state_dtype)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+        mhat = mf / bc1
+        vhat = vf / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, mf.astype(sdt), vf.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "m": treedef.unflatten([o[1] for o in out]),
+        "v": treedef.unflatten([o[2] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ------------------------------------------------------------------ Adafactor
+@dataclass(frozen=True)
+class AdafactorConfig:
+    """Factored second moment: O(n+m) state for an n*m matrix — the
+    memory-frugal option for 400B-class runs (beyond-paper extension)."""
+
+    decay: float = 0.8
+    eps: float = 1e-30
+    clip_threshold: float = 1.0
+    max_grad_norm: float = 1.0
+    weight_decay: float = 0.0
+    schedule: Schedule = dataclasses.field(default_factory=Schedule)
+
+
+def adafactor_init(params, cfg: AdafactorConfig):
+    def rows_cols(p):
+        if p.ndim < 2:
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+            "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+        }
+
+    return {
+        "factored": jax.tree.map(rows_cols, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(grads, state, params, cfg: AdafactorConfig):
+    step = state["step"] + 1
+    lr = cfg.schedule(step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-cfg.decay)
+
+    def upd(g, st, p):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + cfg.eps
+        if p.ndim < 2:
+            v = st["v"] * beta + g2 * (1 - beta)
+            u = gf / jnp.sqrt(v)
+            new_st = {"v": v}
+        else:
+            vr = st["vr"] * beta + jnp.mean(g2, axis=-1) * (1 - beta)
+            vc = st["vc"] * beta + jnp.mean(g2, axis=-2) * (1 - beta)
+            rfac = jax.lax.rsqrt(
+                vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), cfg.eps)
+                + cfg.eps
+            )
+            cfac = jax.lax.rsqrt(vc + cfg.eps)
+            u = gf * rfac[..., None] * cfac[..., None, :]
+            new_st = {"vr": vr, "vc": vc}
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / cfg.clip_threshold)
+        if p.ndim >= 2 and cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_st
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["factored"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_params = treedef.unflatten([o[0] for o in out])
+    new_state = {
+        "factored": treedef.unflatten([o[1] for o in out]),
+        "step": step,
+    }
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# ------------------------------------------------------------------ facade
+@dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"              # adamw | adafactor
+    adamw: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    adafactor: AdafactorConfig = dataclasses.field(default_factory=AdafactorConfig)
+
+
+def make_optimizer(opt_cfg: OptimizerConfig):
+    if opt_cfg.kind == "adamw":
+        return (
+            partial(adamw_init, cfg=opt_cfg.adamw),
+            partial(adamw_update, cfg=opt_cfg.adamw),
+        )
+    if opt_cfg.kind == "adafactor":
+        return (
+            partial(adafactor_init, cfg=opt_cfg.adafactor),
+            partial(adafactor_update, cfg=opt_cfg.adafactor),
+        )
+    raise ValueError(opt_cfg.kind)

@@ -1,0 +1,79 @@
+"""Serving: prefill + decode steps and a batched greedy/sampling loop.
+
+``make_serve_fns`` returns jit-able (prefill_fn, decode_fn); ``generate``
+drives them for the runnable examples. The decode step is the function the
+multi-pod dry-run lowers for ``decode_*`` / ``long_*`` shape cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import LM
+
+
+def make_serve_fns(cfg: ModelConfig, cache_len: int):
+    def prefill_fn(params, tokens, embeds=None, frames=None):
+        return LM.prefill(
+            params, cfg, tokens, cache_len, embeds=embeds, encoder_frames=frames
+        )
+
+    def decode_fn(params, token, caches, lengths):
+        return LM.decode_step(params, cfg, token, caches, lengths)
+
+    return prefill_fn, decode_fn
+
+
+def sample_token(logits: jax.Array, key, temperature: float = 0.0) -> jax.Array:
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )
+
+
+def generate(
+    params,
+    cfg: ModelConfig,
+    prompt: jax.Array,            # [B, S] int32
+    max_new_tokens: int,
+    *,
+    cache_len: int | None = None,
+    temperature: float = 0.0,
+    key=None,
+    embeds=None,
+    frames=None,
+    jit: bool = True,
+) -> jax.Array:
+    """Batched autoregressive generation. Returns [B, max_new_tokens]."""
+    B, S = prompt.shape
+    cache_len = cache_len or (S + max_new_tokens)
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prefill_fn, decode_fn = make_serve_fns(cfg, cache_len)
+    if jit:
+        prefill_fn = jax.jit(prefill_fn)
+        decode_fn = jax.jit(decode_fn)
+
+    logits, caches, lengths = prefill_fn(params, prompt, embeds, frames)
+    tok = sample_token(logits, key, temperature)[:, None]
+    outs = [tok]
+    for i in range(max_new_tokens - 1):
+        key = jax.random.fold_in(key, i)
+        logits, caches = decode_fn(params, tok, caches, lengths)
+        lengths = lengths + 1
+        tok = sample_token(logits, key, temperature)[:, None]
+        outs.append(tok)
+    return jnp.concatenate(outs, axis=1)
+
+
+def decode_input_state(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    """Zero caches + mid-stream lengths: the structural input of one decode
+    step with a cache of ``cache_len`` tokens (dry-run decode cells)."""
+    caches = LM.init_caches(cfg, batch, cache_len, dtype)
+    lengths = jnp.full((batch,), cache_len - 1, jnp.int32)
+    token = jnp.zeros((batch, 1), jnp.int32)
+    return token, caches, lengths

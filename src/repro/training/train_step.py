@@ -1,0 +1,161 @@
+"""Train-step factory: loss + grads (+ microbatch accumulation, gradient
+compression hook) + optimizer update, as a single pjit-able function.
+
+State layout:
+    state = {"params": pytree, "opt": optimizer state, "step": i32}
+
+The factory also produces the state's PartitionSpec tree (params and
+optimizer state shard identically) so launchers can pjit with explicit
+in/out shardings and checkpointing can reshard elastically.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import LM
+from repro.training.optimizer import (
+    OptimizerConfig,
+    adamw_state_specs,
+    make_optimizer,
+)
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    microbatches: int = 1
+    aux_loss_weight: float = 0.01
+    seq_chunk_loss: int = 512
+    compression: str = "none"        # none | bf16 | int8 (see distributed.compression)
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    def loss_fn(params, batch):
+        hidden, aux = LM.apply(
+            params,
+            cfg,
+            batch["tokens"],
+            embeds=batch.get("embeds"),
+            encoder_frames=batch.get("frames"),
+        )
+        labels = batch["labels"]
+        mask = batch.get("mask")
+        if cfg.frontend_tokens:
+            # frontend stub embeddings are prepended: no loss on them
+            B = labels.shape[0]
+            pad = jnp.zeros((B, cfg.frontend_tokens), labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+            m = jnp.concatenate(
+                [
+                    jnp.zeros((B, cfg.frontend_tokens), jnp.float32),
+                    jnp.ones(batch["labels"].shape, jnp.float32)
+                    if mask is None
+                    else mask,
+                ],
+                axis=1,
+            )
+            mask = m
+        loss = LM.loss(params, cfg, hidden, labels, mask,
+                       seq_chunk=tcfg.seq_chunk_loss)
+        total = loss + tcfg.aux_loss_weight * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    return loss_fn
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} % microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """Returns (init_state_fn, train_step_fn, state_spec_fn)."""
+    opt_init, opt_update = make_optimizer(tcfg.optimizer)
+    loss_fn = make_loss_fn(cfg, tcfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    if tcfg.compression != "none":
+        from repro.distributed.compression import compress_decompress
+
+        def grad_filter(g):
+            return compress_decompress(g, tcfg.compression)
+    else:
+        def grad_filter(g):
+            return g
+
+    def init_state(key) -> dict:
+        params, _ = LM.init(key, cfg)
+        return {"params": params, "opt": opt_init(params), "step": jnp.zeros((), jnp.int32)}
+
+    def train_step(state: dict, batch: dict):
+        params = state["params"]
+        if tcfg.microbatches <= 1:
+            (total, metrics), grads = grad_fn(params, batch)
+        else:
+            mb = _split_microbatches(batch, tcfg.microbatches)
+
+            def acc_body(carry, mbatch):
+                gacc, lacc = carry
+                (tot, met), g = grad_fn(params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g
+                )
+                return (gacc, lacc + met["loss"]), met["aux_loss"]
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), auxes = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(
+                lambda g, p: (g / tcfg.microbatches).astype(p.dtype), gsum, params
+            )
+            metrics = {
+                "loss": lsum / tcfg.microbatches,
+                "aux_loss": jnp.mean(auxes),
+            }
+            total = metrics["loss"]
+        grads = grad_filter(grads)
+        new_params, new_opt, om = opt_update(grads, state["opt"], params)
+        metrics.update(om)
+        metrics["total_loss"] = total
+        new_state = {
+            "params": new_params,
+            "opt": new_opt,
+            "step": state["step"] + 1,
+        }
+        return new_state, metrics
+
+    def state_specs(param_specs) -> dict:
+        if tcfg.optimizer.kind == "adamw":
+            opt_specs = adamw_state_specs(param_specs)
+        else:
+            # adafactor: factored leaves drop the last/second-to-last dims;
+            # replicate factored state (it is tiny relative to params)
+            def fact(spec):
+                return {"vr": spec[:-1], "vc": spec[:-2] + spec[-1:]} \
+                    if isinstance(spec, tuple) and len(spec) >= 2 else {"v": spec}
+
+            opt_specs = {
+                "factored": jax.tree.map(
+                    fact, param_specs,
+                    is_leaf=lambda v: isinstance(v, tuple) and all(
+                        a is None or isinstance(a, (str, tuple)) for a in v
+                    ),
+                ),
+                "step": (),
+            }
+        return {"params": param_specs, "opt": opt_specs, "step": ()}
+
+    return init_state, train_step, state_specs

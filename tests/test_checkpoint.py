@@ -1,0 +1,133 @@
+"""Burst-buffer checkpoint manager: roundtrip, atomicity, corruption
+fallback, GC, elastic restore."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint import serialization as ser
+from repro.core import Sea, SeaConfig, TierSpec
+
+
+def make_sea(tmp_path, **kw):
+    cfg = SeaConfig(
+        mount=str(tmp_path / "mount"),
+        tiers=[
+            TierSpec(name="tmpfs", roots=(str(tmp_path / "t0"),)),
+            TierSpec(name="pfs", roots=(str(tmp_path / "pfs"),), persistent=True),
+        ],
+        max_file_size=1 << 22,
+        n_procs=1,
+        flushlist=("checkpoints/*/*",),
+        evictlist=("checkpoints/*/*",),
+        **kw,
+    )
+    return Sea(cfg)
+
+
+def state_tree(key=0):
+    k = jax.random.PRNGKey(key)
+    return {
+        "params": {
+            "w": jax.random.normal(k, (16, 32)).astype(jnp.bfloat16),
+            "b": jnp.zeros((32,), jnp.float32),
+        },
+        "opt": {"m": jnp.ones((16, 32), jnp.float32)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def trees_equal(a, b):
+    fa, fb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return all(np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(fa, fb))
+
+
+def test_roundtrip_through_burst_buffer(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=3)
+    st = state_tree()
+    d = mgr.save(5, st)
+    # the write itself landed on the fast tier
+    assert sea.fs.where(os.path.join(d, "manifest.json")) == "tmpfs"
+    got = mgr.restore(5, jax.eval_shape(lambda: st))
+    assert trees_equal(st, got)
+    # after the final flush, files live on the persistent tier only (MOVE)
+    sea.flusher.scan()
+    sea.flusher._process_all_sync()
+    assert sea.fs.where(os.path.join(d, "manifest.json")) == "pfs"
+    got2 = mgr.restore(5, jax.eval_shape(lambda: st))
+    assert trees_equal(st, got2)
+
+
+def test_restore_latest_and_gc(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=2)
+    for step in (1, 2, 3, 4):
+        mgr.save(step, state_tree(step))
+    steps = mgr.available_steps()
+    assert steps == [3, 4]  # GC kept last 2
+    s, got = mgr.restore_latest(jax.eval_shape(lambda: state_tree()))
+    assert s == 4
+    assert trees_equal(got, state_tree(4))
+
+
+def test_corrupt_checkpoint_falls_back(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=3)
+    mgr.save(1, state_tree(1))
+    mgr.save(2, state_tree(2))
+    # corrupt one leaf file of step 2 (wherever it lives)
+    d2 = mgr._step_dir(2)
+    key = sea.fs.key_of(os.path.join(d2, "00000.npy"))
+    tier, real = sea.fs.hierarchy.locate(key)
+    with open(real, "r+b") as f:
+        f.seek(200)
+        f.write(b"\xde\xad\xbe\xef")
+    s, got = mgr.restore_latest(jax.eval_shape(lambda: state_tree()))
+    assert s == 1
+    assert trees_equal(got, state_tree(1))
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=3)
+    mgr.save(1, state_tree(1))
+    # a partial save: files but no _COMPLETE marker
+    d2 = mgr._step_dir(2)
+    ser.save_tree(state_tree(2), d2, open_fn=sea.fs.open)
+    assert mgr.available_steps() == [1]
+
+
+def test_elastic_restore_resharded(tmp_path):
+    """Restore onto an explicit (1,1) mesh sharding — the reshard path used
+    when a job restarts on a different topology."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=1)
+    st = state_tree()
+    mgr.save(1, st)
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), jax.eval_shape(lambda: st)
+    )
+    got = mgr.restore(1, jax.eval_shape(lambda: st), shardings=shardings)
+    assert trees_equal(st, got)
+    leaf = got["params"]["w"]
+    assert leaf.sharding.mesh.shape == {"data": 1, "model": 1}
+
+
+def test_bf16_bit_exact(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea)
+    st = {"w": (jnp.arange(1024, dtype=jnp.float32) * 1.37e-3).astype(jnp.bfloat16)}
+    mgr.save(1, st)
+    got = mgr.restore(1, jax.eval_shape(lambda: st))
+    assert np.array_equal(
+        np.asarray(st["w"]).view(np.uint16), np.asarray(got["w"]).view(np.uint16)
+    )

@@ -1,0 +1,238 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes/dtypes, plus hypothesis property tests on invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.wkv6.ops import wkv6
+from repro.kernels.wkv6.ref import wkv6_ref
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------ flash
+FLASH_SWEEP = [
+    # (B, H, Hk, Sq, Sk, Dh, causal, window, dtype)
+    (1, 4, 4, 128, 128, 64, True, None, jnp.float32),
+    (2, 8, 2, 256, 256, 64, True, None, jnp.float32),      # GQA 4:1
+    (1, 4, 1, 128, 128, 128, True, None, jnp.float32),     # MQA
+    (1, 4, 4, 200, 200, 64, True, None, jnp.float32),      # ragged/padded
+    (1, 4, 2, 256, 256, 64, True, 64, jnp.float32),        # sliding window
+    (1, 4, 4, 128, 128, 64, False, None, jnp.float32),     # bidirectional
+    (2, 4, 2, 256, 256, 64, True, None, jnp.bfloat16),
+    (1, 8, 8, 512, 512, 96, True, None, jnp.bfloat16),     # phi3 head_dim
+]
+
+
+@pytest.mark.parametrize(
+    "B,H,Hk,Sq,Sk,Dh,causal,window,dtype", FLASH_SWEEP
+)
+def test_flash_attention_matches_ref(B, H, Hk, Sq, Sk, Dh, causal, window, dtype):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(k1, (B, Sq, H, Dh), dtype)
+    k = rand(k2, (B, Sk, Hk, Dh), dtype)
+    v = rand(k3, (B, Sk, Hk, Dh), dtype)
+    out = flash_attention(
+        q, k, v, causal=causal, window=window,
+        block_q=64, block_k=64, interpret=True,
+    )
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+    ).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+def test_flash_attention_causality_property():
+    """Perturbing future tokens never changes past outputs."""
+    key = jax.random.PRNGKey(1)
+    B, H, S, Dh = 1, 2, 128, 64
+    q = rand(key, (B, S, H, Dh))
+    k = rand(jax.random.fold_in(key, 1), (B, S, H, Dh))
+    v = rand(jax.random.fold_in(key, 2), (B, S, H, Dh))
+    out1 = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                           interpret=True)
+    k2 = k.at[:, 100:].set(99.0)
+    v2 = v.at[:, 100:].set(-99.0)
+    out2 = flash_attention(q, k2, v2, causal=True, block_q=32, block_k=32,
+                           interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :100]), np.asarray(out2[:, :100]), rtol=1e-5, atol=1e-5
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    sq=st.integers(16, 160),
+    hk=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    blk=st.sampled_from([32, 64]),
+)
+def test_flash_attention_block_invariance(sq, hk, g, blk):
+    """Output is independent of the block decomposition."""
+    key = jax.random.PRNGKey(sq)
+    B, Dh = 1, 64
+    H = hk * g
+    q = rand(key, (B, sq, H, Dh))
+    k = rand(jax.random.fold_in(key, 1), (B, sq, hk, Dh))
+    v = rand(jax.random.fold_in(key, 2), (B, sq, hk, Dh))
+    a = flash_attention(q, k, v, block_q=blk, block_k=blk, interpret=True)
+    b = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-5, atol=3e-5)
+
+
+# ------------------------------------------------------------------ wkv6
+WKV_SWEEP = [
+    # (B, H, T, N, chunk, dtype)
+    (1, 2, 64, 16, 16, jnp.float32),
+    (2, 4, 128, 64, 64, jnp.float32),
+    (1, 2, 128, 32, 32, jnp.bfloat16),
+    (2, 1, 256, 64, 64, jnp.float32),
+]
+
+
+def wkv_inputs(B, H, T, N, dtype, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 5)
+    r = rand(ks[0], (B, T, H, N), dtype)
+    k = rand(ks[1], (B, T, H, N), dtype)
+    v = rand(ks[2], (B, T, H, N), dtype)
+    # realistic decays: w_log = -exp(x) in [-6, 1] -> decay in (0, 1)
+    w_log = -jnp.exp(
+        jax.random.uniform(ks[3], (B, T, H, N), minval=-6.0, maxval=1.0)
+    ).astype(jnp.float32)
+    u = rand(ks[4], (H, N)) * 0.5
+    return r, k, v, w_log, u
+
+
+@pytest.mark.parametrize("B,H,T,N,chunk,dtype", WKV_SWEEP)
+def test_wkv6_matches_ref(B, H, T, N, chunk, dtype):
+    r, k, v, w_log, u = wkv_inputs(B, H, T, N, dtype)
+    out = wkv6(r, k, v, w_log, u, chunk=chunk, interpret=True)
+    ref = wkv6_ref(
+        r.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), w_log.transpose(0, 2, 1, 3), u,
+    ).transpose(0, 2, 1, 3)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=tol, atol=tol)
+
+
+def test_wkv6_chunk_invariance():
+    """Chunk size must not change the result (state handoff correctness)."""
+    r, k, v, w_log, u = wkv_inputs(1, 2, 128, 32, jnp.float32, key=3)
+    a = wkv6(r, k, v, w_log, u, chunk=16, interpret=True)
+    b = wkv6(r, k, v, w_log, u, chunk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_matches_model_path():
+    """The XLA chunked implementation used by the model (rwkv.wkv6_chunked)
+    agrees with the Pallas kernel — kernel and model can swap freely."""
+    from repro.models.rwkv import wkv6_chunked
+
+    r, k, v, w_log, u = wkv_inputs(1, 2, 128, 32, jnp.float32, key=5)
+    a = wkv6(r, k, v, w_log, u, chunk=32, interpret=True)
+    b = wkv6_chunked(r, k, v, w_log, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(t=st.sampled_from([32, 64, 96]), n=st.sampled_from([16, 32]))
+def test_wkv6_decay_forgetting_property(t, n):
+    """With total decay -> -inf between two halves, the second half's output
+    is independent of the first half (the state is fully forgotten)."""
+    r, k, v, w_log, u = wkv_inputs(1, 1, t, n, jnp.float32, key=t * n)
+    cut = t // 2
+    w_hard = w_log.at[:, cut].set(-50.0)  # one step erases the state
+    out_full = wkv6(r, k, v, w_hard, u, chunk=16, interpret=True)
+    r2 = r.at[:, :cut].set(0.123)
+    k2 = k.at[:, :cut].set(-0.5)
+    out_mod = wkv6(r2, k2, v, w_hard, u, chunk=16, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out_full[:, cut + 1:]), np.asarray(out_mod[:, cut + 1:]),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# ------------------------------------------------------------------ ssm
+SSM_SWEEP = [
+    # (B, T, d_in, N, chunk, dblk)
+    (1, 64, 64, 8, 16, 32),
+    (2, 128, 128, 16, 64, 64),
+    (1, 256, 64, 16, 64, 64),
+]
+
+
+def ssm_inputs(B, T, d_in, N, key=0):
+    ks = jax.random.split(jax.random.PRNGKey(key), 6)
+    dt = jax.nn.softplus(rand(ks[0], (B, T, d_in)))
+    x = rand(ks[1], (B, T, d_in))
+    Bm = rand(ks[2], (B, T, N))
+    Cm = rand(ks[3], (B, T, N))
+    A = -jnp.exp(rand(ks[4], (d_in, N)) * 0.5)
+    D = rand(ks[5], (d_in,))
+    return dt, x, Bm, Cm, A, D
+
+
+@pytest.mark.parametrize("B,T,d_in,N,chunk,dblk", SSM_SWEEP)
+def test_ssm_scan_matches_ref(B, T, d_in, N, chunk, dblk):
+    args = ssm_inputs(B, T, d_in, N)
+    out = ssm_scan(*args, chunk=chunk, dblk=dblk, interpret=True)
+    ref = ssm_scan_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_scan_chunk_invariance():
+    args = ssm_inputs(1, 128, 64, 16, key=7)
+    a = ssm_scan(*args, chunk=16, dblk=32, interpret=True)
+    b = ssm_scan(*args, chunk=128, dblk=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+# ------------------------------------------------------------------ rmsnorm
+@pytest.mark.parametrize("shape", [(4, 128), (2, 64, 256), (3, 5, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(0)
+    x = rand(key, shape, dtype, scale=3.0)
+    scale = rand(jax.random.fold_in(key, 1), shape[-1:]) + 1.0
+    out = rmsnorm(x, scale, interpret=True, block_rows=8)
+    ref = rmsnorm_ref(x, scale)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol,
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 33),
+    d=st.sampled_from([64, 128, 384]),
+    amp=st.floats(0.5, 100.0),   # amp >> sqrt(eps): the invariant's domain
+)
+def test_rmsnorm_output_rms_is_scale_rms(rows, d, amp):
+    """RMS of the output equals RMS of the scale vector (norm invariant),
+    for inputs well above eps — catches accumulation/layout bugs."""
+    key = jax.random.PRNGKey(rows * d)
+    x = rand(key, (rows, d), scale=amp)
+    scale = jnp.ones((d,))
+    out = rmsnorm(x, scale, interpret=True, block_rows=8)
+    rms = np.sqrt(np.mean(np.square(np.asarray(out)), axis=-1))
+    np.testing.assert_allclose(rms, np.ones_like(rms), rtol=1e-3, atol=1e-3)
