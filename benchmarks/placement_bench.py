@@ -1,0 +1,153 @@
+"""Placement hot-path benchmark: O(1) ledger vs the seed's O(n) re-walk.
+
+The acceptance target for the capacity-ledger PR: placement-decision cost
+must be independent of cached-file count, with >=5x faster open()
+eligibility at 10k cached files on a capped root.
+
+Two measurements per population size:
+  placement_select   — ``PlacementPolicy.select()`` alone (the eligibility
+                       check every intercepted ``open(.., "w")`` pays)
+  open_write_close   — end-to-end SeaFS ``open``/``write``/``close``/
+                       ``remove`` of a fresh key under the mount
+
+``PYTHONPATH=src python -m benchmarks.placement_bench`` prints the same
+``name,us_per_call,derived`` CSV as the other benches (derived = speedup
+of ledger over walk at that population).
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from repro.core import SeaConfig, SeaFS, TierSpec
+
+_POPULATIONS = (100, 1000, 10000)
+
+
+def _populate(root: str, n_files: int) -> None:
+    """Drop ``n_files`` small files under ``root`` (64 dirs, like a real
+    scattered cache) so the walk baseline has something to walk."""
+    payload = b"x" * 64
+    for i in range(n_files):
+        d = os.path.join(root, f"d{i % 64:02d}")
+        os.makedirs(d, exist_ok=True)
+        with open(os.path.join(d, f"f{i}.bin"), "wb") as f:
+            f.write(payload)
+
+
+def _config(workdir: str, use_ledger: bool) -> SeaConfig:
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(
+                name="cache",
+                roots=(os.path.join(workdir, "cache"),),
+                capacity=1 << 30,  # capped -> eligibility must count used bytes
+            ),
+            TierSpec(
+                name="pfs",
+                roots=(os.path.join(workdir, "pfs"),),
+                persistent=True,
+            ),
+        ],
+        max_file_size=1 << 16,
+        n_procs=2,
+        capacity_ledger=use_ledger,
+        ledger_reconcile_interval_s=1e9,  # isolate the hot path from reconciles
+    )
+
+
+def _time_select(fs: SeaFS, n_calls: int) -> float:
+    """Mean seconds per ``policy.select()`` (the placement decision)."""
+    fs.policy.select()  # warm (ledger: triggers the one reconcile walk)
+    t0 = time.perf_counter()
+    for _ in range(n_calls):
+        fs.policy.select()
+    return (time.perf_counter() - t0) / n_calls
+
+
+def _time_open(fs: SeaFS, n_calls: int) -> float:
+    """Mean seconds per open/write/close/remove of a fresh key."""
+    fs.policy.select()  # warm
+    t0 = time.perf_counter()
+    for i in range(n_calls):
+        p = os.path.join(fs.mount, f"bench_{i}.bin")
+        with fs.open(p, "wb") as f:
+            f.write(b"y" * 128)
+        fs.remove(p)
+    return (time.perf_counter() - t0) / n_calls
+
+
+def bench_placement_ledger_vs_walk(quick: bool = True):
+    rows = []
+    # the full sweep IS the quick sweep: call counts below already scale
+    # inversely with population, keeping wall time bounded either way
+    del quick
+    for n_files in _POPULATIONS:
+        workdir = tempfile.mkdtemp(prefix="sea_placement_bench_")
+        try:
+            cache_root = os.path.join(workdir, "cache")
+            os.makedirs(cache_root, exist_ok=True)
+            _populate(cache_root, n_files)
+
+            fs_walk = SeaFS(_config(workdir, use_ledger=False))
+            fs_ledger = SeaFS(_config(workdir, use_ledger=True))
+
+            # walk cost grows with n_files: keep wall time bounded
+            walk_calls = max(3, min(50, 30000 // n_files))
+            ledger_calls = 2000
+
+            s_walk = _time_select(fs_walk, walk_calls)
+            s_ledger = _time_select(fs_ledger, ledger_calls)
+            o_walk = _time_open(fs_walk, walk_calls)
+            o_ledger = _time_open(fs_ledger, min(ledger_calls, 500))
+
+            rows.append({
+                "name": f"placement_select_walk_{n_files}f",
+                "us_per_call": round(s_walk * 1e6, 2),
+                "derived": "",
+            })
+            rows.append({
+                "name": f"placement_select_ledger_{n_files}f",
+                "us_per_call": round(s_ledger * 1e6, 2),
+                "derived": f"speedup={s_walk / s_ledger:.1f}x",
+            })
+            rows.append({
+                "name": f"open_write_close_walk_{n_files}f",
+                "us_per_call": round(o_walk * 1e6, 2),
+                "derived": "",
+            })
+            rows.append({
+                "name": f"open_write_close_ledger_{n_files}f",
+                "us_per_call": round(o_ledger * 1e6, 2),
+                "derived": f"speedup={o_walk / o_ledger:.1f}x",
+            })
+        finally:
+            shutil.rmtree(workdir, ignore_errors=True)
+    return rows
+
+
+ALL_PLACEMENT_BENCHES = [bench_placement_ledger_vs_walk]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    ok = True
+    rows = bench_placement_ledger_vs_walk(quick=True)
+    for row in rows:
+        print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+    # acceptance: >=5x faster open eligibility at the largest population
+    big = _POPULATIONS[-1]
+    walk = next(r for r in rows if r["name"] == f"open_write_close_walk_{big}f")
+    led = next(r for r in rows if r["name"] == f"open_write_close_ledger_{big}f")
+    speedup = walk["us_per_call"] / led["us_per_call"]
+    print(f"acceptance_open_speedup_{big}f,{speedup:.1f},>=5x_required")
+    ok = speedup >= 5.0
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,12 @@ def main() -> None:
 
     benches = list(ALL_BENCHES)
     try:
+        from benchmarks.placement_bench import ALL_PLACEMENT_BENCHES
+
+        benches += ALL_PLACEMENT_BENCHES
+    except ImportError:
+        pass
+    try:
         from benchmarks.kernel_benches import ALL_KERNEL_BENCHES
 
         benches += ALL_KERNEL_BENCHES

@@ -5,6 +5,7 @@ Public surface:
     SeaFS                     stateless path translation + file ops (§3.1.2)
     SeaMount                  Python-level interception context (LD_PRELOAD analogue)
     Flusher / Sea             flush-and-evict daemon, prefetcher (§3.3)
+    CapacityLedger            O(1) capacity accounting (beyond-paper hot path)
     Mode                      copy / remove / move / keep (Table 1)
     perf model                ``repro.core.model`` (Eqs. 1–11)
     simulator                 ``repro.core.simulator`` (paper-scale experiments)
@@ -13,6 +14,7 @@ Public surface:
 from .config import SeaConfig, default_local_config
 from .flusher import Flusher, Sea
 from .intercept import SeaMount
+from .ledger import CapacityLedger, Reservation
 from .lists import Mode, matches, resolve_mode
 from .placement import PlacementPolicy
 from .seafs import SeaFS
@@ -25,6 +27,8 @@ __all__ = [
     "Flusher",
     "Sea",
     "SeaMount",
+    "CapacityLedger",
+    "Reservation",
     "Mode",
     "matches",
     "resolve_mode",

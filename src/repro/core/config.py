@@ -36,6 +36,12 @@ class SeaConfig:
     #: flusher behaviour
     flush_interval_s: float = 0.05      # poll period of the flush-and-evict daemon
     max_inflight_flush_bytes: int = 1 << 30  # beyond-paper: bounded async flushing
+    flush_workers: int = 2              # worker pool size: flushes of independent
+                                        # keys proceed concurrently
+    #: capacity-accounting ledger (O(1) placement hot path)
+    capacity_ledger: bool = True        # False = seed's stateless per-call rescan
+    ledger_reconcile_interval_s: float = 5.0  # staleness bound for absorbing
+                                              # external writers via re-walk
     #: beyond-paper options (all default OFF for paper faithfulness)
     stripe_chunk_bytes: int = 0         # >0 enables striping across same-level roots
     lru_evict: bool = False             # auto-evict LRU when a tier is full
@@ -49,6 +55,10 @@ class SeaConfig:
             raise ValueError("max_file_size must be positive")
         if self.n_procs <= 0:
             raise ValueError("n_procs must be positive")
+        if self.flush_workers <= 0:
+            raise ValueError("flush_workers must be positive")
+        if self.ledger_reconcile_interval_s < 0:
+            raise ValueError("ledger_reconcile_interval_s must be >= 0")
 
     # -- presets (paper §3.1.1: "two main modes based on flushing spec") ----
     def in_memory(self, final_globs: tuple[str, ...]) -> "SeaConfig":
@@ -61,7 +71,11 @@ class SeaConfig:
         return replace(self, flushlist=("*",), evictlist=())
 
     def build_hierarchy(self) -> Hierarchy:
-        return Hierarchy.from_specs(list(self.tiers))
+        return Hierarchy.from_specs(
+            list(self.tiers),
+            use_ledger=self.capacity_ledger,
+            reconcile_interval_s=self.ledger_reconcile_interval_s,
+        )
 
     # -- parsing -------------------------------------------------------------
     @classmethod
@@ -117,6 +131,11 @@ class SeaConfig:
             tiers=tiers,
             max_file_size=sea.getint("max_file_size", 1 << 20),
             n_procs=sea.getint("n_procs", 1),
+            flush_workers=sea.getint("flush_workers", 2),
+            capacity_ledger=sea.getboolean("capacity_ledger", True),
+            ledger_reconcile_interval_s=sea.getfloat(
+                "ledger_reconcile_interval_s", 5.0
+            ),
             flushlist=_read_list(FLUSHLIST_NAME),
             evictlist=_read_list(EVICTLIST_NAME),
             prefetchlist=_read_list(PREFETCHLIST_NAME),

@@ -1,15 +1,21 @@
 """Background flush-and-evict daemon + prefetcher (paper §3.3, §5.1).
 
 "If only a single instance of Sea is called on a compute node, there will
-only be a single flush and evict process." — one worker thread per SeaFS.
+only be a single flush and evict process." — the paper pairs one worker
+with each Sea instance; we generalise to a small worker pool
+(``SeaConfig.flush_workers``) so flushes of *independent keys* proceed
+concurrently while per-key ``key_lock`` serialisation keeps any single
+file's flush/evict atomic.
 
-The daemon reacts to file-close events and also runs periodic stateless
-scans of the cache tiers (so files written before the daemon started, or
+The daemon reacts to file-close events and also runs stateless scans of
+the cache tiers on demand (so files written before the daemon started, or
 by other processes sharing the tiers, are still picked up). Flushes are
 atomic: copy to ``<dst>.sea_tmp`` on the base tier, then ``os.replace``;
 eviction of a MOVEd file happens only after the rename commits, so readers
 resolving the hierarchy always find a complete copy (fixes the paper's
-§5.5 in-flight-access limitation).
+§5.5 in-flight-access limitation). Every flush/evict transactionally
+updates the capacity ledger, keeping placement's O(1) free-space counters
+truthful without a rescan.
 """
 
 from __future__ import annotations
@@ -29,55 +35,78 @@ class Flusher:
     def __init__(self, fs: SeaFS):
         self.fs = fs
         self.config = fs.config
+        self.n_workers = max(1, int(getattr(fs.config, "flush_workers", 1)))
         self._q: "queue.Queue[str | None]" = queue.Queue()
-        self._pending: set[str] = set()
-        self._lock = threading.Lock()
+        self._pending: set[str] = set()   # keys queued but not yet picked up
+        self._active: dict[str, bool] = {}  # being processed -> resubmit flag
+        self._deferred: set[str] = set()  # skipped busy; await any close
+        self._inflight = 0                # keys currently being processed
+        self._cv = threading.Condition()  # guards the four fields above
         self._stop = threading.Event()
-        self._idle = threading.Event()
-        self._idle.set()
-        self._thread: threading.Thread | None = None
+        self._threads: list[threading.Thread] = []
         fs.add_close_listener(self._on_close)
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "Flusher":
-        if self._thread is None or not self._thread.is_alive():
+        if not self._alive():
             self._stop.clear()
-            self._thread = threading.Thread(
-                target=self._run, name="sea-flusher", daemon=True
-            )
-            self._thread.start()
+            self._threads = [
+                threading.Thread(
+                    target=self._run, name=f"sea-flusher-{i}", daemon=True
+                )
+                for i in range(self.n_workers)
+            ]
+            for t in self._threads:
+                t.start()
         return self
 
     def stop(self) -> None:
         self._stop.set()
-        self._q.put(None)
-        if self._thread is not None:
-            self._thread.join(timeout=30)
+        for _ in self._threads:
+            self._q.put(None)
+        for t in self._threads:
+            t.join(timeout=30)
+
+    def _alive(self) -> bool:
+        return any(t.is_alive() for t in self._threads)
 
     def drain(self) -> None:
         """Final flush: process every pending + scannable file, then return.
         Called at application shutdown ('materialize onto long-term
-        storage')."""
+        storage'). Correct under the worker pool: waits on an explicit
+        queued+in-flight count rather than poking at the queue's private
+        ``unfinished_tasks`` outside its mutex."""
         self.scan()
-        while True:
-            with self._lock:
-                empty = not self._pending and self._q.unfinished_tasks == 0
-            if empty and self._idle.is_set():
-                break
-            if self._thread is None or not self._thread.is_alive():
-                # synchronous fallback: no daemon running
-                self._process_all_sync()
-                break
-            self._idle.wait(timeout=0.5)
+        if not self._alive():
+            # synchronous fallback: no daemon running
+            self._process_all_sync()
+            return
+        with self._cv:
+            while self._pending or self._inflight:
+                if not self._alive():
+                    break
+                self._cv.wait(timeout=0.5)
+        if not self._alive():
+            self._process_all_sync()
 
     # -- event plumbing --------------------------------------------------------
     def _on_close(self, key: str, writing: bool) -> None:
-        if not writing:
-            return
-        self.submit(key)
+        with self._cv:
+            deferred = key in self._deferred
+            self._deferred.discard(key)
+        if writing or deferred:
+            # a read close matters too when a reader held the file busy
+            # during an earlier flush attempt
+            self.submit(key)
 
     def submit(self, key: str) -> None:
-        with self._lock:
+        with self._cv:
+            if key in self._active:
+                # a worker is processing this key right now: flag it for
+                # one more pass instead of dropping the event (the file
+                # may have been rewritten under the in-flight flush)
+                self._active[key] = True
+                return
             if key in self._pending:
                 return
             self._pending.add(key)
@@ -101,7 +130,7 @@ class Flusher:
                             n += 1
         return n
 
-    # -- worker ------------------------------------------------------------------
+    # -- workers ------------------------------------------------------------------
     def _run(self) -> None:
         while not self._stop.is_set():
             try:
@@ -109,17 +138,26 @@ class Flusher:
             except queue.Empty:
                 continue
             if key is None:
-                self._q.task_done()
-                break
-            self._idle.clear()
+                if self._stop.is_set():
+                    break
+                continue  # stale sentinel from a previous stop()
+            with self._cv:
+                self._pending.discard(key)
+                self._active[key] = False
+                self._inflight += 1
             try:
                 self.process(key)
             finally:
-                with self._lock:
-                    self._pending.discard(key)
-                self._q.task_done()
-                if self._q.empty():
-                    self._idle.set()
+                requeue = False
+                with self._cv:
+                    if self._active.pop(key, False):
+                        # a submit arrived mid-process: queue one more pass
+                        self._pending.add(key)
+                        requeue = True
+                    self._inflight -= 1
+                    self._cv.notify_all()
+                if requeue:
+                    self._q.put(key)
 
     def _process_all_sync(self) -> None:
         while True:
@@ -127,11 +165,19 @@ class Flusher:
                 key = self._q.get_nowait()
             except queue.Empty:
                 return
-            if key is not None:
-                self.process(key)
-            with self._lock:
+            if key is None:
+                continue
+            with self._cv:
                 self._pending.discard(key)
-            self._q.task_done()
+                self._active[key] = False
+            self.process(key)
+            requeue = False
+            with self._cv:
+                if self._active.pop(key, False):
+                    self._pending.add(key)
+                    requeue = True
+            if requeue:
+                self._q.put(key)
 
     # -- the four modes ------------------------------------------------------------
     def process(self, key: str) -> Mode:
@@ -140,9 +186,11 @@ class Flusher:
             return mode
         with self.fs.key_lock(key):
             if self.fs.open_count(key):
-                # busy: requeue for a later pass rather than moving underneath
-                # the application (paper §5.5 limitation, handled here).
-                self.submit(key)
+                # busy: never move a file underneath the application (paper
+                # §5.5 limitation). Defer to the NEXT close of this key —
+                # an immediate requeue would busy-spin while it stays open.
+                with self._cv:
+                    self._deferred.add(key)
                 return mode
             located = self.fs.hierarchy.locate(key)
             if located is None:
@@ -153,11 +201,12 @@ class Flusher:
             if mode in (Mode.COPY, Mode.MOVE):
                 self._flush_one(key, real)
             if mode in (Mode.MOVE, Mode.REMOVE):
-                self._evict_one(key, real)
+                self._evict_one(key, real, tier)
         return mode
 
     def _flush_one(self, key: str, src: str) -> None:
-        base_root = self.fs.hierarchy.base.roots[0]
+        base = self.fs.hierarchy.base
+        base_root = base.roots[0]
         dst = os.path.join(base_root, key)
         os.makedirs(os.path.dirname(dst), exist_ok=True)
         if os.path.exists(dst) and os.path.getmtime(dst) >= os.path.getmtime(src):
@@ -165,12 +214,17 @@ class Flusher:
         tmp = dst + _TMP_SUFFIX
         shutil.copyfile(src, tmp)
         os.replace(tmp, dst)  # atomic commit
-        self.fs.telemetry.record_flush(os.path.getsize(dst))
+        nbytes = os.path.getsize(dst)
+        base.note_written(base_root, key, nbytes)
+        self.fs.telemetry.record_flush(nbytes)
 
-    def _evict_one(self, key: str, src: str) -> None:
+    def _evict_one(self, key: str, src: str, tier) -> None:
         try:
             nbytes = os.path.getsize(src)
             os.remove(src)
+            root = tier.root_of(src)
+            if root is not None:
+                tier.note_removed(root, key)
             self.fs.telemetry.record_evict(nbytes)
         except OSError:
             pass
@@ -199,19 +253,20 @@ class Flusher:
                         slot = self.fs.policy.select_cache_for_prefetch(nbytes)
                         if slot is None:
                             continue
-                        _tier, croot = slot
+                        ctier, croot = slot
                         dst = os.path.join(croot, key)
                         os.makedirs(os.path.dirname(dst), exist_ok=True)
                         tmp = dst + _TMP_SUFFIX
                         shutil.copyfile(real, tmp)
                         os.replace(tmp, dst)
+                        ctier.note_written(croot, key, nbytes)
                         self.fs.telemetry.record_prefetch(nbytes)
                         total += nbytes
         return total
 
 
 class Sea:
-    """Top-level convenience bundle: SeaFS + running Flusher.
+    """Top-level convenience bundle: SeaFS + running Flusher pool.
 
     >>> sea = Sea(config).start()
     >>> with sea.fs.open(f"{config.mount}/x.bin", "wb") as f: ...

@@ -56,13 +56,17 @@ class SeaMount:
         fs = self.fs
 
         def wrapper(path, *a, **kw):
+            # the guard covers ONLY the fspath/is_sea_path probe: an error
+            # raised by the Sea handler itself must propagate, not silently
+            # re-execute the operation against the original function.
             try:
-                if isinstance(path, (str, os.PathLike)) and fs.is_sea_path(
+                is_sea = isinstance(path, (str, os.PathLike)) and fs.is_sea_path(
                     os.fspath(path)
-                ):
-                    return handler(os.fspath(path), *a, **kw)
+                )
             except (TypeError, ValueError):
-                pass
+                is_sea = False
+            if is_sea:
+                return handler(os.fspath(path), *a, **kw)
             return orig(path, *a, **kw)
 
         return wrapper
@@ -78,10 +82,10 @@ class SeaMount:
                 d = isinstance(dst, (str, os.PathLike)) and fs.is_sea_path(
                     os.fspath(dst)
                 )
-                if s or d:
-                    return handler(os.fspath(src), os.fspath(dst), *a, **kw)
             except (TypeError, ValueError):
-                pass
+                s = d = False
+            if s or d:
+                return handler(os.fspath(src), os.fspath(dst), *a, **kw)
             return orig(src, dst, *a, **kw)
 
         return wrapper
@@ -119,10 +123,9 @@ class SeaMount:
             )
             os.path.exists = self._path_fn(os.path.exists, fs.exists)
             os.path.getsize = self._path_fn(os.path.getsize, fs.getsize)
-            os.path.isfile = self._path_fn(
-                os.path.isfile,
-                lambda p: fs.hierarchy.locate(fs.key_of(p)) is not None,
-            )
+            # fs.isfile checks the *located real path* with os.path.isfile:
+            # Tier.locate uses lexists, which is also true for directories.
+            os.path.isfile = self._path_fn(os.path.isfile, fs.isfile)
 
             def _copyfile(src, dst, **kw):
                 with fs.open(src, "rb") as fi, fs.open(dst, "wb") as fo:

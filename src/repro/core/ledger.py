@@ -1,0 +1,263 @@
+"""Capacity-accounting ledger — the O(1) placement hot path.
+
+The seed implementation was literally stateless: every capped-root
+eligibility check re-walked the whole root (``os.walk``), so each
+``open(..., "w")`` under the mount cost O(files-in-cache) — the exact
+metadata-scaling failure the paper designed around. This module replaces
+those rescans with per-root used-byte counters that are updated
+transactionally on create / write-close / flush / evict / remove, plus
+in-flight *write reservations*, so ``free_bytes`` / ``eligible_roots`` /
+``select`` become dictionary lookups guarded by per-root (sharded) locks.
+
+The filesystem remains the ultimate source of truth: a periodic (and
+on-demand) *reconciliation* scan re-walks a root and rebuilds its account,
+absorbing external writers that bypassed Sea (other processes, direct
+``os`` calls outside a :class:`~repro.core.intercept.SeaMount`). Between
+reconciles the ledger is an optimistically-maintained invariant::
+
+    account.used == sum(size of files under root)        (eventually)
+    free(root)   == capacity - used - reserved           (capped roots)
+
+Reservations close the seed's over-commit window: a file opened for write
+occupies no bytes on disk until data is flushed, so N concurrent writers
+all saw the same ``free`` and could collectively blow past the cap. Each
+open-for-write now reserves ``max_file_size`` up front and commits the
+actual size on close.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+
+class Reservation:
+    """An in-flight write budget held against one root.
+
+    Created by :meth:`CapacityLedger.reserve`; resolved exactly once via
+    :meth:`CapacityLedger.commit` (write finished, actual size known) or
+    :meth:`CapacityLedger.release` (write abandoned).
+    """
+
+    __slots__ = ("root", "nbytes", "active")
+
+    def __init__(self, root: str, nbytes: int):
+        self.root = root
+        self.nbytes = nbytes
+        self.active = True
+
+    def __repr__(self) -> str:  # pragma: no cover
+        state = "active" if self.active else "resolved"
+        return f"Reservation({self.root!r}, {self.nbytes}, {state})"
+
+
+class _RootAccount:
+    """Mutable per-root state; every field is guarded by ``lock``."""
+
+    __slots__ = ("lock", "files", "used", "reserved", "last_reconcile", "version")
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.files: dict[str, int] = {}   # relpath -> size in bytes
+        self.used = 0                     # == sum(files.values())
+        self.reserved = 0                 # in-flight write budgets
+        self.last_reconcile: float | None = None  # monotonic; None = never
+        self.version = 0                  # bumped by every files/used mutation
+
+
+def scan_root(root: str) -> dict[str, int]:
+    """Walk one root and return {relpath: size}. This is the seed's O(n)
+    scan, demoted from the per-call hot path to the reconcile path."""
+    files: dict[str, int] = {}
+    for dirpath, _dirnames, filenames in os.walk(root):
+        for fn in filenames:
+            p = os.path.join(dirpath, fn)
+            try:
+                files[os.path.relpath(p, root)] = os.path.getsize(p)
+            except OSError:
+                pass
+    return files
+
+
+class CapacityLedger:
+    """Per-root used/reserved byte accounting, shared by all tiers of one
+    :class:`~repro.core.tiers.Hierarchy`. Locks are sharded by root, so
+    same-level roots (e.g. 6 local SSDs) never contend with each other."""
+
+    def __init__(
+        self,
+        reconcile_interval_s: float = 5.0,
+        telemetry=None,
+    ):
+        self.reconcile_interval_s = reconcile_interval_s
+        self.telemetry = telemetry  # attached by SeaFS after construction
+        self._accounts: dict[str, _RootAccount] = {}
+        self._accounts_lock = threading.Lock()
+
+    # -- account plumbing ----------------------------------------------------
+    def _account(self, root: str) -> _RootAccount:
+        acct = self._accounts.get(root)
+        if acct is None:
+            with self._accounts_lock:
+                acct = self._accounts.setdefault(root, _RootAccount())
+        return acct
+
+    def _record_hit(self) -> None:
+        if self.telemetry is not None:
+            self.telemetry.record_ledger_hit()
+
+    # -- hot-path queries (O(1)) ---------------------------------------------
+    def used_bytes(self, root: str) -> int:
+        """Used bytes under ``root`` — dictionary lookup, reconciling first
+        if the account is stale (or was never initialised)."""
+        acct = self._account(root)
+        self._maybe_reconcile(root, acct)
+        self._record_hit()
+        with acct.lock:
+            return acct.used
+
+    def reserved_bytes(self, root: str) -> int:
+        acct = self._account(root)
+        with acct.lock:
+            return acct.reserved
+
+    def file_size(self, root: str, key: str) -> int | None:
+        acct = self._account(root)
+        with acct.lock:
+            return acct.files.get(key)
+
+    # -- transactional updates -----------------------------------------------
+    def note_written(self, root: str, key: str, nbytes: int) -> None:
+        """A file landed (or changed size) under ``root``."""
+        acct = self._account(root)
+        with acct.lock:
+            acct.used += nbytes - acct.files.get(key, 0)
+            acct.files[key] = nbytes
+            acct.version += 1
+
+    def note_removed(self, root: str, key: str) -> None:
+        """A file was evicted/removed from under ``root``."""
+        acct = self._account(root)
+        with acct.lock:
+            old = acct.files.pop(key, None)
+            if old is not None:
+                acct.used -= old
+                acct.version += 1
+
+    def reserve(self, root: str, nbytes: int) -> Reservation:
+        """Reserve an in-flight write budget against ``root``."""
+        acct = self._account(root)
+        with acct.lock:
+            acct.reserved += nbytes
+        return Reservation(root, nbytes)
+
+    def commit(self, res: Reservation, key: str, nbytes: int) -> None:
+        """Write finished: release the reservation and record the actual
+        on-disk size — one critical section, so free() never double-counts."""
+        acct = self._account(res.root)
+        with acct.lock:
+            if res.active:
+                # clamp: forget() (e.g. Tier.wipe) may have zeroed the
+                # account while this write was in flight — going negative
+                # would permanently overstate free space
+                acct.reserved = max(acct.reserved - res.nbytes, 0)
+                res.active = False
+            acct.used += nbytes - acct.files.get(key, 0)
+            acct.files[key] = nbytes
+            acct.version += 1
+
+    def try_reserve(
+        self, root: str, nbytes: int, *, capacity: int, required: int
+    ) -> Reservation | None:
+        """Atomic admission: re-check eligibility and reserve in one
+        critical section. A plain check-then-:meth:`reserve` is a TOCTOU
+        window — two writers of different keys can both observe enough
+        free space and jointly over-commit a capped root.
+
+        The paper's ``required = n_procs * max_file_size`` headroom exists
+        to cover every *untracked* concurrent writer; reservations track
+        them explicitly, so existing reservations count toward that
+        headroom rather than on top of it: admit iff
+        ``capacity - used >= max(required, reserved + nbytes)``. With no
+        writes in flight this is exactly the paper rule; under concurrency
+        it admits writers that provably fit while keeping
+        ``used + reserved <= capacity`` invariant."""
+        acct = self._account(root)
+        self._maybe_reconcile(root, acct)
+        self._record_hit()
+        with acct.lock:
+            if capacity - acct.used >= max(required, acct.reserved + nbytes):
+                acct.reserved += nbytes
+                return Reservation(root, nbytes)
+        return None
+
+    def release(self, res: Reservation) -> None:
+        """Write abandoned: return the budget without recording a file."""
+        acct = self._account(res.root)
+        with acct.lock:
+            if res.active:
+                acct.reserved = max(acct.reserved - res.nbytes, 0)
+                res.active = False
+
+    # -- reconciliation --------------------------------------------------------
+    def _maybe_reconcile(self, root: str, acct: _RootAccount) -> None:
+        with acct.lock:
+            last = acct.last_reconcile
+        if last is not None and (
+            time.monotonic() - last
+        ) < self.reconcile_interval_s:
+            return
+        self.reconcile(root)
+
+    def reconcile(self, root: str) -> int:
+        """Re-walk ``root`` and rebuild its account from the filesystem,
+        absorbing external writers/removers. Returns the current used-byte
+        count. Reservations are preserved — they track writes that have not
+        reached the disk yet, which a walk cannot see.
+
+        The rebuild is version-guarded: if a transactional update lands
+        while the walk is in flight, the walk's snapshot is stale and is
+        DISCARDED (the deltas are exact for Sea-mediated traffic; external
+        writers get absorbed at the next quiet reconcile). Wholesale
+        replacement from a racing snapshot would silently lose commits."""
+        acct = self._account(root)
+        with acct.lock:
+            v0 = acct.version
+        files = scan_root(root)
+        with acct.lock:
+            if acct.version == v0:
+                acct.files = files
+                acct.used = sum(files.values())
+            acct.last_reconcile = time.monotonic()
+            used = acct.used
+        if self.telemetry is not None:
+            self.telemetry.record_ledger_reconcile()
+        return used
+
+    def forget(self, root: str) -> None:
+        """Drop a root's account (e.g. after ``Tier.wipe``)."""
+        with self._accounts_lock:
+            self._accounts.pop(root, None)
+
+    # -- verification ----------------------------------------------------------
+    def verify(self, root: str) -> tuple[int, int]:
+        """(ledger_used, fresh_walk_used) *without* reconciling — equal iff
+        the ledger is consistent with the filesystem right now."""
+        acct = self._account(root)
+        walk_used = sum(scan_root(root).values())
+        with acct.lock:
+            return acct.used, walk_used
+
+    def snapshot(self) -> dict:
+        out = {}
+        with self._accounts_lock:
+            roots = list(self._accounts.items())
+        for root, acct in roots:
+            with acct.lock:
+                out[root] = {
+                    "used": acct.used,
+                    "reserved": acct.reserved,
+                    "files": len(acct.files),
+                }
+        return out

@@ -8,12 +8,20 @@ Sea cannot predict output sizes, so it reserves worst-case room for every
 concurrent writer ("the number of threads multiplied by the file size does
 not exceed storage space"). Same-level roots are picked by random shuffle:
 no metadata server, no locking — decentralization over optimal packing.
+
+With the capacity ledger attached (the default), ``free`` is an O(1)
+counter lookup and additionally discounts *in-flight write reservations*:
+each open-for-write holds a ``max_file_size`` budget against its root
+(:meth:`reserve_write`) until the close commits the actual size. This
+tracks the ``n_procs * max_file_size`` headroom per-root as writes happen,
+instead of re-deriving it from a filesystem walk on every call.
 """
 
 from __future__ import annotations
 
 import random
 
+from .ledger import Reservation
 from .tiers import Hierarchy, Tier
 
 
@@ -38,7 +46,13 @@ class PlacementPolicy:
     def eligible_roots(self, tier: Tier) -> list[str]:
         roots = list(tier.roots)
         self.rng.shuffle(roots)  # paper: "selected by Sea via a random shuffling"
-        return [r for r in roots if tier.free_bytes(r) >= self.required_bytes]
+        return [
+            r
+            for r in roots
+            if tier.admissible(
+                r, required=self.required_bytes, nbytes=self.max_file_size
+            )
+        ]
 
     def select(self) -> tuple[Tier, str]:
         """Fastest tier/root with sufficient space; the base tier is the
@@ -50,6 +64,44 @@ class PlacementPolicy:
         base = self.hierarchy.base
         roots = self.eligible_roots(base)
         return base, roots[0] if roots else base.roots[0]
+
+    # -- in-flight write budgets (ledger-backed; no-ops when stateless) -----
+    def reserve_write(self, tier: Tier, root: str) -> Reservation | None:
+        """Hold a worst-case (``max_file_size``) budget for one in-flight
+        write so concurrent writers cannot collectively over-commit a root
+        whose bytes have not reached the disk yet."""
+        return tier.reserve_write(root, self.max_file_size)
+
+    def acquire_write(
+        self, tier: Tier, root: str
+    ) -> tuple[bool, Reservation | None]:
+        """Admission for a *new* file on a selected root: atomically
+        re-check eligibility and reserve. Returns (admitted, reservation).
+        Capped roots use the ledger's single-critical-section check; on a
+        lost race the caller re-selects. Uncapped roots (statvfs-backed)
+        cannot meaningfully over-commit at this scale, so they reserve
+        unconditionally."""
+        if tier.ledger is None:
+            return True, None
+        if tier.spec.capacity is None:
+            return True, tier.reserve_write(root, self.max_file_size)
+        res = tier.ledger.try_reserve(
+            root,
+            self.max_file_size,
+            capacity=tier.spec.capacity,
+            required=self.required_bytes,
+        )
+        return (res is not None), res
+
+    def commit_write(
+        self, tier: Tier, res: Reservation | None, root: str, key: str, nbytes: int
+    ) -> None:
+        """Write finished: swap the reservation for the actual file size."""
+        tier.commit_write(res, root, key, nbytes)
+
+    def release_write(self, tier: Tier, res: Reservation | None) -> None:
+        """Write abandoned: return the budget untouched."""
+        tier.release_write(res)
 
     def select_cache_for_prefetch(self, nbytes: int) -> tuple[Tier, str] | None:
         """Fastest cache root that can hold ``nbytes`` (prefetch staging)."""

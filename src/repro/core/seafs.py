@@ -35,14 +35,27 @@ class _SeaFile:
     """Proxy around a real file object: forwards everything, and notifies
     SeaFS on close so the flush-and-evict daemon can pick the file up.
     Open files are refcounted — the flusher never moves a busy file
-    (beyond-paper fix for the paper's §5.5 known limitation)."""
+    (beyond-paper fix for the paper's §5.5 known limitation). A write
+    handle additionally carries its capacity reservation, committed (with
+    the actual on-disk size) when the file closes."""
 
-    def __init__(self, fs: "SeaFS", key: str, raw, tier: Tier, writing: bool):
+    def __init__(
+        self,
+        fs: "SeaFS",
+        key: str,
+        raw,
+        tier: Tier,
+        writing: bool,
+        real: str,
+        reservation=None,
+    ):
         self._fs = fs
         self._key = key
         self._raw = raw
         self._tier = tier
         self._writing = writing
+        self._real = real
+        self._reservation = reservation
         self._t0 = time.perf_counter()
         self._closed = False
 
@@ -70,7 +83,15 @@ class _SeaFile:
             self._raw.close()
         finally:
             dt = time.perf_counter() - self._t0
-            self._fs._on_close(self._key, self._tier, self._writing, pos, dt)
+            self._fs._on_close(
+                self._key,
+                self._tier,
+                self._writing,
+                pos,
+                dt,
+                self._real,
+                self._reservation,
+            )
 
     @property
     def closed(self):
@@ -87,6 +108,8 @@ class SeaFS:
         self.config = config
         self.hierarchy: Hierarchy = config.build_hierarchy()
         self.telemetry = telemetry or Telemetry()
+        if self.hierarchy.ledger is not None:
+            self.hierarchy.ledger.telemetry = self.telemetry
         self.policy = PlacementPolicy(
             self.hierarchy,
             max_file_size=config.max_file_size,
@@ -136,22 +159,57 @@ class SeaFS:
         hierarchy must never hold two divergent copies); otherwise select
         the fastest tier with space.
         """
+        tier, real, res = self._resolve_write(key, reserve=False)
+        assert res is None
+        return tier, real
+
+    def _resolve_write(
+        self, key: str, *, reserve: bool
+    ) -> tuple[Tier, str, object | None]:
+        """``resolve_write`` plus (optionally) an atomic admission: the
+        eligibility re-check and the in-flight reservation happen in one
+        critical section per root, and a lost race re-selects — so
+        concurrent writers of *different* keys can never jointly
+        over-commit a capped root."""
         with self.key_lock(key):
             found = self.hierarchy.locate(key)
             if found is not None:
-                return found
-            tier, root = self.policy.select()
-            if (
-                self.config.lru_evict
-                and tier is self.hierarchy.base
-                and self.hierarchy.cache_tiers
-            ):
-                freed = self._lru_make_room()
-                if freed:
-                    tier, root = self.policy.select()
+                tier, real = found
+                res = None
+                if reserve:
+                    root = tier.root_of(real)
+                    if root is not None:
+                        # overwrite in place: no admission, just hold the
+                        # in-flight budget until close commits the size
+                        res = self.policy.reserve_write(tier, root)
+                return tier, real, res
+            res = None
+            for _attempt in range(8):
+                tier, root = self.policy.select()
+                if (
+                    self.config.lru_evict
+                    and tier is self.hierarchy.base
+                    and self.hierarchy.cache_tiers
+                ):
+                    freed = self._lru_make_room()
+                    if freed:
+                        tier, root = self.policy.select()
+                if not reserve:
+                    break
+                if tier is self.hierarchy.base:
+                    # unconditional fallback: there is nowhere slower to go
+                    res = self.policy.reserve_write(tier, root)
+                    break
+                admitted, res = self.policy.acquire_write(tier, root)
+                if admitted:
+                    break
+            else:
+                tier = self.hierarchy.base
+                root = tier.roots[0]
+                res = self.policy.reserve_write(tier, root)
             real = os.path.join(root, key)
             os.makedirs(os.path.dirname(real), exist_ok=True)
-            return tier, real
+            return tier, real, res
 
     def resolve(self, path: str, mode: str = "r") -> str:
         """Public path-translation API (for tools that want the real path
@@ -177,8 +235,9 @@ class SeaFS:
         key = self.key_of(path)
         writing = _is_write_mode(mode)
         with self.key_lock(key):
+            reservation = None
             if writing:
-                tier, real = self.resolve_write(key)
+                tier, real, reservation = self._resolve_write(key, reserve=True)
             else:
                 found = self.resolve_read(key)
                 if found is None:
@@ -187,22 +246,50 @@ class SeaFS:
                         os.path.join(self.hierarchy.base.roots[0], key), mode, **kw
                     )
                 tier, real = found
-            raw = io.open(real, mode, **kw)
+            try:
+                raw = io.open(real, mode, **kw)
+            except Exception:
+                if reservation is not None:
+                    self.policy.release_write(tier, reservation)
+                raise
             with self._lock:
                 self._open_counts[key] += 1
                 self._access_clock[key] = time.monotonic()
-        return _SeaFile(self, key, raw, tier, writing)
+        return _SeaFile(self, key, raw, tier, writing, real, reservation)
 
-    def _on_close(self, key: str, tier: Tier, writing: bool, nbytes: int, dt: float):
+    def _on_close(
+        self,
+        key: str,
+        tier: Tier,
+        writing: bool,
+        nbytes: int,
+        dt: float,
+        real: str | None = None,
+        reservation=None,
+    ):
+        if writing:
+            if real is not None:
+                # commit the actual on-disk size against the reservation
+                # BEFORE dropping the open-count: once the count hits zero
+                # the flusher may evict the file, and a late commit would
+                # resurrect a ghost ledger entry.
+                root = tier.root_of(real)
+                try:
+                    actual = os.path.getsize(real)
+                except OSError:
+                    actual = max(nbytes, 0)
+                if root is not None:
+                    self.policy.commit_write(tier, reservation, root, key, actual)
+                else:
+                    self.policy.release_write(tier, reservation)
+            self.telemetry.record_io(tier.name, written=max(nbytes, 0), seconds=dt)
+        else:
+            self.telemetry.record_io(tier.name, read=max(nbytes, 0), seconds=dt)
         with self._lock:
             self._open_counts[key] -= 1
             if self._open_counts[key] <= 0:
                 del self._open_counts[key]
             remaining = self._open_counts.get(key, 0)
-        if writing:
-            self.telemetry.record_io(tier.name, written=max(nbytes, 0), seconds=dt)
-        else:
-            self.telemetry.record_io(tier.name, read=max(nbytes, 0), seconds=dt)
         if remaining == 0:
             for fn in self._close_listeners:
                 fn(key, writing)
@@ -253,10 +340,13 @@ class SeaFS:
         with self.key_lock(key):
             for i in range(n_parts):
                 root = roots[i % len(roots)]
-                real = os.path.join(root, f"{key}.sea_stripe.{i:04d}")
+                pkey = f"{key}.sea_stripe.{i:04d}"
+                real = os.path.join(root, pkey)
                 os.makedirs(os.path.dirname(real), exist_ok=True)
+                part = data[i * chunk:(i + 1) * chunk]
                 with open(real, "wb") as f:
-                    f.write(data[i * chunk:(i + 1) * chunk])
+                    f.write(part)
+                tier.note_written(root, pkey, len(part))
             manifest = {"n_parts": n_parts, "chunk": chunk, "total": len(data),
                         "tier": tier.name}
             with self.open(path + _STRIPE_MANIFEST_SUFFIX, "w") as f:
@@ -299,6 +389,15 @@ class SeaFS:
                 if os.path.isdir(p):
                     return p
         return os.path.join(self.hierarchy.base.roots[0], key)
+
+    def isfile(self, path: str) -> bool:
+        """True iff the path resolves to a *regular file* on some tier.
+        (``locate`` uses ``lexists``, which is also true for directories —
+        checking the located real path keeps POSIX ``isfile`` semantics.)"""
+        if not self.is_sea_path(path):
+            return os.path.isfile(path)
+        found = self.hierarchy.locate(self.key_of(path))
+        return found is not None and os.path.isfile(found[1])
 
     def stat(self, path: str):
         if not self.is_sea_path(path):
@@ -353,6 +452,9 @@ class SeaFS:
                 real = tier.locate(key)
                 if real is not None:
                     os.remove(real)
+                    root = tier.root_of(real)
+                    if root is not None:
+                        tier.note_removed(root, key)
                     removed = True
             if not removed:
                 raise FileNotFoundError(path)
@@ -380,13 +482,36 @@ class SeaFS:
                     old = t.locate(dkey)
                     if old is not None and os.path.abspath(old) != os.path.abspath(dreal):
                         os.remove(old)
+                        oroot = t.root_of(old)
+                        if oroot is not None:
+                            t.note_removed(oroot, dkey)
                 os.replace(real, dreal)
+                sroot = tier.root_of(real)
+                if sroot is not None:
+                    tier.note_removed(sroot, skey)
+                owner = self.hierarchy.owner_of(dreal)
+                if owner is not None:
+                    try:
+                        owner[0].note_written(
+                            owner[1], dkey, os.path.getsize(dreal)
+                        )
+                    except OSError:
+                        pass
             return
         # crossing the mount boundary: copy semantics via resolve
         rsrc = self.resolve(src, "r")
         rdst = self.resolve(dst, "w")
         os.makedirs(os.path.dirname(rdst), exist_ok=True)
         shutil.copyfile(rsrc, rdst)
+        if d_in:
+            owner = self.hierarchy.owner_of(rdst)
+            if owner is not None:
+                try:
+                    owner[0].note_written(
+                        owner[1], self.key_of(dst), os.path.getsize(rdst)
+                    )
+                except OSError:
+                    pass
         if s_in:
             self.remove(src)
         else:
@@ -397,7 +522,7 @@ class SeaFS:
         """Evict least-recently-used closed files from cache tiers until a
         cache root becomes eligible again. Only files whose mode is KEEP or
         REMOVE (i.e. not awaiting flush) are candidates."""
-        candidates: list[tuple[float, str, str]] = []  # (atime, key, real)
+        candidates: list = []  # (atime, key, real, tier, root)
         for tier in self.hierarchy.cache_tiers:
             for root in tier.roots:
                 for dirpath, _d, files in os.walk(root):
@@ -411,16 +536,17 @@ class SeaFS:
                         )
                         if mode in (Mode.KEEP, Mode.REMOVE):
                             at = self._access_clock.get(key, 0.0)
-                            candidates.append((at, key, real))
-        candidates.sort()
+                            candidates.append((at, key, real, tier, root))
+        candidates.sort(key=lambda c: (c[0], c[1], c[2]))
         freed_any = False
-        for _at, key, real in candidates:
+        for _at, key, real, vtier, vroot in candidates:
             with self.key_lock(key):
                 if self.open_count(key):
                     continue
                 try:
                     nbytes = os.path.getsize(real)
                     os.remove(real)
+                    vtier.note_removed(vroot, key)
                     self.telemetry.record_evict(nbytes)
                     freed_any = True
                 except OSError:
@@ -450,7 +576,9 @@ class SeaFS:
             tmp = dst + ".sea_tmp"
             shutil.copyfile(real, tmp)
             os.replace(tmp, dst)
-            self.telemetry.record_flush(os.path.getsize(dst))
+            nbytes = os.path.getsize(dst)
+            self.hierarchy.base.note_written(base_root, key, nbytes)
+            self.telemetry.record_flush(nbytes)
             return dst
 
     # -- introspection ----------------------------------------------------------

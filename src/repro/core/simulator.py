@@ -117,6 +117,7 @@ class _Node:
         self.disk_rr = 0
         self.dirty_budget = 0.0  # fast page-cache write budget (Lustre base)
         self.flush_q: deque = deque()
+        self.n_cached = 0        # files resident on this node's cache tiers
 
 
 class Simulator:
@@ -130,6 +131,9 @@ class Simulator:
         dirty_cap_bytes: float = 44 * GiB,
         evict_intermediates: bool = False,   # beyond-paper: reuse cache space
         flushers_per_node: int | None = None,
+        ledger_placement: bool = True,       # O(1) ledger vs O(n) re-walk
+        placement_probe_s: float = 0.0,      # fixed per-decision cost
+        placement_scan_s_per_file: float = 0.0,  # per-cached-file walk cost
     ):
         assert system in ("lustre", "sea", "sea-flushall")
         self.cl = cluster
@@ -138,6 +142,14 @@ class Simulator:
         self.compute_s = compute_s_per_iter
         self.dirty_cap = dirty_cap_bytes
         self.evict_intermediates = evict_intermediates
+        # Placement-decision cost model: with the capacity ledger the
+        # eligibility check is a counter lookup (constant `probe` cost);
+        # the seed's stateless design re-walked the cache root, costing
+        # `scan_s_per_file * n_cached` per decision. Defaults keep the
+        # cost at zero so the paper-calibrated experiments are unchanged.
+        self.ledger_placement = ledger_placement
+        self.placement_probe_s = placement_probe_s
+        self.placement_scan_s_per_file = placement_scan_s_per_file
         # One Sea instance per application process means one flush-and-evict
         # worker per process (paper §5.1: "if Sea is launched many times on
         # a given node, there will be many flush and evict processes") —
@@ -182,17 +194,27 @@ class Simulator:
         return (f"net_out{node}", "lus_net_in", "lus_backend_w")
 
     # -- Sea placement (same policy as repro.core.placement) --------------------
+    def placement_cost_s(self, nd: _Node) -> float:
+        """Seconds one placement decision costs on this node: O(1) with the
+        ledger, O(n_cached) with the seed's stateless re-walk."""
+        cost = self.placement_probe_s
+        if not self.ledger_placement:
+            cost += self.placement_scan_s_per_file * nd.n_cached
+        return cost
+
     def sea_place_write(self, nd: _Node) -> tuple[str, tuple[str, ...]]:
         cl, F = self.cl, self.w.F
         reserve = cl.p * F
         if nd.tmpfs_used + F + reserve <= cl.t:
             nd.tmpfs_used += F
+            nd.n_cached += 1
             return "tmpfs", (f"mem_w{nd.idx}",)
         for probe in range(cl.g):
             j = (nd.disk_rr + probe) % cl.g
             if nd.disk_used[j] + F + reserve <= cl.r:
                 nd.disk_rr = (j + 1) % cl.g
                 nd.disk_used[j] += F
+                nd.n_cached += 1
                 return f"disk{j}", (f"disk{nd.idx}_{j}",)
         return "lustre", self.lustre_write_path(nd.idx)
 
@@ -219,9 +241,13 @@ class Simulator:
                 if self.system == "lustre":
                     tier, path = self._lustre_app_write(nd)
                 else:
+                    pcost = self.placement_cost_s(nd)
+                    if pcost > 0.0:
+                        yield ComputeOp(pcost)
                     tier, path = self.sea_place_write(nd)
                     if self.evict_intermediates and i > 1 and last_tier == "tmpfs":
                         nd.tmpfs_used = max(nd.tmpfs_used - w.F, 0.0)
+                        nd.n_cached = max(nd.n_cached - 1, 0)
                 wcap = self.cl.L_stream_w if tier == "lustre" else 0.0
                 self.bytes_by_tier[tier] += w.F
                 yield WriteOp(path, w.F, cap=wcap)

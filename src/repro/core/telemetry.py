@@ -35,6 +35,8 @@ class Telemetry:
     prefetched_bytes: int = 0
     redirect_hits: int = 0     # paths under the mount that Sea translated
     passthrough: int = 0       # paths outside the mount (left untouched)
+    ledger_hits: int = 0       # O(1) capacity queries answered by the ledger
+    ledger_reconciles: int = 0  # full-root walks (reconcile path only)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def record_io(
@@ -72,6 +74,14 @@ class Telemetry:
             else:
                 self.passthrough += 1
 
+    def record_ledger_hit(self) -> None:
+        with self._lock:
+            self.ledger_hits += 1
+
+    def record_ledger_reconcile(self) -> None:
+        with self._lock:
+            self.ledger_reconciles += 1
+
     def snapshot(self) -> dict:
         with self._lock:
             return {
@@ -85,6 +95,8 @@ class Telemetry:
                 "prefetched_bytes": self.prefetched_bytes,
                 "redirect_hits": self.redirect_hits,
                 "passthrough": self.passthrough,
+                "ledger_hits": self.ledger_hits,
+                "ledger_reconciles": self.ledger_reconciles,
             }
 
 

@@ -15,6 +15,8 @@ import os
 import shutil
 from dataclasses import dataclass, field
 
+from .ledger import CapacityLedger, Reservation
+
 
 @dataclass
 class TierSpec:
@@ -40,11 +42,21 @@ class TierSpec:
 
 
 class Tier:
-    """A live tier: spec + capacity probing over its roots."""
+    """A live tier: spec + capacity accounting over its roots.
 
-    def __init__(self, spec: TierSpec, level: int):
+    With a :class:`~repro.core.ledger.CapacityLedger` attached (the
+    default through :class:`Hierarchy`), ``used_bytes``/``free_bytes``
+    are O(1) counter lookups; the full ``os.walk`` survives only as the
+    ledger's reconcile path. ``ledger=None`` restores the seed's
+    stateless per-call rescan (used by benchmarks as the baseline).
+    """
+
+    def __init__(
+        self, spec: TierSpec, level: int, ledger: CapacityLedger | None = None
+    ):
         self.spec = spec
         self.level = level
+        self.ledger = ledger
         for root in spec.roots:
             os.makedirs(root, exist_ok=True)
 
@@ -61,9 +73,9 @@ class Tier:
         return self.spec.persistent
 
     # -- capacity ----------------------------------------------------------
-    def used_bytes(self, root: str) -> int:
-        """Bytes used under one root (stateless re-scan, as in the paper:
-        the file system itself is the source of truth)."""
+    def scan_used_bytes(self, root: str) -> int:
+        """Bytes used under one root by a full re-scan (the seed's per-call
+        behaviour; now the reconcile/baseline path only)."""
         total = 0
         for dirpath, _dirnames, filenames in os.walk(root):
             for fn in filenames:
@@ -73,22 +85,92 @@ class Tier:
                     pass
         return total
 
+    def used_bytes(self, root: str) -> int:
+        """Bytes used under one root — O(1) via the ledger when attached."""
+        if self.ledger is not None:
+            return self.ledger.used_bytes(root)
+        return self.scan_used_bytes(root)
+
+    def reserved_bytes(self, root: str) -> int:
+        """In-flight write budget currently held against one root."""
+        if self.ledger is not None:
+            return self.ledger.reserved_bytes(root)
+        return 0
+
     def free_bytes(self, root: str) -> int:
-        """Free bytes on one root, honouring the configured cap if any.
+        """Free bytes on one root, honouring the configured cap if any and
+        discounting in-flight write reservations.
 
         The paper: "Sea queries all the available file systems directly to
-        determine the amount of available space."
+        determine the amount of available space." — the ledger caches that
+        query and reconciles against the file system periodically.
         """
+        reserved = self.reserved_bytes(root)
         if self.spec.capacity is not None:
-            return max(self.spec.capacity - self.used_bytes(root), 0)
+            return max(self.spec.capacity - self.used_bytes(root) - reserved, 0)
         try:
             st = os.statvfs(root)
-            return st.f_bavail * st.f_frsize
+            return max(st.f_bavail * st.f_frsize - reserved, 0)
         except OSError:
             return 0
 
     def total_free_bytes(self) -> int:
         return sum(self.free_bytes(r) for r in self.roots)
+
+    def admissible(self, root: str, *, required: int, nbytes: int) -> bool:
+        """Would a new ``nbytes`` write be admitted on this root?  Mirrors
+        :meth:`CapacityLedger.try_reserve`: existing reservations count
+        toward the ``required`` worst-case headroom rather than on top of
+        it, so one in-flight writer does not disqualify a root that still
+        provably fits another."""
+        if self.spec.capacity is None:
+            return self.free_bytes(root) >= required
+        reserved = self.reserved_bytes(root)
+        return self.spec.capacity - self.used_bytes(root) >= max(
+            required, reserved + nbytes
+        )
+
+    # -- ledger notifications (no-ops when running stateless) ---------------
+    def note_written(self, root: str, key: str, nbytes: int) -> None:
+        if self.ledger is not None:
+            self.ledger.note_written(root, key, nbytes)
+
+    def note_removed(self, root: str, key: str) -> None:
+        if self.ledger is not None:
+            self.ledger.note_removed(root, key)
+
+    def reserve_write(self, root: str, nbytes: int) -> Reservation | None:
+        if self.ledger is not None:
+            return self.ledger.reserve(root, nbytes)
+        return None
+
+    def commit_write(
+        self, res: Reservation | None, root: str, key: str, nbytes: int
+    ) -> None:
+        if self.ledger is None:
+            return
+        if res is not None:
+            self.ledger.commit(res, key, nbytes)
+        else:
+            self.ledger.note_written(root, key, nbytes)
+
+    def release_write(self, res: Reservation | None) -> None:
+        if self.ledger is not None and res is not None:
+            self.ledger.release(res)
+
+    def reconcile(self) -> None:
+        """On-demand reconciliation of every root of this tier."""
+        if self.ledger is not None:
+            for root in self.roots:
+                self.ledger.reconcile(root)
+
+    def root_of(self, path: str) -> str | None:
+        """The root of this tier that ``path`` lives under, if any."""
+        ap = os.path.abspath(path)
+        for root in self.roots:
+            if ap == root or ap.startswith(root + os.sep):
+                return root
+        return None
 
     def locate(self, relpath: str) -> str | None:
         """Return the real path of ``relpath`` if present on this tier."""
@@ -103,6 +185,8 @@ class Tier:
             if os.path.isdir(root):
                 shutil.rmtree(root, ignore_errors=True)
             os.makedirs(root, exist_ok=True)
+            if self.ledger is not None:
+                self.ledger.forget(root)
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"Tier(level={self.level}, name={self.name!r}, roots={self.roots})"
@@ -110,12 +194,21 @@ class Tier:
 
 @dataclass
 class Hierarchy:
-    """Ordered collection of tiers, fastest (level 0) first."""
+    """Ordered collection of tiers, fastest (level 0) first. All tiers
+    share one :class:`CapacityLedger` (sharded internally by root)."""
 
     tiers: list[Tier] = field(default_factory=list)
+    ledger: CapacityLedger | None = None
 
     @classmethod
-    def from_specs(cls, specs: list[TierSpec]) -> "Hierarchy":
+    def from_specs(
+        cls,
+        specs: list[TierSpec],
+        *,
+        ledger: CapacityLedger | None = None,
+        use_ledger: bool = True,
+        reconcile_interval_s: float = 5.0,
+    ) -> "Hierarchy":
         if len(specs) < 2:
             raise ValueError(
                 "Sea requires at least two storage devices: a fast cache "
@@ -123,7 +216,22 @@ class Hierarchy:
             )
         if not specs[-1].persistent:
             specs[-1].persistent = True  # last tier is the base by definition
-        return cls([Tier(s, i) for i, s in enumerate(specs)])
+        if ledger is None and use_ledger:
+            ledger = CapacityLedger(reconcile_interval_s=reconcile_interval_s)
+        return cls([Tier(s, i, ledger) for i, s in enumerate(specs)], ledger)
+
+    def owner_of(self, path: str) -> tuple[Tier, str] | None:
+        """The (tier, root) a real path lives under, if any."""
+        for tier in self.tiers:
+            root = tier.root_of(path)
+            if root is not None:
+                return tier, root
+        return None
+
+    def reconcile(self) -> None:
+        """On-demand reconciliation of every root of every tier."""
+        for tier in self.tiers:
+            tier.reconcile()
 
     @property
     def base(self) -> Tier:

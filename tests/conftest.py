@@ -1,0 +1,13 @@
+"""Shared test plumbing.
+
+Ensures the tests directory itself is importable so test modules can fall
+back to the local ``_hypothesis_stub`` when `hypothesis` is not installed
+(the container's tier-1 environment does not ship it).
+"""
+
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)

@@ -4,8 +4,12 @@ import os
 import threading
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dependency: property tests skip cleanly
+    from _hypothesis_stub import given, settings, st
 
 from repro.core import (
     Mode,
@@ -286,6 +290,43 @@ def test_seamount_restores_builtins(tmp_path):
     import builtins
 
     assert builtins.open is orig_open
+
+
+def test_seamount_isfile_false_for_directories(tmp_path):
+    """Tier.locate uses lexists (true for dirs): patched os.path.isfile must
+    still report False for directories under the mount."""
+    fs = SeaFS(make_config(tmp_path))
+    p = os.path.join(fs.mount, "d/f.txt")
+    with SeaMount(fs):
+        with open(p, "w") as f:
+            f.write("z")
+        assert os.path.isfile(p)
+        assert not os.path.isfile(os.path.dirname(p))
+        assert not os.path.isfile(os.path.join(fs.mount, "missing.txt"))
+
+
+def test_seamount_handler_errors_propagate(tmp_path):
+    """A legitimate error raised by the Sea handler must propagate, not be
+    swallowed by the probe guard and silently re-executed on the original."""
+    fs = SeaFS(make_config(tmp_path))
+    sm = SeaMount(fs)
+
+    def boom(path, *a, **kw):
+        raise ValueError("sea handler failure")
+
+    wrapped = sm._path_fn(lambda p, *a, **kw: "orig-ran", boom)
+    with pytest.raises(ValueError, match="sea handler failure"):
+        wrapped(os.path.join(fs.mount, "x"))
+    # outside the mount the original still runs
+    assert wrapped(str(tmp_path / "plain")) == "orig-ran"
+
+    def boom2(src, dst, *a, **kw):
+        raise ValueError("sea two-path failure")
+
+    wrapped2 = sm._two_path_fn(lambda s, d, *a, **kw: "orig-ran", boom2)
+    with pytest.raises(ValueError, match="sea two-path failure"):
+        wrapped2(os.path.join(fs.mount, "a"), os.path.join(fs.mount, "b"))
+    assert wrapped2(str(tmp_path / "p"), str(tmp_path / "q")) == "orig-ran"
 
 
 def test_seamount_os_ops(tmp_path):

@@ -2,8 +2,12 @@
 validated against the paper's reported results (§4)."""
 
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:  # optional dependency: property tests skip cleanly
+    from _hypothesis_stub import given, settings, st
 
 from repro.core.model import (
     ClusterSpec,
