@@ -1,0 +1,119 @@
+"""CI perf-regression gate for the placement/multiproc benchmarks.
+
+Compares a freshly produced ``BENCH_pr2.json`` (written by
+``placement_bench --json`` + ``multiproc_bench --json``, merged by the CI
+workflow) against the committed ``benchmarks/BENCH_baseline.json``.
+
+The structural gates are machine-independent and strict:
+  * select() must stay O(1)-flat: ledger select cost at the largest
+    population <= FLATNESS_X times its cost at the smallest,
+  * ledger end-to-end open speedup over the walk at 10k files >= 5x,
+  * multi-process run never over-committed the capped root,
+  * multi-process aggregate throughput did not collapse (>= 0.5x 1-proc).
+
+Absolute timings vary with runner hardware, so against the baseline only a
+gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
+slower than the committed number.
+
+``python -m benchmarks.check_regression BENCH_pr2.json [baseline.json]``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+FLATNESS_X = 3.0      # ledger select at 10k files vs at 100 files
+MIN_OPEN_SPEEDUP = 5.0
+MIN_SCALING = 0.5     # multiproc aggregate vs single-process
+ABS_TOLERANCE_X = 5.0  # gross-regression multiplier vs committed baseline
+
+_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
+
+
+def _row(rows: list[dict], name: str) -> dict | None:
+    return next((r for r in rows if r["name"] == name), None)
+
+
+def check(current: dict, baseline: dict | None) -> list[str]:
+    failures: list[str] = []
+    rows = current["placement"]["rows"]
+
+    sizes = sorted(
+        int(r["name"].rsplit("_", 1)[1][:-1])
+        for r in rows
+        if r["name"].startswith("placement_select_ledger_")
+    )
+    small, big = sizes[0], sizes[-1]
+    s_small = _row(rows, f"placement_select_ledger_{small}f")["us_per_call"]
+    s_big = _row(rows, f"placement_select_ledger_{big}f")["us_per_call"]
+    if s_big > FLATNESS_X * s_small:
+        failures.append(
+            f"select() not O(1)-flat: {s_big}us at {big} files vs "
+            f"{s_small}us at {small} (allowed {FLATNESS_X}x)"
+        )
+
+    speedup = current["placement"]["open_speedup"]
+    if speedup < MIN_OPEN_SPEEDUP:
+        failures.append(
+            f"ledger open speedup {speedup}x at {big} files "
+            f"< required {MIN_OPEN_SPEEDUP}x"
+        )
+
+    for scale in current["multiproc"]["scales"]:
+        if scale["overcommitted"]:
+            failures.append(
+                f"capped root over-committed at {scale['n_procs']} procs: "
+                f"{scale['cache_used_bytes']} > {scale['capacity']}"
+            )
+        if scale["files_placed"] != scale["files_written"]:
+            failures.append(
+                f"lost files at {scale['n_procs']} procs: "
+                f"{scale['files_written'] - scale['files_placed']}"
+            )
+    top = current["multiproc"]["scales"][-1]
+    if top["scaling_vs_1proc"] < MIN_SCALING:
+        failures.append(
+            f"multiproc throughput collapsed: {top['scaling_vs_1proc']}x "
+            f"at {top['n_procs']} procs < {MIN_SCALING}x"
+        )
+
+    if baseline is not None:
+        base_rows = baseline["placement"]["rows"]
+        for r in rows:
+            if "ledger" not in r["name"]:
+                continue  # walk timings are the baseline being beaten
+            b = _row(base_rows, r["name"])
+            if b and r["us_per_call"] > ABS_TOLERANCE_X * b["us_per_call"]:
+                failures.append(
+                    f"{r['name']}: {r['us_per_call']}us > "
+                    f"{ABS_TOLERANCE_X}x baseline {b['us_per_call']}us"
+                )
+    return failures
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        print("usage: check_regression.py BENCH_pr2.json [baseline.json]")
+        raise SystemExit(2)
+    with open(argv[0]) as f:
+        current = json.load(f)
+    baseline_path = argv[1] if len(argv) > 1 else _BASELINE
+    baseline = None
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    else:
+        print(f"note: no baseline at {baseline_path}; structural gates only")
+    failures = check(current, baseline)
+    for msg in failures:
+        print(f"REGRESSION: {msg}")
+    if not failures:
+        print("perf gate passed")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

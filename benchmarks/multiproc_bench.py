@@ -1,0 +1,191 @@
+"""Multi-process placement benchmark: N real processes, one capped hierarchy.
+
+This is the acceptance scenario of the shared-ledger PR: ``n_procs``
+independent ``multiprocessing`` workers hammer one capped root through
+their own ``SeaFS`` (``shared_ledger=True``), and afterwards the root is
+walk-verified against its capacity — the cross-process reservation
+protocol must make joint over-commit impossible, not just unlikely.
+
+Open throughput is measured at 1 / 2 / max workers. Scaling is reported
+relative to the single-process run; the hard gate is *no collapse*
+(aggregate throughput at max workers >= 0.5x single-process) because every
+admission serializes through one fcntl critical section per root —
+near-linear scaling needs the lock section to be small relative to the
+I/O, which holds on real nodes but not on syscall-throttled CI sandboxes.
+Anything below the collapse floor (or a single over-committed byte) fails.
+
+``PYTHONPATH=src python -m benchmarks.multiproc_bench [--json PATH]``
+prints the same ``name,value,derived`` CSV as the other benches.
+"""
+
+from __future__ import annotations
+
+import json
+import multiprocessing as mp
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+from repro.core import SeaConfig, SeaFS, TierSpec
+from repro.core.ledger import LEDGER_DIRNAME
+
+N_PROCS = 8
+FILES_PER_PROC = 150
+FILE_SIZE = 1 << 12          # 4 KiB writes
+CAPACITY = 1 << 22           # 4 MiB capped root -> spill is exercised
+COLLAPSE_FLOOR = 0.5         # aggregate throughput vs single-process
+
+_ctx = mp.get_context("fork")
+
+
+def _config(workdir: str, n_procs: int) -> SeaConfig:
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(
+                name="cache",
+                roots=(os.path.join(workdir, "cache"),),
+                capacity=CAPACITY,
+            ),
+            TierSpec(
+                name="pfs",
+                roots=(os.path.join(workdir, "pfs"),),
+                persistent=True,
+            ),
+        ],
+        max_file_size=FILE_SIZE,
+        n_procs=n_procs,
+        shared_ledger=True,
+        ledger_reconcile_interval_s=1e9,  # pure cross-process delta tracking
+    )
+
+
+def _worker(workdir: str, n_procs: int, idx: int, barrier) -> None:
+    fs = SeaFS(_config(workdir, n_procs))
+    payload = b"x" * FILE_SIZE
+    barrier.wait(timeout=60)
+    for j in range(FILES_PER_PROC):
+        p = os.path.join(fs.mount, f"w{idx}_{j}.bin")
+        with fs.open(p, "wb") as f:
+            f.write(payload)
+
+
+def _walk_used(root: str) -> int:
+    total = 0
+    for dirpath, dirnames, files in os.walk(root):
+        if LEDGER_DIRNAME in dirnames:
+            dirnames.remove(LEDGER_DIRNAME)
+        for fn in files:
+            total += os.path.getsize(os.path.join(dirpath, fn))
+    return total
+
+
+def _run_scale(n_procs: int) -> dict:
+    workdir = tempfile.mkdtemp(prefix="sea_multiproc_bench_")
+    try:
+        barrier = _ctx.Barrier(n_procs + 1)
+        procs = [
+            _ctx.Process(target=_worker, args=(workdir, n_procs, i, barrier))
+            for i in range(n_procs)
+        ]
+        for p in procs:
+            p.start()
+        barrier.wait(timeout=60)
+        t0 = time.perf_counter()
+        for p in procs:
+            p.join(timeout=600)
+        dt = time.perf_counter() - t0
+        if any(p.exitcode != 0 for p in procs):
+            raise RuntimeError(f"worker crashed at scale {n_procs}")
+        cache_root = os.path.join(workdir, "cache")
+        used = _walk_used(cache_root)
+        n_total = n_procs * FILES_PER_PROC
+        # every file must exist somewhere in the hierarchy (cache or spill)
+        placed = _count_placed(workdir)
+        return {
+            "n_procs": n_procs,
+            "opens_per_s": round(n_total / dt, 1),
+            "cache_used_bytes": used,
+            "capacity": CAPACITY,
+            "overcommitted": used > CAPACITY,
+            "files_written": n_total,
+            "files_placed": placed,
+        }
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+def _count_placed(workdir: str) -> int:
+    n = 0
+    for tier_dir in ("cache", "pfs"):
+        root = os.path.join(workdir, tier_dir)
+        for dirpath, dirnames, files in os.walk(root):
+            if LEDGER_DIRNAME in dirnames:
+                dirnames.remove(LEDGER_DIRNAME)
+            n += sum(1 for fn in files if fn.endswith(".bin"))
+    return n
+
+
+def bench_multiproc(scales: tuple[int, ...] = (1, 2, N_PROCS)) -> dict:
+    results = [_run_scale(n) for n in dict.fromkeys(scales)]
+    base = results[0]["opens_per_s"]
+    for r in results:
+        r["scaling_vs_1proc"] = round(r["opens_per_s"] / base, 2)
+    return {
+        "params": {
+            "files_per_proc": FILES_PER_PROC,
+            "file_size": FILE_SIZE,
+            "capacity": CAPACITY,
+            "cpu_count": os.cpu_count(),
+        },
+        "scales": results,
+    }
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        if argv.index("--json") + 1 >= len(argv):
+            print("usage: multiproc_bench [--json PATH]")
+            raise SystemExit(2)
+        json_path = argv[argv.index("--json") + 1]
+    out = bench_multiproc()
+    print("name,value,derived")
+    ok = True
+    for r in out["scales"]:
+        n = r["n_procs"]
+        print(f"multiproc_open_{n}p,{r['opens_per_s']},x{r['scaling_vs_1proc']}")
+        print(
+            f"multiproc_cache_used_{n}p,{r['cache_used_bytes']},"
+            f"cap={r['capacity']}"
+        )
+        if r["overcommitted"]:
+            print(f"multiproc_OVERCOMMIT_{n}p,{r['cache_used_bytes']},FAIL")
+            ok = False
+        if r["files_placed"] != r["files_written"]:
+            print(
+                f"multiproc_LOST_FILES_{n}p,"
+                f"{r['files_written'] - r['files_placed']},FAIL"
+            )
+            ok = False
+    top = out["scales"][-1]
+    print(
+        f"acceptance_no_overcommit,{int(not top['overcommitted'])},required"
+    )
+    print(
+        f"acceptance_scaling_{top['n_procs']}p,"
+        f"{top['scaling_vs_1proc']},>={COLLAPSE_FLOOR}_required"
+    )
+    if top["scaling_vs_1proc"] < COLLAPSE_FLOOR:
+        ok = False
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

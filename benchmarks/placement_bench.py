@@ -10,15 +10,19 @@ Two measurements per population size:
   open_write_close   — end-to-end SeaFS ``open``/``write``/``close``/
                        ``remove`` of a fresh key under the mount
 
-``PYTHONPATH=src python -m benchmarks.placement_bench`` prints the same
-``name,us_per_call,derived`` CSV as the other benches (derived = speedup
-of ledger over walk at that population).
+``PYTHONPATH=src python -m benchmarks.placement_bench [--json PATH]``
+prints the same ``name,us_per_call,derived`` CSV as the other benches
+(derived = speedup of ledger over walk at that population); ``--json``
+additionally dumps the rows for the CI regression gate
+(``benchmarks.check_regression``).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import shutil
+import sys
 import tempfile
 import time
 
@@ -133,7 +137,14 @@ def bench_placement_ledger_vs_walk(quick: bool = True):
 ALL_PLACEMENT_BENCHES = [bench_placement_ledger_vs_walk]
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        if argv.index("--json") + 1 >= len(argv):
+            print("usage: placement_bench [--json PATH]")
+            raise SystemExit(2)
+        json_path = argv[argv.index("--json") + 1]
     print("name,us_per_call,derived")
     ok = True
     rows = bench_placement_ledger_vs_walk(quick=True)
@@ -146,6 +157,9 @@ def main() -> None:
     speedup = walk["us_per_call"] / led["us_per_call"]
     print(f"acceptance_open_speedup_{big}f,{speedup:.1f},>=5x_required")
     ok = speedup >= 5.0
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump({"rows": rows, "open_speedup": round(speedup, 1)}, f, indent=2)
     raise SystemExit(0 if ok else 1)
 
 

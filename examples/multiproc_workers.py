@@ -1,0 +1,80 @@
+"""Two worker processes sharing one capped Sea hierarchy.
+
+Demonstrates `SeaConfig(shared_ledger=True)`: both workers mount the same
+tiers, the cross-process ledger keeps the capped tmpfs root from being
+jointly over-committed, and the flusher leader election leaves exactly one
+flush-and-evict daemon (the second worker spools its close events to it).
+
+    PYTHONPATH=src python examples/multiproc_workers.py
+"""
+
+import multiprocessing as mp
+import os
+import shutil
+import tempfile
+
+from repro.core import Sea, SeaConfig, TierSpec
+from repro.core.ledger import LEDGER_DIRNAME
+from repro.core.telemetry import load_aggregate
+
+F = 1 << 16  # 64 KiB worst-case file size
+
+
+def make_config(workdir: str) -> SeaConfig:
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(
+                name="tmpfs",
+                roots=(os.path.join(workdir, "fast"),),
+                capacity=8 * F,  # tiny on purpose: forces spill under load
+            ),
+            TierSpec(
+                name="pfs", roots=(os.path.join(workdir, "pfs"),), persistent=True
+            ),
+        ],
+        max_file_size=F,
+        n_procs=2,
+        shared_ledger=True,       # cross-process ledger + flusher election
+        leader_heartbeat_s=0.25,
+        flushlist=("results/*",),  # materialize final outputs to the base
+        evictlist=("results/*",),
+    )
+
+
+def worker(workdir: str, idx: int) -> None:
+    sea = Sea(make_config(workdir)).start()
+    role = "leader" if sea.flusher.is_leader else "follower"
+    print(f"worker {idx} (pid {os.getpid()}): flusher {role}")
+    for j in range(8):
+        path = os.path.join(sea.fs.mount, f"results/w{idx}_{j}.out")
+        sea.fs.write_bytes(path, os.urandom(F // 2))
+    sea.shutdown()  # drain: follower hands leftovers to the leader's spool
+
+
+def main() -> None:
+    workdir = tempfile.mkdtemp(prefix="sea_multiproc_demo_")
+    try:
+        ctx = mp.get_context("fork")
+        procs = [ctx.Process(target=worker, args=(workdir, i)) for i in range(2)]
+        for p in procs:
+            p.start()
+        for p in procs:
+            p.join()
+        results = sorted(os.listdir(os.path.join(workdir, "pfs", "results")))
+        print(f"materialized on the base tier: {len(results)} files")
+        stats = load_aggregate(
+            os.path.join(workdir, "pfs", LEDGER_DIRNAME, "telemetry")
+        )
+        print(
+            f"aggregate over pids {stats['pids']}: "
+            f"{stats['flushed_files']} flushed, "
+            f"{stats['tiers'].get('tmpfs', {}).get('bytes_written', 0):.0f} "
+            "bytes through tmpfs"
+        )
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,7 @@ cluster simulator + analytic model (Eqs. 1-11), printed as a table.
 
     PYTHONPATH=src python examples/paper_repro.py
 """
-from repro.core.model import ClusterSpec, MiB, Workload, lustre_bounds, sea_bounds
+from repro.core.model import ClusterSpec, Workload, sea_bounds
 from repro.core.simulator import Simulator
 
 PAPER = ClusterSpec()

@@ -6,6 +6,7 @@ Public surface:
     SeaMount                  Python-level interception context (LD_PRELOAD analogue)
     Flusher / Sea             flush-and-evict daemon, prefetcher (§3.3)
     CapacityLedger            O(1) capacity accounting (beyond-paper hot path)
+    SharedCapacityLedger      cross-process ledger (n_procs instances per node)
     Mode                      copy / remove / move / keep (Table 1)
     perf model                ``repro.core.model`` (Eqs. 1–11)
     simulator                 ``repro.core.simulator`` (paper-scale experiments)
@@ -18,6 +19,7 @@ from .ledger import CapacityLedger, Reservation
 from .lists import Mode, matches, resolve_mode
 from .placement import PlacementPolicy
 from .seafs import SeaFS
+from .shared_ledger import SharedCapacityLedger, SharedReservation
 from .telemetry import Telemetry
 from .tiers import Hierarchy, Tier, TierSpec
 
@@ -29,6 +31,8 @@ __all__ = [
     "SeaMount",
     "CapacityLedger",
     "Reservation",
+    "SharedCapacityLedger",
+    "SharedReservation",
     "Mode",
     "matches",
     "resolve_mode",

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import configparser
 import os
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 from .tiers import Hierarchy, TierSpec
 
@@ -42,6 +42,11 @@ class SeaConfig:
     capacity_ledger: bool = True        # False = seed's stateless per-call rescan
     ledger_reconcile_interval_s: float = 5.0  # staleness bound for absorbing
                                               # external writers via re-walk
+    #: multi-process coordination (n_procs Sea instances on one node)
+    shared_ledger: bool = False         # file-backed cross-process ledger under
+                                        # each root + single-flusher election
+    leader_heartbeat_s: float = 0.5     # flush-leader heartbeat period; follower
+                                        # takeover within 2 missed heartbeats
     #: beyond-paper options (all default OFF for paper faithfulness)
     stripe_chunk_bytes: int = 0         # >0 enables striping across same-level roots
     lru_evict: bool = False             # auto-evict LRU when a tier is full
@@ -59,6 +64,10 @@ class SeaConfig:
             raise ValueError("flush_workers must be positive")
         if self.ledger_reconcile_interval_s < 0:
             raise ValueError("ledger_reconcile_interval_s must be >= 0")
+        if self.leader_heartbeat_s <= 0:
+            raise ValueError("leader_heartbeat_s must be positive")
+        if self.shared_ledger and not self.capacity_ledger:
+            raise ValueError("shared_ledger requires capacity_ledger=True")
 
     # -- presets (paper §3.1.1: "two main modes based on flushing spec") ----
     def in_memory(self, final_globs: tuple[str, ...]) -> "SeaConfig":
@@ -74,6 +83,7 @@ class SeaConfig:
         return Hierarchy.from_specs(
             list(self.tiers),
             use_ledger=self.capacity_ledger,
+            shared=self.shared_ledger,
             reconcile_interval_s=self.ledger_reconcile_interval_s,
         )
 
@@ -107,7 +117,7 @@ class SeaConfig:
             t = cp[section]
             tiers.append(
                 TierSpec(
-                    name=section[len("tier."):],
+                    name=section[len("tier.") :],
                     roots=tuple(x.strip() for x in t["roots"].split(",")),
                     read_bw=t.getfloat("read_bw", 0.0),
                     write_bw=t.getfloat("write_bw", 0.0),
@@ -136,6 +146,8 @@ class SeaConfig:
             ledger_reconcile_interval_s=sea.getfloat(
                 "ledger_reconcile_interval_s", 5.0
             ),
+            shared_ledger=sea.getboolean("shared_ledger", False),
+            leader_heartbeat_s=sea.getfloat("leader_heartbeat_s", 0.5),
             flushlist=_read_list(FLUSHLIST_NAME),
             evictlist=_read_list(EVICTLIST_NAME),
             prefetchlist=_read_list(PREFETCHLIST_NAME),
@@ -157,6 +169,7 @@ class SeaConfig:
             tiers=tiers,
             max_file_size=int(env.get("SEA_MAX_FILE_SIZE", 1 << 20)),
             n_procs=int(env.get("SEA_NPROCS", "1")),
+            shared_ledger=env.get("SEA_SHARED_LEDGER", "0") not in ("0", "", "false"),
         )
 
 

@@ -16,19 +16,42 @@ resolving the hierarchy always find a complete copy (fixes the paper's
 §5.5 in-flight-access limitation). Every flush/evict transactionally
 updates the capacity ledger, keeping placement's O(1) free-space counters
 truthful without a rescan.
+
+**Single-flusher coordination** (``SeaConfig.shared_ledger``): the paper
+notes that "if Sea is launched many times on a given node, there will be
+many flush and evict processes" — racing duplicate flushers over the same
+hierarchy. In shared mode exactly one elected leader per hierarchy runs
+the daemon: leadership is an ``fcntl`` lock on
+``<base_root>/.sea_ledger/flusher.lock`` plus a heartbeat file rewritten
+every ``leader_heartbeat_s``. Followers enqueue their close events into a
+spool directory the leader drains; on leader death (the kernel releases
+the lock) a follower whose staleness check fires takes over within two
+heartbeats, rescans the cache tiers, and drains the spool.
 """
 
 from __future__ import annotations
 
+import fcntl
+import json
 import os
 import queue
 import shutil
 import threading
+import time
+from urllib.parse import quote, unquote
 
+from .ledger import LEDGER_DIRNAME
 from .lists import Mode, resolve_mode
 from .seafs import SeaFS
 
 _TMP_SUFFIX = ".sea_tmp"
+
+#: leadership lock paths held by THIS process. fcntl locks are owned per
+#: (process, inode): a second Flusher in the same process would "win" the
+#: lock trivially and closing its fd would drop the first one's — so
+#: in-process contenders are arbitrated here instead of through fcntl.
+_HELD_LEADER_LOCKS: set[str] = set()
+_HELD_LEADER_LOCKS_GUARD = threading.Lock()
 
 
 class Flusher:
@@ -44,6 +67,15 @@ class Flusher:
         self._cv = threading.Condition()  # guards the four fields above
         self._stop = threading.Event()
         self._threads: list[threading.Thread] = []
+        #: cross-process coordination (shared_ledger mode only)
+        self._coordinated = bool(getattr(fs.config, "shared_ledger", False))
+        self._hb_interval = float(getattr(fs.config, "leader_heartbeat_s", 0.5))
+        coord_dir = os.path.join(fs.hierarchy.base.roots[0], LEDGER_DIRNAME)
+        self._lock_path = os.path.join(coord_dir, "flusher.lock")
+        self._hb_path = os.path.join(coord_dir, "flusher.heartbeat")
+        self._spool_dir = os.path.join(coord_dir, "spool")
+        self._leader_fd: int | None = None
+        self._leader_guard = threading.Lock()
         fs.add_close_listener(self._on_close)
 
     # -- lifecycle -----------------------------------------------------------
@@ -56,38 +88,230 @@ class Flusher:
                 )
                 for i in range(self.n_workers)
             ]
+            if self._coordinated:
+                self._try_acquire_leadership()
+                self._threads.append(
+                    threading.Thread(
+                        target=self._coordinate, name="sea-coordinator", daemon=True
+                    )
+                )
             for t in self._threads:
                 t.start()
         return self
 
     def stop(self) -> None:
-        self._stop.set()
-        for _ in self._threads:
-            self._q.put(None)
-        for t in self._threads:
-            t.join(timeout=30)
+        try:
+            self._stop.set()
+            for _ in self._threads:
+                self._q.put(None)
+            for t in self._threads:
+                t.join(timeout=30)
+        finally:
+            # leadership MUST be returned even if a worker join blew up,
+            # or every surviving follower waits out a dead lockfile holder
+            self._release_leadership()
 
     def _alive(self) -> bool:
         return any(t.is_alive() for t in self._threads)
+
+    # -- leader election (shared_ledger mode) ---------------------------------
+    @property
+    def is_leader(self) -> bool:
+        """In coordinated mode: does this instance hold the flusher lock?
+        Uncoordinated instances are trivially their own leader."""
+        if not self._coordinated:
+            return True
+        return self._leader_fd is not None
+
+    def _try_acquire_leadership(self) -> bool:
+        with self._leader_guard:
+            if self._leader_fd is not None:
+                return True
+            # realpath: two spellings of the same base root (symlinked
+            # scratch dirs) must arbitrate on one registry key, or both
+            # "win" the per-process fcntl lock
+            lock_key = os.path.realpath(self._lock_path)
+            with _HELD_LEADER_LOCKS_GUARD:
+                if lock_key in _HELD_LEADER_LOCKS:
+                    return False  # another instance in THIS process leads
+            os.makedirs(self._spool_dir, exist_ok=True)
+            fd = os.open(self._lock_path, os.O_RDWR | os.O_CREAT, 0o644)
+            try:
+                fcntl.lockf(fd, fcntl.LOCK_EX | fcntl.LOCK_NB)
+            except OSError:
+                os.close(fd)
+                return False
+            with _HELD_LEADER_LOCKS_GUARD:
+                _HELD_LEADER_LOCKS.add(lock_key)
+            os.ftruncate(fd, 0)
+            os.pwrite(fd, str(os.getpid()).encode(), 0)
+            self._leader_fd = fd
+        self._write_heartbeat()
+        return True
+
+    def _release_leadership(self) -> None:
+        with self._leader_guard:
+            fd, self._leader_fd = self._leader_fd, None
+            if fd is None:
+                return
+            with _HELD_LEADER_LOCKS_GUARD:
+                _HELD_LEADER_LOCKS.discard(os.path.realpath(self._lock_path))
+            hb = self._read_heartbeat()
+            if hb is not None and hb.get("pid") == os.getpid():
+                try:
+                    os.unlink(self._hb_path)
+                except OSError:
+                    pass
+            try:
+                fcntl.lockf(fd, fcntl.LOCK_UN)
+            finally:
+                os.close(fd)
+
+    def _write_heartbeat(self) -> None:
+        tmp = f"{self._hb_path}.{os.getpid()}{_TMP_SUFFIX}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump({"pid": os.getpid(), "ts": time.time()}, f)
+            os.replace(tmp, self._hb_path)  # atomic: readers never see a torn file
+        except OSError:
+            pass
+
+    def _read_heartbeat(self) -> dict | None:
+        try:
+            with open(self._hb_path) as f:
+                hb = json.load(f)
+            return hb if isinstance(hb, dict) else None
+        except (OSError, ValueError):
+            return None
+
+    def _heartbeat_stale(self) -> bool:
+        hb = self._read_heartbeat()
+        if hb is None:
+            return True
+        return time.time() - float(hb.get("ts", 0)) > self._hb_interval
+
+    def _coordinate(self) -> None:
+        """Leader: beat + drain the spool. Follower: watch the heartbeat and
+        take over once it goes stale (the fcntl lock is only obtainable
+        after the leader process actually died, so trying early is safe)."""
+        while not self._stop.wait(self._hb_interval / 2):
+            if self.is_leader:
+                self._write_heartbeat()
+                self._drain_spool()
+            elif self._heartbeat_stale() and self._try_acquire_leadership():
+                # takeover: recover everything the dead leader left behind
+                self.scan()
+                self._drain_spool()
+
+    # -- follower spool ---------------------------------------------------------
+    def _spool_submit(self, key: str) -> None:
+        """Followers don't flush; they hand the key to the leader through
+        the spool directory (one file per key — resubmits coalesce)."""
+        os.makedirs(self._spool_dir, exist_ok=True)
+        path = os.path.join(self._spool_dir, quote(key, safe=""))
+        tmp = f"{path}.{os.getpid()}{_TMP_SUFFIX}"
+        try:
+            with open(tmp, "w") as f:
+                f.write(key)
+            os.replace(tmp, path)
+        except OSError:
+            pass
+
+    def _take_spool_entries(self) -> list[str]:
+        """Claim (unlink) and return every spooled key."""
+        try:
+            names = os.listdir(self._spool_dir)
+        except FileNotFoundError:
+            return []
+        keys = []
+        for fn in sorted(names):
+            if fn.endswith(_TMP_SUFFIX):
+                continue
+            try:
+                os.unlink(os.path.join(self._spool_dir, fn))
+            except OSError:
+                continue  # another claimant got it first
+            keys.append(unquote(fn))
+        return keys
+
+    def _drain_spool(self) -> int:
+        keys = self._take_spool_entries()
+        for key in keys:
+            self.submit(key)
+        return len(keys)
 
     def drain(self) -> None:
         """Final flush: process every pending + scannable file, then return.
         Called at application shutdown ('materialize onto long-term
         storage'). Correct under the worker pool: waits on an explicit
         queued+in-flight count rather than poking at the queue's private
-        ``unfinished_tasks`` outside its mutex."""
+        ``unfinished_tasks`` outside its mutex. A follower instead hands
+        its keys to the leader and waits for the spool to empty."""
         self.scan()
+        if self._coordinated and not self.is_leader:
+            if not self._drain_as_follower():
+                return
+            # became leader mid-drain: fall through and drain like one
         if not self._alive():
             # synchronous fallback: no daemon running
             self._process_all_sync()
             return
-        with self._cv:
-            while self._pending or self._inflight:
-                if not self._alive():
-                    break
-                self._cv.wait(timeout=0.5)
-        if not self._alive():
-            self._process_all_sync()
+        stable = 0
+        while True:
+            if self._coordinated and self.is_leader:
+                self._drain_spool()  # followers may still be handing us work
+            with self._cv:
+                while self._pending or self._inflight:
+                    if not self._alive():
+                        break
+                    self._cv.wait(timeout=0.5)
+            if not self._alive():
+                self._process_all_sync()
+                return
+            if not (self._coordinated and self.is_leader):
+                return
+            # leader: only finish once spool AND queue are empty twice in a
+            # row — a follower's entry can be mid-claim (unlinked by the
+            # coordinator thread but not yet queued) at any single glance
+            if self._spool_empty() and not self._pending and not self._inflight:
+                stable += 1
+                if stable >= 2:
+                    return
+                time.sleep(0.01)
+            else:
+                stable = 0
+
+    def _spool_empty(self) -> bool:
+        try:
+            names = os.listdir(self._spool_dir)
+        except FileNotFoundError:
+            return True
+        return all(n.endswith(_TMP_SUFFIX) for n in names)
+
+    def _drain_as_follower(self) -> bool:
+        """Wait until the leader drained the spool. Returns True iff this
+        instance took leadership over (caller then drains as the leader).
+        If no live leader materializes before the deadline, the leftovers
+        are processed synchronously — data safety over single-flusher
+        purity at shutdown."""
+        deadline = time.time() + max(5.0, 10 * self._hb_interval)
+        while time.time() < deadline:
+            try:
+                entries = [
+                    n
+                    for n in os.listdir(self._spool_dir)
+                    if not n.endswith(_TMP_SUFFIX)
+                ]
+            except FileNotFoundError:
+                entries = []
+            if not entries:
+                return False
+            if self._heartbeat_stale() and self._try_acquire_leadership():
+                return True
+            time.sleep(min(0.05, self._hb_interval / 4))
+        for key in self._take_spool_entries():
+            self.process(key)
+        return False
 
     # -- event plumbing --------------------------------------------------------
     def _on_close(self, key: str, writing: bool) -> None:
@@ -100,6 +324,9 @@ class Flusher:
             self.submit(key)
 
     def submit(self, key: str) -> None:
+        if self._coordinated and not self.is_leader:
+            self._spool_submit(key)
+            return
         with self._cv:
             if key in self._active:
                 # a worker is processing this key right now: flag it for
@@ -117,7 +344,9 @@ class Flusher:
         n = 0
         for tier in self.fs.hierarchy.cache_tiers:
             for root in tier.roots:
-                for dirpath, _dirs, files in os.walk(root):
+                for dirpath, dirs, files in os.walk(root):
+                    if LEDGER_DIRNAME in dirs:
+                        dirs.remove(LEDGER_DIRNAME)
                     for fn in files:
                         if fn.endswith(_TMP_SUFFIX):
                             continue
@@ -239,7 +468,9 @@ class Flusher:
         total = 0
         base = self.fs.hierarchy.base
         for root in base.roots:
-            for dirpath, _dirs, files in os.walk(root):
+            for dirpath, dirs, files in os.walk(root):
+                if LEDGER_DIRNAME in dirs:
+                    dirs.remove(LEDGER_DIRNAME)
                 for fn in files:
                     real = os.path.join(dirpath, fn)
                     key = os.path.relpath(real, root)
@@ -276,16 +507,35 @@ class Sea:
     def __init__(self, config):
         self.fs = SeaFS(config)
         self.flusher = Flusher(self.fs)
+        self._started = False
 
     def start(self) -> "Sea":
+        if self._started:
+            return self  # idempotent: a second start must not re-prefetch
         self.flusher.start()
         if self.fs.config.prefetchlist:
             self.flusher.prefetch()
+        self._started = True
         return self
 
     def shutdown(self) -> None:
-        self.flusher.drain()
-        self.flusher.stop()
+        try:
+            self.flusher.drain()
+            self.flusher.stop()
+        finally:
+            self._started = False
+        if self.fs.config.shared_ledger:
+            # leave this process's counters next to the shared store so the
+            # workflow can aggregate telemetry across all its workers
+            stats_dir = os.path.join(
+                self.fs.hierarchy.base.roots[0], LEDGER_DIRNAME, "telemetry"
+            )
+            try:
+                self.fs.telemetry.export(
+                    os.path.join(stats_dir, f"{os.getpid()}.json")
+                )
+            except OSError:
+                pass
 
     def __enter__(self) -> "Sea":
         return self.start()

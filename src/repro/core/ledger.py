@@ -31,6 +31,12 @@ import os
 import threading
 import time
 
+#: Per-root metadata directory used by the cross-process shared ledger and
+#: the flusher's leader-election/spool machinery. It lives *inside* each
+#: root, so every capacity scan must skip it — its journal/heartbeat files
+#: are bookkeeping, not cached application data.
+LEDGER_DIRNAME = ".sea_ledger"
+
 
 class Reservation:
     """An in-flight write budget held against one root.
@@ -70,7 +76,9 @@ def scan_root(root: str) -> dict[str, int]:
     """Walk one root and return {relpath: size}. This is the seed's O(n)
     scan, demoted from the per-call hot path to the reconcile path."""
     files: dict[str, int] = {}
-    for dirpath, _dirnames, filenames in os.walk(root):
+    for dirpath, dirnames, filenames in os.walk(root):
+        if LEDGER_DIRNAME in dirnames:
+            dirnames.remove(LEDGER_DIRNAME)
         for fn in filenames:
             p = os.path.join(dirpath, fn)
             try:

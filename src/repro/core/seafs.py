@@ -18,6 +18,7 @@ import time
 from collections import defaultdict
 
 from .config import SeaConfig
+from .ledger import LEDGER_DIRNAME
 from .lists import Mode, resolve_mode
 from .placement import PlacementPolicy
 from .telemetry import Stopwatch, Telemetry
@@ -343,7 +344,7 @@ class SeaFS:
                 pkey = f"{key}.sea_stripe.{i:04d}"
                 real = os.path.join(root, pkey)
                 os.makedirs(os.path.dirname(real), exist_ok=True)
-                part = data[i * chunk:(i + 1) * chunk]
+                part = data[i * chunk : (i + 1) * chunk]
                 with open(real, "wb") as f:
                     f.write(part)
                 tier.note_written(root, pkey, len(part))
@@ -428,6 +429,9 @@ class SeaFS:
                     seen.update(os.listdir(p))
         if not found_dir:
             raise FileNotFoundError(path)
+        # the shared ledger / flusher-coordination store is bookkeeping
+        # living inside each root, not application data
+        seen.discard(LEDGER_DIRNAME)
         return sorted(seen)
 
     def makedirs(self, path: str, exist_ok: bool = False) -> None:
@@ -525,7 +529,9 @@ class SeaFS:
         candidates: list = []  # (atime, key, real, tier, root)
         for tier in self.hierarchy.cache_tiers:
             for root in tier.roots:
-                for dirpath, _d, files in os.walk(root):
+                for dirpath, dirnames, files in os.walk(root):
+                    if LEDGER_DIRNAME in dirnames:
+                        dirnames.remove(LEDGER_DIRNAME)
                     for fn in files:
                         real = os.path.join(dirpath, fn)
                         key = os.path.relpath(real, root)

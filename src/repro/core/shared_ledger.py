@@ -1,0 +1,573 @@
+"""Cross-process shared capacity ledger (multi-process deployments).
+
+Sea's target deployment is ``n_procs`` concurrent application processes
+sharing the same tmpfs/local-disk tiers on one HPC node — the paper's
+performance model (Eqs. 8-10) is explicitly parameterized by ``n_procs``.
+The in-process :class:`~repro.core.ledger.CapacityLedger` keeps each
+process honest with *itself*; two ``Sea`` instances mounting the same
+hierarchy would still silently double-spend capped-root capacity because
+neither sees the other's in-flight reservations.
+
+This module persists per-root accounting in a small file-backed store
+under each root (``<root>/.sea_ledger/``), exposing the exact
+``reserve / commit / release / note_written / note_removed / reconcile``
+transactional API of the in-process ledger so :class:`~repro.core.tiers.Tier`
+and the placement policy select it via ``SeaConfig.shared_ledger`` with no
+call-site changes.
+
+Store layout (per root)::
+
+    <root>/.sea_ledger/journal    append-truncate journal, fcntl-guarded
+    <root>/.sea_ledger/res/       one marker file per in-flight reservation
+
+The **journal** starts with a header line ``SEALEDGER1 <generation>
+<last_reconcile_unix>`` followed by ``W <size> <quoted-key>`` (file landed)
+and ``D <quoted-key>`` (file removed) records. Every mutation appends one
+record while holding an exclusive ``fcntl`` lock; readers replay only the
+suffix they have not seen (tracked by byte offset), so steady-state cost is
+O(1) per operation. When the journal grows past a few multiples of the
+live-file count it is compacted *in place* (truncate + snapshot rewrite,
+generation bump) — the "append-truncate" design: peers detect the bump and
+reload. A torn trailing record (writer SIGKILLed mid-append) is repaired by
+truncating to the last complete line under the lock; the filesystem remains
+the source of truth, so any corruption degrades to a reconcile walk, never
+to wrong placement forever.
+
+**Reservations** are marker files named ``<pid>.<seq>.<nbytes>.res``:
+creating/unlinking one is atomic, the reserved total is the sum over the
+directory, and crash recovery is structural — :meth:`reconcile` expires
+markers whose PID is dead, so a killed writer's budget is returned within
+one reconcile interval instead of leaking forever.
+"""
+
+from __future__ import annotations
+
+import fcntl
+import itertools
+import os
+import threading
+import time
+from contextlib import contextmanager
+from urllib.parse import quote, unquote
+
+from .ledger import LEDGER_DIRNAME, scan_root
+
+_MAGIC = "SEALEDGER1"
+_JOURNAL_NAME = "journal"
+_RES_DIRNAME = "res"
+
+
+def pid_alive(pid: int) -> bool:
+    """Is a process with this PID currently running (signal-0 probe)?"""
+    if pid <= 0:
+        return False
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:
+        return True  # exists, owned by someone else
+    return True
+
+
+class SharedReservation:
+    """An in-flight write budget held against one root, backed by a marker
+    file other processes (and crash recovery) can see. API-compatible with
+    :class:`~repro.core.ledger.Reservation`."""
+
+    __slots__ = ("root", "nbytes", "active", "path")
+
+    def __init__(self, root: str, nbytes: int, path: str):
+        self.root = root
+        self.nbytes = nbytes
+        self.active = True
+        self.path = path
+
+    def __repr__(self) -> str:  # pragma: no cover
+        state = "active" if self.active else "resolved"
+        return f"SharedReservation({self.root!r}, {self.nbytes}, {state})"
+
+
+class _SharedAccount:
+    """Per-root, per-*process* replica of the journal state.
+
+    ``fd`` is the journal file descriptor the process locks through. POSIX
+    ``fcntl`` locks are owned per (process, inode) — a second descriptor on
+    the same inode would silently "succeed" and closing it would drop the
+    first one's lock — so accounts live in a process-global registry keyed
+    by journal path: every ledger instance in the process shares one fd and
+    one thread lock per root.
+    """
+
+    __slots__ = (
+        "lock",
+        "fd",
+        "loaded",
+        "files",
+        "used",
+        "generation",
+        "offset",
+        "lines",
+        "reconcile_ts",
+        "synced_at",
+        "res_cache_ts",
+        "res_cache_total",
+    )
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.fd: int | None = None
+        self.loaded = False
+        self.files: dict[str, int] = {}
+        self.used = 0
+        self.generation = 0
+        self.offset = 0          # bytes of journal replayed so far
+        self.lines = 0           # records since last compaction
+        self.reconcile_ts = 0.0  # shared wall-clock; 0 = never reconciled
+        self.synced_at = 0.0     # monotonic time of the last journal sync
+        self.res_cache_ts = 0.0  # monotonic time of the last reservation scan
+        self.res_cache_total = 0
+
+
+_ACCOUNTS: dict[str, _SharedAccount] = {}
+_ACCOUNTS_LOCK = threading.Lock()
+
+#: process-wide reservation sequence — per-instance counters would let two
+#: ledger instances in one process mint the same '<pid>.<seq>.<nbytes>.res'
+#: marker name and silently merge (then double-free) their budgets
+_RES_SEQ = itertools.count()
+
+
+def _global_account(journal_path: str) -> _SharedAccount:
+    key = os.path.realpath(journal_path)
+    acct = _ACCOUNTS.get(key)
+    if acct is None:
+        with _ACCOUNTS_LOCK:
+            acct = _ACCOUNTS.setdefault(key, _SharedAccount())
+    return acct
+
+
+class SharedCapacityLedger:
+    """Drop-in replacement for :class:`~repro.core.ledger.CapacityLedger`
+    whose counters are shared by every process mounting the hierarchy."""
+
+    def __init__(
+        self,
+        reconcile_interval_s: float = 5.0,
+        telemetry=None,
+        compact_min_records: int = 1024,
+        hint_window_s: float = 0.05,
+    ):
+        self.reconcile_interval_s = reconcile_interval_s
+        self.telemetry = telemetry  # attached by SeaFS after construction
+        self.compact_min_records = compact_min_records
+        # Advisory reads (used/reserved feeding tier *selection*) may serve
+        # the local replica for up to this long before re-syncing. Admission
+        # of a write on a capped root always goes through the fully locked
+        # try_reserve, so staleness here can skew which root select() ranks
+        # first — never the used+reserved<=capacity invariant.
+        self.hint_window_s = hint_window_s
+        # root -> account memo: the process-global registry resolves paths
+        # through realpath() (correct but ~100µs of lstat calls), far too
+        # slow for the per-open hot path
+        self._acct_cache: dict[str, _SharedAccount] = {}
+
+    # -- store paths ---------------------------------------------------------
+    def _dir(self, root: str) -> str:
+        return os.path.join(root, LEDGER_DIRNAME)
+
+    def _journal_path(self, root: str) -> str:
+        return os.path.join(self._dir(root), _JOURNAL_NAME)
+
+    def _res_dir(self, root: str) -> str:
+        return os.path.join(self._dir(root), _RES_DIRNAME)
+
+    def _account(self, root: str) -> _SharedAccount:
+        acct = self._acct_cache.get(root)
+        if acct is None:
+            acct = self._acct_cache[root] = _global_account(self._journal_path(root))
+        return acct
+
+    def _record_hit(self) -> None:
+        if self.telemetry is not None:
+            self.telemetry.record_ledger_hit()
+
+    # -- locking -------------------------------------------------------------
+    @contextmanager
+    def _locked(self, root: str):
+        """Thread lock + exclusive fcntl lock on the root's journal. Handles
+        the journal being replaced/deleted underneath us (``Tier.wipe``):
+        after locking, the held fd must still be the inode at the path."""
+        acct = self._account(root)
+        with acct.lock:
+            while True:
+                if acct.fd is None:
+                    os.makedirs(self._res_dir(root), exist_ok=True)
+                    acct.fd = os.open(
+                        self._journal_path(root), os.O_RDWR | os.O_CREAT, 0o644
+                    )
+                    acct.loaded = False
+                fcntl.lockf(acct.fd, fcntl.LOCK_EX)
+                try:
+                    ino = os.stat(self._journal_path(root)).st_ino
+                except FileNotFoundError:
+                    ino = -1
+                if ino == os.fstat(acct.fd).st_ino:
+                    break
+                fcntl.lockf(acct.fd, fcntl.LOCK_UN)
+                os.close(acct.fd)
+                acct.fd = None
+            try:
+                yield acct
+            finally:
+                fcntl.lockf(acct.fd, fcntl.LOCK_UN)
+
+    # -- journal replay / append (all called with the lock held) --------------
+    def _sync(self, acct: _SharedAccount) -> None:
+        """Bring the in-memory replica up to date with the journal."""
+        self._sync_inner(acct)
+        acct.synced_at = time.monotonic()
+
+    def _sync_inner(self, acct: _SharedAccount) -> None:
+        size = os.fstat(acct.fd).st_size
+        if size == 0:
+            # brand-new store: write the header so peers see a valid journal
+            header = f"{_MAGIC} 1 0\n".encode()
+            os.pwrite(acct.fd, header, 0)
+            acct.loaded = True
+            acct.files = {}
+            acct.used = 0
+            acct.generation = 1
+            acct.offset = len(header)
+            acct.lines = 0
+            acct.reconcile_ts = 0.0
+            return
+        if acct.loaded:
+            head = os.pread(acct.fd, 128, 0).split(b"\n", 1)[0]
+            if self._parse_header(head)[0] == acct.generation:
+                self._replay_from(acct, acct.offset, size)
+                return
+        self._reload(acct, size)
+
+    def _parse_header(self, line: bytes) -> tuple[int, float]:
+        parts = line.decode("utf-8", "replace").split()
+        try:
+            if parts[0] != _MAGIC:
+                return -1, 0.0
+            return int(parts[1]), float(parts[2])
+        except (IndexError, ValueError):
+            return -1, 0.0
+
+    def _reload(self, acct: _SharedAccount, size: int) -> None:
+        data = os.pread(acct.fd, size, 0)
+        nl = data.find(b"\n")
+        gen, ts = self._parse_header(data[:nl] if nl >= 0 else data)
+        if gen < 0:
+            # corrupt header: reset the store; the filesystem is the source
+            # of truth, so force a reconcile walk on next use
+            os.ftruncate(acct.fd, 0)
+            self._sync(acct)
+            return
+        acct.generation = gen
+        acct.reconcile_ts = ts
+        acct.files = {}
+        acct.used = 0
+        acct.lines = 0
+        acct.offset = nl + 1
+        acct.loaded = True
+        self._replay_from(acct, acct.offset, size)
+
+    def _replay_from(self, acct: _SharedAccount, start: int, size: int) -> None:
+        if size <= start:
+            return
+        data = os.pread(acct.fd, size - start, start)
+        if not data.endswith(b"\n"):
+            # torn trailing record (writer died mid-append): repair by
+            # truncating to the last complete line — we hold the lock, and
+            # the dead writer's bytes never formed a committed record
+            cut = data.rfind(b"\n") + 1
+            os.ftruncate(acct.fd, start + cut)
+            data = data[:cut]
+        for line in data.decode("utf-8", "replace").splitlines():
+            self._apply(acct, line)
+            acct.lines += 1
+        acct.offset = start + len(data)
+
+    def _apply(self, acct: _SharedAccount, line: str) -> None:
+        if line.startswith("W "):
+            try:
+                _, sz, qkey = line.split(" ", 2)
+                nbytes = int(sz)
+            except ValueError:
+                return
+            key = unquote(qkey)
+            acct.used += nbytes - acct.files.get(key, 0)
+            acct.files[key] = nbytes
+        elif line.startswith("D "):
+            old = acct.files.pop(unquote(line[2:]), None)
+            if old is not None:
+                acct.used -= old
+
+    def _append(self, acct: _SharedAccount, line: str) -> None:
+        data = line.encode()
+        os.pwrite(acct.fd, data, acct.offset)
+        acct.offset += len(data)
+        acct.lines += 1
+        if acct.lines > max(self.compact_min_records, 4 * len(acct.files)):
+            self._rewrite(acct)
+
+    def _rewrite(self, acct: _SharedAccount, reconcile_ts: float | None = None) -> None:
+        """Compact: truncate and rewrite header + one W record per live file
+        (the 'truncate' half of the append-truncate journal)."""
+        acct.generation += 1
+        if reconcile_ts is not None:
+            acct.reconcile_ts = reconcile_ts
+        buf = [f"{_MAGIC} {acct.generation} {acct.reconcile_ts}\n"]
+        buf.extend(
+            f"W {sz} {quote(key, safe='/')}\n" for key, sz in acct.files.items()
+        )
+        data = "".join(buf).encode()
+        os.ftruncate(acct.fd, 0)
+        os.pwrite(acct.fd, data, 0)
+        acct.offset = len(data)
+        acct.lines = 0
+
+    # -- reservation marker files ---------------------------------------------
+    def _create_reservation(self, root: str, nbytes: int) -> SharedReservation:
+        while True:
+            path = os.path.join(
+                self._res_dir(root), f"{os.getpid()}.{next(_RES_SEQ)}.{nbytes}.res"
+            )
+            try:
+                # O_EXCL: a marker must never alias another live reservation
+                os.close(os.open(path, os.O_WRONLY | os.O_CREAT | os.O_EXCL, 0o644))
+                break
+            except FileExistsError:
+                continue  # stale marker from a recycled pid: pick a new seq
+        self._account(root).res_cache_ts = 0.0
+        return SharedReservation(root, nbytes, path)
+
+    def _drop_reservation(self, res: SharedReservation) -> None:
+        if res.active:
+            res.active = False
+            try:
+                os.unlink(res.path)
+            except OSError:
+                pass
+            self._account(res.root).res_cache_ts = 0.0
+
+    def _scan_reserved(self, root: str, *, live_only: bool = False) -> int:
+        total = 0
+        try:
+            names = os.listdir(self._res_dir(root))
+        except FileNotFoundError:
+            return 0
+        for fn in names:
+            if not fn.endswith(".res"):
+                continue
+            parts = fn[: -len(".res")].split(".")
+            try:
+                pid, nbytes = int(parts[0]), int(parts[2])
+            except (IndexError, ValueError):
+                continue
+            if live_only and not pid_alive(pid):
+                continue
+            total += nbytes
+        return total
+
+    def _expire_orphans(self, root: str) -> int:
+        """Crash recovery: unlink reservation markers whose PID is dead —
+        their writes will never commit, so their budget must be returned."""
+        expired = 0
+        try:
+            names = os.listdir(self._res_dir(root))
+        except FileNotFoundError:
+            return 0
+        for fn in names:
+            if not fn.endswith(".res"):
+                continue
+            try:
+                pid = int(fn.split(".", 1)[0])
+            except ValueError:
+                continue
+            if not pid_alive(pid):
+                try:
+                    os.unlink(os.path.join(self._res_dir(root), fn))
+                    expired += 1
+                except OSError:
+                    pass
+        if expired:
+            self._account(root).res_cache_ts = 0.0
+        return expired
+
+    # -- hot-path queries ------------------------------------------------------
+    def used_bytes(self, root: str) -> int:
+        self._maybe_reconcile(root)
+        self._record_hit()
+        acct = self._account(root)
+        if acct.loaded and time.monotonic() - acct.synced_at < self.hint_window_s:
+            return acct.used  # advisory fast path (see hint_window_s)
+        with self._locked(root) as acct:
+            self._sync(acct)
+            return acct.used
+
+    def reserved_bytes(self, root: str) -> int:
+        acct = self._account(root)
+        if time.monotonic() - acct.res_cache_ts < self.hint_window_s:
+            return acct.res_cache_total
+        total = self._scan_reserved(root)
+        acct.res_cache_total = total
+        acct.res_cache_ts = time.monotonic()
+        return total
+
+    def file_size(self, root: str, key: str) -> int | None:
+        with self._locked(root) as acct:
+            self._sync(acct)
+            return acct.files.get(key)
+
+    # -- transactional updates -------------------------------------------------
+    def note_written(self, root: str, key: str, nbytes: int) -> None:
+        with self._locked(root) as acct:
+            self._sync(acct)
+            self._apply_write(acct, key, nbytes)
+
+    def _apply_write(self, acct: _SharedAccount, key: str, nbytes: int) -> None:
+        acct.used += nbytes - acct.files.get(key, 0)
+        acct.files[key] = nbytes
+        self._append(acct, f"W {nbytes} {quote(key, safe='/')}\n")
+
+    def note_removed(self, root: str, key: str) -> None:
+        with self._locked(root) as acct:
+            self._sync(acct)
+            old = acct.files.pop(key, None)
+            if old is not None:
+                acct.used -= old
+                self._append(acct, f"D {quote(key, safe='/')}\n")
+
+    def reserve(self, root: str, nbytes: int) -> SharedReservation:
+        with self._locked(root):
+            return self._create_reservation(root, nbytes)
+
+    def commit(self, res: SharedReservation, key: str, nbytes: int) -> None:
+        with self._locked(res.root) as acct:
+            self._sync(acct)
+            self._drop_reservation(res)
+            self._apply_write(acct, key, nbytes)
+
+    def try_reserve(
+        self, root: str, nbytes: int, *, capacity: int, required: int
+    ) -> SharedReservation | None:
+        """Atomic admission across every process sharing the root: the
+        eligibility re-check and the reservation-marker creation happen
+        under one fcntl critical section, so concurrent writers anywhere on
+        the node can never jointly over-commit a capped root. Same headroom
+        rule as the in-process ledger: existing reservations count toward
+        the ``n_procs * max_file_size`` worst case, not on top of it."""
+        self._maybe_reconcile(root)
+        self._record_hit()
+        with self._locked(root) as acct:
+            self._sync(acct)
+            reserved = self._scan_reserved(root)
+            if capacity - acct.used >= max(required, reserved + nbytes):
+                return self._create_reservation(root, nbytes)
+        return None
+
+    def release(self, res: SharedReservation) -> None:
+        self._drop_reservation(res)
+
+    # -- reconciliation ----------------------------------------------------------
+    def _maybe_reconcile(self, root: str) -> None:
+        acct = self._account(root)
+        if not acct.loaded:
+            with self._locked(root):
+                self._sync(acct)
+        # reconcile_ts is shared through the journal header, so one walk by
+        # any process satisfies the staleness bound for all of them
+        if (
+            acct.reconcile_ts
+            and (time.time() - acct.reconcile_ts) < self.reconcile_interval_s
+        ):
+            return
+        self.reconcile(root)
+
+    def reconcile(self, root: str) -> int:
+        """Re-walk the root, rebuild the shared account, and expire orphaned
+        reservations of dead PIDs. Version-guarded like the in-process
+        ledger: if any record lands in the journal while the walk is in
+        flight, the walk's snapshot is stale and is discarded (the deltas
+        are exact for Sea-mediated traffic). A discarded walk is retried a
+        few times before the interval clock is reset — otherwise sustained
+        Sea traffic could starve absorption of external writers forever."""
+        self._expire_orphans(root)
+        used = 0
+        for _attempt in range(3):
+            with self._locked(root) as acct:
+                self._sync(acct)
+                v0 = (acct.generation, acct.offset)
+            files = scan_root(root)
+            with self._locked(root) as acct:
+                self._sync(acct)
+                applied = (acct.generation, acct.offset) == v0
+                if applied:
+                    acct.files = files
+                    acct.used = sum(files.values())
+                    self._rewrite(acct, reconcile_ts=time.time())
+                used = acct.used
+            if applied:
+                break
+        else:
+            # every walk raced a commit: keep the exact Sea-mediated deltas
+            # and reset the clock so the next interval tries again anyway
+            with self._locked(root) as acct:
+                self._sync(acct)
+                self._rewrite(acct, reconcile_ts=time.time())
+                used = acct.used
+        if self.telemetry is not None:
+            self.telemetry.record_ledger_reconcile()
+        return used
+
+    def forget(self, root: str) -> None:
+        """Drop the root's replica (e.g. after ``Tier.wipe`` removed the
+        store with the root). The registry entry survives — other ledger
+        instances in this process share it — but is reset to unloaded."""
+        acct = self._account(root)
+        with acct.lock:
+            if acct.fd is not None:
+                try:
+                    os.close(acct.fd)
+                except OSError:
+                    pass
+                acct.fd = None
+            acct.loaded = False
+            acct.files = {}
+            acct.used = 0
+            acct.offset = 0
+            acct.lines = 0
+            acct.reconcile_ts = 0.0
+            acct.synced_at = 0.0
+            acct.res_cache_ts = 0.0
+
+    # -- verification --------------------------------------------------------------
+    def verify(self, root: str) -> tuple[int, int]:
+        """(ledger_used, fresh_walk_used) *without* reconciling."""
+        with self._locked(root) as acct:
+            self._sync(acct)
+            used = acct.used
+        walk_used = sum(scan_root(root).values())
+        return used, walk_used
+
+    def snapshot(self) -> dict:
+        out = {}
+        with _ACCOUNTS_LOCK:
+            items = list(_ACCOUNTS.items())
+        for journal_path, acct in items:
+            root = os.path.dirname(os.path.dirname(journal_path))
+            with acct.lock:
+                if not acct.loaded:
+                    continue
+                out[root] = {
+                    "used": acct.used,
+                    "reserved": self._scan_reserved(root),
+                    "files": len(acct.files),
+                }
+        return out

@@ -134,6 +134,8 @@ class Simulator:
         ledger_placement: bool = True,       # O(1) ledger vs O(n) re-walk
         placement_probe_s: float = 0.0,      # fixed per-decision cost
         placement_scan_s_per_file: float = 0.0,  # per-cached-file walk cost
+        shared_ledger: bool = False,         # cross-process ledger + 1 flusher
+        ledger_lock_s: float = 0.0,          # fcntl critical-section length
     ):
         assert system in ("lustre", "sea", "sea-flushall")
         self.cl = cluster
@@ -150,13 +152,19 @@ class Simulator:
         self.ledger_placement = ledger_placement
         self.placement_probe_s = placement_probe_s
         self.placement_scan_s_per_file = placement_scan_s_per_file
+        # Multi-process contention model (shared_ledger): every placement
+        # decision serializes through one fcntl lock per root, so with p
+        # concurrent writers the expected critical-section wait is the lock
+        # length plus half the queue ahead of you: lock_s * (1 + (p-1)/2).
+        self.shared_ledger = shared_ledger
+        self.ledger_lock_s = ledger_lock_s
         # One Sea instance per application process means one flush-and-evict
         # worker per process (paper §5.1: "if Sea is launched many times on
         # a given node, there will be many flush and evict processes") —
-        # the experiments LD_PRELOAD Sea into each of the p processes.
-        self.flushers_per_node = (
-            cluster.p if flushers_per_node is None else flushers_per_node
-        )
+        # unless the shared ledger's leader election caps it at exactly one.
+        if flushers_per_node is None:
+            flushers_per_node = 1 if shared_ledger else cluster.p
+        self.flushers_per_node = flushers_per_node
         self.nodes = [_Node(i, cluster) for i in range(cluster.c)]
         self.caps = self._build_resources()
         self.bytes_by_tier: dict[str, float] = defaultdict(float)
@@ -196,10 +204,13 @@ class Simulator:
     # -- Sea placement (same policy as repro.core.placement) --------------------
     def placement_cost_s(self, nd: _Node) -> float:
         """Seconds one placement decision costs on this node: O(1) with the
-        ledger, O(n_cached) with the seed's stateless re-walk."""
+        ledger, O(n_cached) with the seed's stateless re-walk, plus the
+        cross-process lock-queueing penalty in shared-ledger mode."""
         cost = self.placement_probe_s
         if not self.ledger_placement:
             cost += self.placement_scan_s_per_file * nd.n_cached
+        if self.shared_ledger and self.ledger_lock_s > 0.0:
+            cost += self.ledger_lock_s * (1.0 + (self.cl.p - 1) / 2.0)
         return cost
 
     def sea_place_write(self, nd: _Node) -> tuple[str, tuple[str, ...]]:

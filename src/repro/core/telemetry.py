@@ -3,10 +3,17 @@
 Lightweight, thread-safe counters so benchmarks and the framework can see
 where bytes actually went (tier hit ratios, flush/evict volumes). Purely
 observational — placement never consults telemetry (Sea stays stateless).
+
+Counters are **per-process**: with ``shared_ledger`` deployments every Sea
+instance exports its snapshot to ``<base_root>/.sea_ledger/telemetry/`` at
+shutdown, and :func:`aggregate_snapshots` / :func:`load_aggregate` merge
+them into one node-wide view (the numbers the paper reports per node).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 from collections import defaultdict
@@ -98,6 +105,59 @@ class Telemetry:
                 "ledger_hits": self.ledger_hits,
                 "ledger_reconciles": self.ledger_reconciles,
             }
+
+    def export(self, path: str) -> str:
+        """Write this process's snapshot (plus pid/timestamp) as JSON —
+        atomically, so a concurrent aggregator never reads a torn file."""
+        snap = self.snapshot()
+        snap["pid"] = os.getpid()
+        snap["exported_at"] = time.time()
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(snap, f)
+        os.replace(tmp, path)
+        return path
+
+
+def aggregate_snapshots(snapshots: list[dict]) -> dict:
+    """Merge per-process snapshots into one aggregate view: numeric
+    counters sum (per tier and global); pids are collected for attribution."""
+    agg: dict = {"tiers": {}, "pids": []}
+    for snap in snapshots:
+        if "pid" in snap:
+            agg["pids"].append(snap["pid"])
+        for tier, counters in snap.get("tiers", {}).items():
+            out = agg["tiers"].setdefault(tier, defaultdict(float))
+            for k, v in counters.items():
+                out[k] += v
+        for k, v in snap.items():
+            if k in ("tiers", "pid", "exported_at"):
+                continue
+            if isinstance(v, (int, float)):
+                agg[k] = agg.get(k, 0) + v
+    agg["tiers"] = {t: dict(c) for t, c in agg["tiers"].items()}
+    agg["pids"].sort()
+    return agg
+
+
+def load_aggregate(stats_dir: str) -> dict:
+    """Aggregate every exported per-process snapshot under ``stats_dir``
+    (the ``.sea_ledger/telemetry/`` directory of a shared hierarchy)."""
+    snaps = []
+    try:
+        names = sorted(os.listdir(stats_dir))
+    except FileNotFoundError:
+        names = []
+    for fn in names:
+        if not fn.endswith(".json"):
+            continue
+        try:
+            with open(os.path.join(stats_dir, fn)) as f:
+                snaps.append(json.load(f))
+        except (OSError, ValueError):
+            continue
+    return aggregate_snapshots(snaps)
 
 
 class Stopwatch:

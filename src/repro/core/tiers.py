@@ -15,7 +15,8 @@ import os
 import shutil
 from dataclasses import dataclass, field
 
-from .ledger import CapacityLedger, Reservation
+from .ledger import LEDGER_DIRNAME, CapacityLedger, Reservation
+from .shared_ledger import SharedCapacityLedger
 
 
 @dataclass
@@ -52,7 +53,10 @@ class Tier:
     """
 
     def __init__(
-        self, spec: TierSpec, level: int, ledger: CapacityLedger | None = None
+        self,
+        spec: TierSpec,
+        level: int,
+        ledger: CapacityLedger | SharedCapacityLedger | None = None,
     ):
         self.spec = spec
         self.level = level
@@ -77,7 +81,9 @@ class Tier:
         """Bytes used under one root by a full re-scan (the seed's per-call
         behaviour; now the reconcile/baseline path only)."""
         total = 0
-        for dirpath, _dirnames, filenames in os.walk(root):
+        for dirpath, dirnames, filenames in os.walk(root):
+            if LEDGER_DIRNAME in dirnames:
+                dirnames.remove(LEDGER_DIRNAME)
             for fn in filenames:
                 try:
                     total += os.path.getsize(os.path.join(dirpath, fn))
@@ -198,15 +204,16 @@ class Hierarchy:
     share one :class:`CapacityLedger` (sharded internally by root)."""
 
     tiers: list[Tier] = field(default_factory=list)
-    ledger: CapacityLedger | None = None
+    ledger: CapacityLedger | SharedCapacityLedger | None = None
 
     @classmethod
     def from_specs(
         cls,
         specs: list[TierSpec],
         *,
-        ledger: CapacityLedger | None = None,
+        ledger: CapacityLedger | SharedCapacityLedger | None = None,
         use_ledger: bool = True,
+        shared: bool = False,
         reconcile_interval_s: float = 5.0,
     ) -> "Hierarchy":
         if len(specs) < 2:
@@ -217,7 +224,10 @@ class Hierarchy:
         if not specs[-1].persistent:
             specs[-1].persistent = True  # last tier is the base by definition
         if ledger is None and use_ledger:
-            ledger = CapacityLedger(reconcile_interval_s=reconcile_interval_s)
+            # shared: file-backed, fcntl-guarded accounting every process
+            # mounting this hierarchy sees; default: in-process counters
+            cls_ledger = SharedCapacityLedger if shared else CapacityLedger
+            ledger = cls_ledger(reconcile_interval_s=reconcile_interval_s)
         return cls([Tier(s, i, ledger) for i, s in enumerate(specs)], ledger)
 
     def owner_of(self, path: str) -> tuple[Tier, str] | None:

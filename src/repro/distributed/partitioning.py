@@ -18,7 +18,6 @@ from repro.configs.base import ModelConfig, ShapeCell
 from repro.distributed.sharding import (
     DP,
     EP,
-    FSDP,
     SP,
     TP,
     default_rules,

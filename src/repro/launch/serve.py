@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.models.transformer import LM
-from repro.training.serve_step import generate, make_serve_fns
+from repro.training.serve_step import make_serve_fns
 
 
 def main(argv=None) -> dict:

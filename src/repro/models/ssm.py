@@ -58,7 +58,7 @@ def _dt_b_c(p, cfg: SSMConfig, xc, eps=1e-5):
     N = cfg.d_state
     dbl = xc @ p["x_proj"]
     dtr = dbl.shape[-1] - 2 * N
-    dt_low, Bm, Cm = dbl[..., :dtr], dbl[..., dtr:dtr + N], dbl[..., dtr + N:]
+    dt_low, Bm, Cm = dbl[..., :dtr], dbl[..., dtr : dtr + N], dbl[..., dtr + N :]
     dt_low = rms_norm(dt_low, p["dt_norm"], eps)
     Bm = rms_norm(Bm, p["b_norm"], eps).astype(jnp.float32)
     Cm = rms_norm(Cm, p["c_norm"], eps).astype(jnp.float32)
@@ -78,9 +78,9 @@ def _causal_conv(p, cfg: SSMConfig, x, conv_state=None):
     xp = jnp.concatenate([pad, x], axis=1)
     out = jnp.zeros_like(x)
     for i in range(K):
-        out = out + xp[:, i:i + x.shape[1], :] * p["conv_w"][i]
+        out = out + xp[:, i : i + x.shape[1], :] * p["conv_w"][i]
     out = out + p["conv_b"]
-    new_state = xp[:, -(K - 1):, :] if K > 1 else None
+    new_state = xp[:, -(K - 1) :, :] if K > 1 else None
     return jax.nn.silu(out), new_state
 
 
@@ -93,7 +93,7 @@ def ssm_apply(p, cfg: SSMConfig, x: jax.Array, return_state: bool = False):
     xin, z = jnp.split(xz, 2, axis=-1)
     xin = shard_hint(xin, DP, None, TP)
     xc, _ = _causal_conv(p, cfg, xin)
-    conv_tail = xin[:, -(cfg.d_conv - 1):, :] if cfg.d_conv > 1 else None
+    conv_tail = xin[:, -(cfg.d_conv - 1) :, :] if cfg.d_conv > 1 else None
     dt, Bm, Cm = _dt_b_c(p, cfg, xc)
     A = -jnp.exp(p["A_log"])                                   # [d_in, N]
 

@@ -32,7 +32,6 @@ from repro.models import rwkv as rwkv_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (
     Layout,
-    cross_entropy,
     dense_init,
     embed_init,
     mlp_apply,

@@ -12,7 +12,7 @@ in/out shardings and checkpointing can reshard elastically.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

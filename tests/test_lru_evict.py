@@ -1,0 +1,127 @@
+"""Coverage for the opt-in LRU room-making path (``SeaConfig.lru_evict``).
+
+``SeaFS._lru_make_room`` was exercised by no test: cover eviction under
+cache pressure, LRU ordering, busy-file exclusion, the 8-attempt
+re-selection loop in ``_resolve_write``, and the base-tier fallback when
+no room can be made.
+"""
+
+import os
+
+from repro.core import SeaConfig, SeaFS, TierSpec
+
+F = 1 << 12
+
+
+def make_config(workdir: str, *, capacity: int, **kw) -> SeaConfig:
+    defaults = dict(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(
+                name="tmpfs", roots=(os.path.join(workdir, "t0"),), capacity=capacity
+            ),
+            TierSpec(name="pfs", roots=(os.path.join(workdir, "pfs"),), persistent=True),
+        ],
+        max_file_size=F,
+        n_procs=1,
+        lru_evict=True,
+        ledger_reconcile_interval_s=1e9,
+    )
+    defaults.update(kw)
+    return SeaConfig(**defaults)
+
+
+def test_evicts_lru_under_pressure(tmp_path):
+    """A full cache must shed its least-recently-used closed file so a new
+    write still lands on the fast tier."""
+    fs = SeaFS(make_config(str(tmp_path), capacity=4 * F))
+    for i in range(4):  # fills the tmpfs cap exactly
+        fs.write_bytes(os.path.join(fs.mount, f"f{i}.bin"), b"x" * F)
+    # touch f0 so f1 becomes the LRU candidate
+    with fs.open(os.path.join(fs.mount, "f0.bin"), "rb") as f:
+        f.read()
+    fs.write_bytes(os.path.join(fs.mount, "new.bin"), b"y" * F)
+    assert fs.where(os.path.join(fs.mount, "new.bin")) == "tmpfs"
+    assert fs.where(os.path.join(fs.mount, "f0.bin")) == "tmpfs"  # recently used
+    assert fs.where(os.path.join(fs.mount, "f1.bin")) is None  # evicted (KEEP)
+    assert fs.telemetry.evicted_files >= 1
+    got, want = fs.hierarchy.ledger.verify(fs.hierarchy.tiers[0].roots[0])
+    assert got == want
+
+
+def test_busy_files_are_never_evicted(tmp_path):
+    """Open handles pin their file: pressure must evict only closed files."""
+    fs = SeaFS(make_config(str(tmp_path), capacity=2 * F))
+    busy_path = os.path.join(fs.mount, "busy.bin")
+    busy = fs.open(busy_path, "wb")
+    busy.write(b"b" * F)
+    busy.flush()
+    fs.write_bytes(os.path.join(fs.mount, "idle.bin"), b"i" * F)
+    # cache is at capacity; the next write evicts idle.bin, not the open file
+    fs.write_bytes(os.path.join(fs.mount, "next.bin"), b"n" * F)
+    assert fs.where(os.path.join(fs.mount, "idle.bin")) is None
+    assert fs.where(busy_path) == "tmpfs"
+    busy.close()
+    assert fs.where(busy_path) == "tmpfs"
+
+
+def test_all_busy_falls_back_to_base_tier(tmp_path):
+    """When every cached file is pinned by an open handle nothing can be
+    evicted, and the write must fall back to the persistent base tier."""
+    fs = SeaFS(make_config(str(tmp_path), capacity=2 * F))
+    handles = [fs.open(os.path.join(fs.mount, f"pin{i}.bin"), "wb") for i in range(2)]
+    for h in handles:
+        h.write(b"p" * F)
+        h.flush()
+    p = os.path.join(fs.mount, "spill.bin")
+    fs.write_bytes(p, b"s" * F)
+    assert fs.where(p) == "pfs"
+    for h in handles:
+        h.close()
+    got, want = fs.hierarchy.ledger.verify(fs.hierarchy.tiers[0].roots[0])
+    assert got == want
+
+
+def test_flush_pending_files_are_not_eviction_candidates(tmp_path):
+    """COPY/MOVE files awaiting flush must never be dropped by room-making
+    (only KEEP/REMOVE modes are candidates)."""
+    fs = SeaFS(
+        make_config(str(tmp_path), capacity=2 * F, flushlist=("*.out",))
+    )
+    fs.write_bytes(os.path.join(fs.mount, "pending.out"), b"o" * F)  # COPY, unflushed
+    fs.write_bytes(os.path.join(fs.mount, "idle.bin"), b"i" * F)  # KEEP
+    fs.write_bytes(os.path.join(fs.mount, "new.bin"), b"n" * F)
+    assert fs.where(os.path.join(fs.mount, "pending.out")) == "tmpfs"
+    assert fs.where(os.path.join(fs.mount, "idle.bin")) is None
+
+
+def test_retry_loop_reselects_after_lost_races(tmp_path):
+    """The write path re-selects up to 8 times when admission is lost to a
+    concurrent writer; a late win must still land on the fast tier."""
+    fs = SeaFS(make_config(str(tmp_path), capacity=8 * F, lru_evict=False))
+    orig = fs.policy.acquire_write
+    calls = {"n": 0}
+
+    def flaky(tier, root):
+        calls["n"] += 1
+        if calls["n"] < 8:
+            return False, None  # lost the admission race
+        return orig(tier, root)
+
+    fs.policy.acquire_write = flaky
+    p = os.path.join(fs.mount, "late.bin")
+    fs.write_bytes(p, b"l" * 64)
+    assert calls["n"] == 8
+    assert fs.where(p) == "tmpfs"
+
+
+def test_retry_loop_exhaustion_falls_back_to_base(tmp_path):
+    """8 straight lost races give up on the cache: the base tier is the
+    unconditional fallback and the write must not be dropped."""
+    fs = SeaFS(make_config(str(tmp_path), capacity=8 * F, lru_evict=False))
+    fs.policy.acquire_write = lambda tier, root: (False, None)
+    p = os.path.join(fs.mount, "exhausted.bin")
+    fs.write_bytes(p, b"e" * 64)
+    assert fs.where(p) == "pfs"
+    got, want = fs.hierarchy.ledger.verify(fs.hierarchy.base.roots[0])
+    assert got == want == 64
