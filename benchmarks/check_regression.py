@@ -1,15 +1,18 @@
-"""CI perf-regression gate for the placement/multiproc benchmarks.
+"""CI perf-regression gate for the placement/multiproc/resolve benchmarks.
 
 Compares a freshly produced ``BENCH_pr2.json`` (written by
-``placement_bench --json`` + ``multiproc_bench --json``, merged by the CI
-workflow) against the committed ``benchmarks/BENCH_baseline.json``.
+``placement_bench --json`` + ``multiproc_bench --json`` +
+``resolve_bench --json``, merged by the CI workflow) against the
+committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
     population <= FLATNESS_X times its cost at the smallest,
   * ledger end-to-end open speedup over the walk at 10k files >= 5x,
   * multi-process run never over-committed the capped root,
-  * multi-process aggregate throughput did not collapse (>= 0.5x 1-proc).
+  * multi-process aggregate throughput did not collapse (>= 0.5x 1-proc),
+  * cached resolution at 3 tiers x 4 roots >= 10x faster than the seed's
+    probe cascade, with the hit path flat across root counts.
 
 Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
@@ -28,6 +31,8 @@ FLATNESS_X = 3.0      # ledger select at 10k files vs at 100 files
 MIN_OPEN_SPEEDUP = 5.0
 MIN_SCALING = 0.5     # multiproc aggregate vs single-process
 ABS_TOLERANCE_X = 5.0  # gross-regression multiplier vs committed baseline
+MIN_RESOLVE_SPEEDUP = 10.0  # cached resolution vs seed cascade at 3x4
+RESOLVE_FLATNESS_X = 3.0    # cached hit path: widest layout vs narrowest
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -79,6 +84,23 @@ def check(current: dict, baseline: dict | None) -> list[str]:
             f"at {top['n_procs']} procs < {MIN_SCALING}x"
         )
 
+    resolver = current.get("resolver")
+    if resolver is None:
+        failures.append("resolver section missing (resolve_bench not run)")
+    else:
+        speedup = resolver["resolve_speedup"]
+        if speedup < MIN_RESOLVE_SPEEDUP:
+            failures.append(
+                f"cached resolution speedup {speedup}x at the widest layout "
+                f"< required {MIN_RESOLVE_SPEEDUP}x"
+            )
+        flatness = resolver["hit_flatness"]
+        if flatness > RESOLVE_FLATNESS_X:
+            failures.append(
+                f"resolver hit path not flat across root counts: "
+                f"{flatness}x (allowed {RESOLVE_FLATNESS_X}x)"
+            )
+
     if baseline is not None:
         base_rows = baseline["placement"]["rows"]
         for r in rows:
@@ -90,6 +112,17 @@ def check(current: dict, baseline: dict | None) -> list[str]:
                     f"{r['name']}: {r['us_per_call']}us > "
                     f"{ABS_TOLERANCE_X}x baseline {b['us_per_call']}us"
                 )
+        base_resolver = baseline.get("resolver")
+        if resolver is not None and base_resolver is not None:
+            for r in resolver["rows"]:
+                if "cached" not in r["name"] and "verified" not in r["name"]:
+                    continue  # seed timings are the baseline being beaten
+                b = _row(base_resolver["rows"], r["name"])
+                if b and r["us_per_call"] > ABS_TOLERANCE_X * b["us_per_call"]:
+                    failures.append(
+                        f"{r['name']}: {r['us_per_call']}us > "
+                        f"{ABS_TOLERANCE_X}x baseline {b['us_per_call']}us"
+                    )
     return failures
 
 

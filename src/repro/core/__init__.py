@@ -5,9 +5,10 @@ Public surface:
     SeaFS                     stateless path translation + file ops (§3.1.2)
     SeaMount                  Python-level interception context (LD_PRELOAD analogue)
     Flusher / Sea             flush-and-evict daemon, prefetcher (§3.3)
+    Resolver                  O(1) key→location resolution, verify-on-hit
     CapacityLedger            O(1) capacity accounting (beyond-paper hot path)
     SharedCapacityLedger      cross-process ledger (n_procs instances per node)
-    Mode                      copy / remove / move / keep (Table 1)
+    Mode / CompiledRules      copy / remove / move / keep (Table 1)
     perf model                ``repro.core.model`` (Eqs. 1–11)
     simulator                 ``repro.core.simulator`` (paper-scale experiments)
 """
@@ -16,8 +17,9 @@ from .config import SeaConfig, default_local_config
 from .flusher import Flusher, Sea
 from .intercept import SeaMount
 from .ledger import CapacityLedger, Reservation
-from .lists import Mode, matches, resolve_mode
+from .lists import CompiledRules, Mode, matches, resolve_mode
 from .placement import PlacementPolicy
+from .resolver import Resolver
 from .seafs import SeaFS
 from .shared_ledger import SharedCapacityLedger, SharedReservation
 from .telemetry import Telemetry
@@ -34,9 +36,11 @@ __all__ = [
     "SharedCapacityLedger",
     "SharedReservation",
     "Mode",
+    "CompiledRules",
     "matches",
     "resolve_mode",
     "PlacementPolicy",
+    "Resolver",
     "SeaFS",
     "Telemetry",
     "Hierarchy",

@@ -42,6 +42,15 @@ class SeaConfig:
     capacity_ledger: bool = True        # False = seed's stateless per-call rescan
     ledger_reconcile_interval_s: float = 5.0  # staleness bound for absorbing
                                               # external writers via re-walk
+    #: namespace resolver (O(1) resolution hot path, verify-on-hit)
+    resolver_cache: bool = True         # False = seed's O(tiers*roots) probe
+                                        # cascade on every resolution
+    resolver_negative_ttl_s: float = 0.05  # how long a confirmed miss is
+                                           # trusted (read-miss storms)
+    resolver_verify_window_s: float = 0.05  # how long a verified hit skips
+                                            # the lstat (0 = verify every
+                                            # hit; data reads always heal
+                                            # on ENOENT either way)
     #: multi-process coordination (n_procs Sea instances on one node)
     shared_ledger: bool = False         # file-backed cross-process ledger under
                                         # each root + single-flusher election
@@ -64,6 +73,10 @@ class SeaConfig:
             raise ValueError("flush_workers must be positive")
         if self.ledger_reconcile_interval_s < 0:
             raise ValueError("ledger_reconcile_interval_s must be >= 0")
+        if self.resolver_negative_ttl_s < 0:
+            raise ValueError("resolver_negative_ttl_s must be >= 0")
+        if self.resolver_verify_window_s < 0:
+            raise ValueError("resolver_verify_window_s must be >= 0")
         if self.leader_heartbeat_s <= 0:
             raise ValueError("leader_heartbeat_s must be positive")
         if self.shared_ledger and not self.capacity_ledger:
@@ -146,6 +159,11 @@ class SeaConfig:
             ledger_reconcile_interval_s=sea.getfloat(
                 "ledger_reconcile_interval_s", 5.0
             ),
+            resolver_cache=sea.getboolean("resolver_cache", True),
+            resolver_negative_ttl_s=sea.getfloat("resolver_negative_ttl_s", 0.05),
+            resolver_verify_window_s=sea.getfloat(
+                "resolver_verify_window_s", 0.05
+            ),
             shared_ledger=sea.getboolean("shared_ledger", False),
             leader_heartbeat_s=sea.getfloat("leader_heartbeat_s", 0.5),
             flushlist=_read_list(FLUSHLIST_NAME),
@@ -170,6 +188,8 @@ class SeaConfig:
             max_file_size=int(env.get("SEA_MAX_FILE_SIZE", 1 << 20)),
             n_procs=int(env.get("SEA_NPROCS", "1")),
             shared_ledger=env.get("SEA_SHARED_LEDGER", "0") not in ("0", "", "false"),
+            resolver_cache=env.get("SEA_RESOLVER_CACHE", "1")
+            not in ("0", "", "false"),
         )
 
 

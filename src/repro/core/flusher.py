@@ -41,7 +41,7 @@ import time
 from urllib.parse import quote, unquote
 
 from .ledger import LEDGER_DIRNAME
-from .lists import Mode, resolve_mode
+from .lists import Mode
 from .seafs import SeaFS
 
 _TMP_SUFFIX = ".sea_tmp"
@@ -351,10 +351,7 @@ class Flusher:
                         if fn.endswith(_TMP_SUFFIX):
                             continue
                         key = os.path.relpath(os.path.join(dirpath, fn), root)
-                        mode = resolve_mode(
-                            key, self.config.flushlist, self.config.evictlist
-                        )
-                        if mode is not Mode.KEEP:
+                        if self.fs.rules.mode(key) is not Mode.KEEP:
                             self.submit(key)
                             n += 1
         return n
@@ -410,7 +407,7 @@ class Flusher:
 
     # -- the four modes ------------------------------------------------------------
     def process(self, key: str) -> Mode:
-        mode = resolve_mode(key, self.config.flushlist, self.config.evictlist)
+        mode = self.fs.rules.mode(key)
         if mode is Mode.KEEP:
             return mode
         with self.fs.key_lock(key):
@@ -421,7 +418,9 @@ class Flusher:
                 with self._cv:
                     self._deferred.add(key)
                 return mode
-            located = self.fs.hierarchy.locate(key)
+            # ignore_negative: a spooled key from another process may never
+            # have been seen locally — a negative entry must not hide it
+            located = self.fs.resolver.resolve(key, ignore_negative=True)
             if located is None:
                 return mode
             tier, real = located
@@ -454,6 +453,9 @@ class Flusher:
             root = tier.root_of(src)
             if root is not None:
                 tier.note_removed(root, key)
+            # one invalidation covers the move: the next resolve re-scans
+            # and lands on the base copy (or nothing, for REMOVE mode)
+            self.fs.resolver.invalidate(key)
             self.fs.telemetry.record_evict(nbytes)
         except OSError:
             pass
@@ -463,8 +465,6 @@ class Flusher:
         """Stage .sea_prefetchlist matches from the base tier into the
         fastest cache tier with room ("For files to be prefetched, they
         must be located within Sea's mountpoint at startup")."""
-        from .lists import matches
-
         total = 0
         base = self.fs.hierarchy.base
         for root in base.roots:
@@ -474,10 +474,10 @@ class Flusher:
                 for fn in files:
                     real = os.path.join(dirpath, fn)
                     key = os.path.relpath(real, root)
-                    if not matches(key, self.config.prefetchlist):
+                    if not self.fs.rules.prefetch_match(key):
                         continue
                     with self.fs.key_lock(key):
-                        cur = self.fs.hierarchy.locate(key)
+                        cur = self.fs.resolver.resolve(key, ignore_negative=True)
                         if cur is not None and not cur[0].persistent:
                             continue  # already cached
                         nbytes = os.path.getsize(real)
@@ -491,6 +491,9 @@ class Flusher:
                         shutil.copyfile(real, tmp)
                         os.replace(tmp, dst)
                         ctier.note_written(croot, key, nbytes)
+                        # staging created a faster replica: point the index
+                        # straight at it
+                        self.fs.resolver.note_location(key, ctier, dst)
                         self.fs.telemetry.record_prefetch(nbytes)
                         total += nbytes
         return total

@@ -109,6 +109,7 @@ class SeaMount:
                 "os.path.exists": os.path.exists,
                 "os.path.getsize": os.path.getsize,
                 "os.path.isfile": os.path.isfile,
+                "os.path.isdir": os.path.isdir,
                 "shutil.copyfile": shutil.copyfile,
             }
             builtins.open = self._wrap_open(builtins.open)
@@ -126,6 +127,9 @@ class SeaMount:
             # fs.isfile checks the *located real path* with os.path.isfile:
             # Tier.locate uses lexists, which is also true for directories.
             os.path.isfile = self._path_fn(os.path.isfile, fs.isfile)
+            # virtual directories exist wherever any tier placed a child —
+            # served from the resolver's directory index
+            os.path.isdir = self._path_fn(os.path.isdir, fs.isdir)
 
             def _copyfile(src, dst, **kw):
                 with fs.open(src, "rb") as fi, fs.open(dst, "wb") as fo:
@@ -148,5 +152,6 @@ class SeaMount:
             os.path.exists = self._saved["os.path.exists"]
             os.path.getsize = self._saved["os.path.getsize"]
             os.path.isfile = self._saved["os.path.isfile"]
+            os.path.isdir = self._saved["os.path.isdir"]
             shutil.copyfile = self._saved["shutil.copyfile"]
             _ACTIVE.clear()

@@ -18,6 +18,8 @@ from __future__ import annotations
 import enum
 import fnmatch
 import os
+import re
+import threading
 
 
 class Mode(enum.Enum):
@@ -57,3 +59,75 @@ def resolve_mode(
     if evict:
         return Mode.REMOVE
     return Mode.KEEP
+
+
+def _compile(patterns: tuple[str, ...]) -> re.Pattern | None:
+    """One alternation regex for a whole glob list (None when empty).
+    ``fnmatch.translate`` anchors each branch with ``\\Z``, so a ``match``
+    against the full relpath (and separately the basename) reproduces the
+    per-pattern ``fnmatch`` semantics in a single pass."""
+    pats = [_norm(p) for p in patterns]
+    if not pats:
+        return None
+    return re.compile("|".join(f"(?:{fnmatch.translate(p)})" for p in pats))
+
+
+class CompiledRules:
+    """Flush/evict/prefetch lists compiled once, mode resolution memoized.
+
+    The seed re-ran O(patterns) ``fnmatch`` calls per file on every close
+    and every flusher pass; here each list is one compiled alternation
+    regex and each key's :class:`Mode` is computed once. The memo is
+    bounded (cleared wholesale past ``_CACHE_MAX``) so pathological
+    key churn cannot grow it without limit.
+    """
+
+    _CACHE_MAX = 65536
+
+    def __init__(
+        self,
+        flushlist: tuple[str, ...] = (),
+        evictlist: tuple[str, ...] = (),
+        prefetchlist: tuple[str, ...] = (),
+    ):
+        self.flushlist = tuple(flushlist)
+        self.evictlist = tuple(evictlist)
+        self.prefetchlist = tuple(prefetchlist)
+        self._flush = _compile(self.flushlist)
+        self._evict = _compile(self.evictlist)
+        self._prefetch = _compile(self.prefetchlist)
+        self._modes: dict[str, Mode] = {}
+        self._lock = threading.Lock()
+
+    @staticmethod
+    def _match(rx: re.Pattern | None, rel: str, base: str) -> bool:
+        return rx is not None and (
+            rx.match(rel) is not None or rx.match(base) is not None
+        )
+
+    def mode(self, relpath: str) -> Mode:
+        """Memoized Table-1 mode of one mount-relative key."""
+        m = self._modes.get(relpath)
+        if m is not None:
+            return m
+        rel = _norm(relpath)
+        base = os.path.basename(rel)
+        flush = self._match(self._flush, rel, base)
+        evict = self._match(self._evict, rel, base)
+        if flush and evict:
+            m = Mode.MOVE
+        elif flush:
+            m = Mode.COPY
+        elif evict:
+            m = Mode.REMOVE
+        else:
+            m = Mode.KEEP
+        with self._lock:
+            if len(self._modes) >= self._CACHE_MAX:
+                self._modes.clear()
+            self._modes[relpath] = m
+        return m
+
+    def prefetch_match(self, relpath: str) -> bool:
+        rel = _norm(relpath)
+        return self._match(self._prefetch, rel, os.path.basename(rel))

@@ -65,6 +65,40 @@ class PlacementPolicy:
         roots = self.eligible_roots(base)
         return base, roots[0] if roots else base.roots[0]
 
+    def place_new(
+        self, *, reserve: bool, make_room=None
+    ) -> tuple[Tier, str, Reservation | None]:
+        """Full placement of a *new* file: select the fastest eligible
+        root and (optionally) atomically admit the write against it.
+
+        ``make_room`` (LRU eviction hook) is consulted whenever selection
+        falls through to the base tier while cache tiers exist: if it
+        frees space, selection re-runs. A lost admission race re-selects
+        (up to 8 attempts) so concurrent writers of different keys can
+        never jointly over-commit a capped root; the base tier is the
+        unconditional fallback.
+        """
+        for _attempt in range(8):
+            tier, root = self.select()
+            if (
+                make_room is not None
+                and tier is self.hierarchy.base
+                and self.hierarchy.cache_tiers
+            ):
+                if make_room():
+                    tier, root = self.select()
+            if not reserve:
+                return tier, root, None
+            if tier is self.hierarchy.base:
+                # unconditional fallback: there is nowhere slower to go
+                return tier, root, self.reserve_write(tier, root)
+            admitted, res = self.acquire_write(tier, root)
+            if admitted:
+                return tier, root, res
+        tier = self.hierarchy.base
+        root = tier.roots[0]
+        return tier, root, self.reserve_write(tier, root)
+
     # -- in-flight write budgets (ledger-backed; no-ops when stateless) -----
     def reserve_write(self, tier: Tier, root: str) -> Reservation | None:
         """Hold a worst-case (``max_file_size``) budget for one in-flight

@@ -10,22 +10,26 @@ tier hierarchy at call time; the file systems themselves are the only state
 
 from __future__ import annotations
 
+import errno
 import io
 import os
 import shutil
+import stat as stat_mod
 import threading
 import time
 from collections import defaultdict
 
 from .config import SeaConfig
 from .ledger import LEDGER_DIRNAME
-from .lists import Mode, resolve_mode
+from .lists import CompiledRules, Mode
 from .placement import PlacementPolicy
+from .resolver import Resolver
 from .telemetry import Stopwatch, Telemetry
 from .tiers import Hierarchy, Tier
 
 _WRITE_CHARS = ("w", "a", "x", "+")
 _STRIPE_MANIFEST_SUFFIX = ".sea_stripe.json"
+_TMP_SUFFIX = ".sea_tmp"  # atomic-commit staging (flusher/persist)
 
 
 def _is_write_mode(mode: str) -> bool:
@@ -116,6 +120,16 @@ class SeaFS:
             max_file_size=config.max_file_size,
             n_procs=config.n_procs,
         )
+        self.resolver = Resolver(
+            self.hierarchy,
+            self.telemetry,
+            enabled=config.resolver_cache,
+            negative_ttl_s=config.resolver_negative_ttl_s,
+            verify_window_s=config.resolver_verify_window_s,
+        )
+        self.rules = CompiledRules(
+            config.flushlist, config.evictlist, config.prefetchlist
+        )
         self.mount = config.mount
         os.makedirs(self.mount, exist_ok=True)
         self._open_counts: dict[str, int] = defaultdict(int)
@@ -149,9 +163,13 @@ class SeaFS:
 
     # -- resolution ----------------------------------------------------------
     def resolve_read(self, key: str) -> tuple[Tier, str] | None:
-        """Locate an existing file, fastest tier first."""
+        """Locate an existing file, fastest tier first — a pure dict
+        lookup within the verify trust window, one verify ``lstat`` past
+        it, the full probe cascade only on a cold/invalidated key.
+        Callers that open the returned path should treat ENOENT as a
+        failed verify and re-resolve (``SeaFS.open`` does)."""
         with self.key_lock(key):
-            return self.hierarchy.locate(key)
+            return self.resolver.resolve(key, trust_window=True)
 
     def resolve_write(self, key: str) -> tuple[Tier, str]:
         """Pick the destination for a (re)write.
@@ -173,7 +191,10 @@ class SeaFS:
         concurrent writers of *different* keys can never jointly
         over-commit a capped root."""
         with self.key_lock(key):
-            found = self.hierarchy.locate(key)
+            # check_faster: an overwrite must land on the TRUE fastest
+            # replica, so a cached hit additionally probes the tiers above
+            # it (free when the hit is already on tier 0)
+            found = self.resolver.resolve(key, check_faster=True)
             if found is not None:
                 tier, real = found
                 res = None
@@ -184,32 +205,15 @@ class SeaFS:
                         # in-flight budget until close commits the size
                         res = self.policy.reserve_write(tier, root)
                 return tier, real, res
-            res = None
-            for _attempt in range(8):
-                tier, root = self.policy.select()
-                if (
-                    self.config.lru_evict
-                    and tier is self.hierarchy.base
-                    and self.hierarchy.cache_tiers
-                ):
-                    freed = self._lru_make_room()
-                    if freed:
-                        tier, root = self.policy.select()
-                if not reserve:
-                    break
-                if tier is self.hierarchy.base:
-                    # unconditional fallback: there is nowhere slower to go
-                    res = self.policy.reserve_write(tier, root)
-                    break
-                admitted, res = self.policy.acquire_write(tier, root)
-                if admitted:
-                    break
-            else:
-                tier = self.hierarchy.base
-                root = tier.roots[0]
-                res = self.policy.reserve_write(tier, root)
+            make_room = self._lru_make_room if self.config.lru_evict else None
+            tier, root, res = self.policy.place_new(
+                reserve=reserve, make_room=make_room
+            )
             real = os.path.join(root, key)
             os.makedirs(os.path.dirname(real), exist_ok=True)
+            # verified=False: the file is not materialized until the
+            # caller's io.open — the first read hit must verify
+            self.resolver.note_location(key, tier, real, verified=False)
             return tier, real, res
 
     def resolve(self, path: str, mode: str = "r") -> str:
@@ -242,13 +246,33 @@ class SeaFS:
             else:
                 found = self.resolve_read(key)
                 if found is None:
-                    # let io.open raise the canonical FileNotFoundError
-                    return io.open(
-                        os.path.join(self.hierarchy.base.roots[0], key), mode, **kw
-                    )
+                    # a fresh negative entry may hide a file another
+                    # process created moments ago: one authoritative
+                    # scan before declaring the miss — open() must never
+                    # spuriously fail because of the cache
+                    found = self.resolver.resolve(key, ignore_negative=True)
+                if found is None:
+                    return self._open_base_miss(key, mode, **kw)
                 tier, real = found
             try:
                 raw = io.open(real, mode, **kw)
+            except FileNotFoundError:
+                if reservation is not None:
+                    self.policy.release_write(tier, reservation)
+                if writing:
+                    raise
+                # the open doubled as the verify and failed (the file
+                # moved between resolution and open): heal and retry once
+                found = self.resolver.refresh(key)
+                if found is None:
+                    return self._open_base_miss(key, mode, **kw)
+                tier, real = found
+                try:
+                    raw = io.open(real, mode, **kw)
+                except FileNotFoundError:
+                    # removed again mid-retry: raise the canonical error
+                    # against the persistent location, like a plain miss
+                    return self._open_base_miss(key, mode, **kw)
             except Exception:
                 if reservation is not None:
                     self.policy.release_write(tier, reservation)
@@ -257,6 +281,14 @@ class SeaFS:
                 self._open_counts[key] += 1
                 self._access_clock[key] = time.monotonic()
         return _SeaFile(self, key, raw, tier, writing, real, reservation)
+
+    def _open_base_miss(self, key: str, mode: str, **kw):
+        """The canonical miss: open against the persistent location so the
+        caller gets POSIX ENOENT semantics (or creates the file there,
+        for write modes reaching this fallback)."""
+        return io.open(
+            os.path.join(self.hierarchy.base.roots[0], key), mode, **kw
+        )
 
     def _on_close(
         self,
@@ -283,6 +315,7 @@ class SeaFS:
                     self.policy.commit_write(tier, reservation, root, key, actual)
                 else:
                     self.policy.release_write(tier, reservation)
+                self.resolver.note_location(key, tier, real)
             self.telemetry.record_io(tier.name, written=max(nbytes, 0), seconds=dt)
         else:
             self.telemetry.record_io(tier.name, read=max(nbytes, 0), seconds=dt)
@@ -348,6 +381,7 @@ class SeaFS:
                 with open(real, "wb") as f:
                     f.write(part)
                 tier.note_written(root, pkey, len(part))
+                self.resolver.note_location(pkey, tier, real)
             manifest = {"n_parts": n_parts, "chunk": chunk, "total": len(data),
                         "tier": tier.name}
             with self.open(path + _STRIPE_MANIFEST_SUFFIX, "w") as f:
@@ -365,7 +399,7 @@ class SeaFS:
         with self.key_lock(key):
             for i in range(manifest["n_parts"]):
                 pkey = f"{key}.sea_stripe.{i:04d}"
-                located = self.hierarchy.locate(pkey)
+                located = self.resolver.resolve(pkey)
                 if located is None:
                     raise FileNotFoundError(f"missing stripe part {i} of {path}")
                 with open(located[1], "rb") as f:
@@ -377,18 +411,22 @@ class SeaFS:
 
     # -- metadata ops (the other glibc wrappers) -------------------------------
     def exists(self, path: str) -> bool:
+        """Existence across the hierarchy. Served from the location index
+        (positive AND negative entries): answers about files mutated by
+        *other* processes may lag by up to the verify window / negative
+        TTL; in-process mutations are always reflected immediately."""
         if not self.is_sea_path(path):
             return os.path.exists(path)
-        return self.hierarchy.locate(self.key_of(path)) is not None or os.path.isdir(
-            self._any_dir(self.key_of(path))
+        key = self.key_of(path)
+        return (
+            self.resolver.resolve(key, trust_window=True) is not None
+            or self.resolver.locate_dir(key) is not None
         )
 
     def _any_dir(self, key: str) -> str:
-        for tier in self.hierarchy:
-            for root in tier.roots:
-                p = os.path.join(root, key)
-                if os.path.isdir(p):
-                    return p
+        found = self.resolver.locate_dir(key)
+        if found is not None:
+            return found
         return os.path.join(self.hierarchy.base.roots[0], key)
 
     def isfile(self, path: str) -> bool:
@@ -397,42 +435,78 @@ class SeaFS:
         checking the located real path keeps POSIX ``isfile`` semantics.)"""
         if not self.is_sea_path(path):
             return os.path.isfile(path)
-        found = self.hierarchy.locate(self.key_of(path))
-        return found is not None and os.path.isfile(found[1])
+        key = self.key_of(path)
+        found = self.resolver.resolve(key, trust_window=True)
+        if found is None:
+            return False
+        try:
+            st = os.stat(found[1])
+        except FileNotFoundError:
+            # the stat doubled as the verify and failed: heal and retry
+            found = self.resolver.refresh(key)
+            if found is None:
+                return False
+            try:
+                st = os.stat(found[1])
+            except OSError:
+                return False
+        except OSError:
+            return False
+        return stat_mod.S_ISREG(st.st_mode)
+
+    def isdir(self, path: str) -> bool:
+        """True iff some tier holds a directory at this key (a virtual
+        directory exists wherever any of its children were placed)."""
+        if not self.is_sea_path(path):
+            return os.path.isdir(path)
+        return self.resolver.locate_dir(self.key_of(path)) is not None
 
     def stat(self, path: str):
         if not self.is_sea_path(path):
             return os.stat(path)
         key = self.key_of(path)
-        found = self.hierarchy.locate(key)
+        found = self.resolver.resolve(key, trust_window=True)
+        if found is None:
+            # the negative cache must not turn a just-created file into a
+            # spurious ENOENT: one authoritative scan before falling back
+            found = self.resolver.resolve(key, ignore_negative=True)
         if found is not None:
-            return os.stat(found[1])
-        return os.stat(self._any_dir(key))  # raises FileNotFoundError if absent
+            try:
+                return os.stat(found[1])
+            except FileNotFoundError:
+                # the stat doubled as the verify and failed: heal, retry
+                found = self.resolver.refresh(key)
+                if found is not None:
+                    try:
+                        return os.stat(found[1])
+                    except FileNotFoundError:
+                        pass  # removed again mid-retry: fall through
+        try:
+            return os.stat(self._any_dir(key))
+        except FileNotFoundError:
+            # report the user's mount path, not the translated tier path
+            raise FileNotFoundError(
+                errno.ENOENT, os.strerror(errno.ENOENT), path
+            ) from None
 
     def getsize(self, path: str) -> int:
         return self.stat(path).st_size
 
     def listdir(self, path: str) -> list[str]:
         """Union of entries across tiers (a directory is virtual: its
-        children may be spread over several devices)."""
+        children may be spread over several devices). Served from the
+        resolver's per-directory child index when its per-root signatures
+        still verify."""
         if not self.is_sea_path(path):
             return os.listdir(path)
-        key = self.key_of(path)
-        key = "" if key == "." else key
-        seen: set[str] = set()
-        found_dir = False
-        for tier in self.hierarchy:
-            for root in tier.roots:
-                p = os.path.join(root, key) if key else root
-                if os.path.isdir(p):
-                    found_dir = True
-                    seen.update(os.listdir(p))
-        if not found_dir:
-            raise FileNotFoundError(path)
+        seen = self.resolver.listdir(self.key_of(path))
+        if seen is None:
+            raise FileNotFoundError(errno.ENOENT, os.strerror(errno.ENOENT), path)
         # the shared ledger / flusher-coordination store is bookkeeping
-        # living inside each root, not application data
+        # living inside each root, not application data — and an in-flight
+        # flush's .sea_tmp staging file must never leak into the union
         seen.discard(LEDGER_DIRNAME)
-        return sorted(seen)
+        return sorted(n for n in seen if not n.endswith(_TMP_SUFFIX))
 
     def makedirs(self, path: str, exist_ok: bool = False) -> None:
         """Directories are created lazily per tier on write; creating them
@@ -451,17 +525,26 @@ class SeaFS:
             return
         key = self.key_of(path)
         with self.key_lock(key):
-            removed = False
-            for tier in self.hierarchy:
-                real = tier.locate(key)
-                if real is not None:
+            # one full-scan pass enumerates EVERY replica (COPY mode keeps
+            # a base copy; a tier may even hold copies on several roots —
+            # the seed's per-tier ``locate`` probe stopped at the first),
+            # then all of them go atomically under the key lock with a
+            # single resolver invalidation.
+            replicas = self.hierarchy.locate_all(key)
+            if not replicas:
+                self.resolver.invalidate(key)
+                raise FileNotFoundError(
+                    errno.ENOENT, os.strerror(errno.ENOENT), path
+                )
+            for tier, real in replicas:
+                try:
                     os.remove(real)
-                    root = tier.root_of(real)
-                    if root is not None:
-                        tier.note_removed(root, key)
-                    removed = True
-            if not removed:
-                raise FileNotFoundError(path)
+                except FileNotFoundError:
+                    continue  # raced an evict: already gone
+                root = tier.root_of(real)
+                if root is not None:
+                    tier.note_removed(root, key)
+            self.resolver.invalidate(key)
 
     def rename(self, src: str, dst: str) -> None:
         s_in, d_in = self.is_sea_path(src), self.is_sea_path(dst)
@@ -471,7 +554,7 @@ class SeaFS:
         if s_in and d_in:
             skey, dkey = self.key_of(src), self.key_of(dst)
             with self.key_lock(skey), self.key_lock(dkey):
-                found = self.hierarchy.locate(skey)
+                found = self.resolver.resolve(skey, check_faster=True)
                 if found is None:
                     raise FileNotFoundError(src)
                 tier, real = found
@@ -490,17 +573,21 @@ class SeaFS:
                         if oroot is not None:
                             t.note_removed(oroot, dkey)
                 os.replace(real, dreal)
+                self.resolver.invalidate(skey)
                 sroot = tier.root_of(real)
                 if sroot is not None:
                     tier.note_removed(sroot, skey)
                 owner = self.hierarchy.owner_of(dreal)
                 if owner is not None:
+                    self.resolver.note_location(dkey, owner[0], dreal)
                     try:
                         owner[0].note_written(
                             owner[1], dkey, os.path.getsize(dreal)
                         )
                     except OSError:
                         pass
+                else:
+                    self.resolver.invalidate(dkey)
             return
         # crossing the mount boundary: copy semantics via resolve
         rsrc = self.resolve(src, "r")
@@ -510,6 +597,7 @@ class SeaFS:
         if d_in:
             owner = self.hierarchy.owner_of(rdst)
             if owner is not None:
+                self.resolver.note_location(self.key_of(dst), owner[0], rdst)
                 try:
                     owner[0].note_written(
                         owner[1], self.key_of(dst), os.path.getsize(rdst)
@@ -537,9 +625,7 @@ class SeaFS:
                         key = os.path.relpath(real, root)
                         if self.open_count(key):
                             continue
-                        mode = resolve_mode(
-                            key, self.config.flushlist, self.config.evictlist
-                        )
+                        mode = self.rules.mode(key)
                         if mode in (Mode.KEEP, Mode.REMOVE):
                             at = self._access_clock.get(key, 0.0)
                             candidates.append((at, key, real, tier, root))
@@ -553,6 +639,7 @@ class SeaFS:
                     nbytes = os.path.getsize(real)
                     os.remove(real)
                     vtier.note_removed(vroot, key)
+                    self.resolver.invalidate(key)
                     self.telemetry.record_evict(nbytes)
                     freed_any = True
                 except OSError:
@@ -570,9 +657,11 @@ class SeaFS:
 
         key = self.key_of(path)
         with self.key_lock(key):
-            located = self.hierarchy.locate(key)
+            located = self.resolver.resolve(key)
             if located is None:
-                raise FileNotFoundError(path)
+                raise FileNotFoundError(
+                    errno.ENOENT, os.strerror(errno.ENOENT), path
+                )
             tier, real = located
             base_root = self.hierarchy.base.roots[0]
             dst = os.path.join(base_root, key)
@@ -592,9 +681,12 @@ class SeaFS:
         """Tier name currently holding the file (fastest hit), or None."""
         if not self.is_sea_path(path):
             return None
-        found = self.hierarchy.locate(self.key_of(path))
+        # a COPY-flushed file keeps its fast replica: probe above the
+        # cached hit so introspection reports the true fastest tier
+        found = self.resolver.resolve(self.key_of(path), check_faster=True)
         return found[0].name if found else None
 
     def wipe(self) -> None:
         for tier in self.hierarchy:
             tier.wipe()
+        self.resolver.invalidate_all()

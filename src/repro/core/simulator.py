@@ -105,6 +105,8 @@ class SimResult:
     bytes_by_tier: dict[str, float]
     flush_tail_s: float           # time between last app op and full drain
     app_done_s: float
+    resolver_hits: int = 0        # resolutions served by the cached index
+    resolver_misses: int = 0      # full O(tiers*roots) probe cascades
 
 
 class _Node:
@@ -136,6 +138,8 @@ class Simulator:
         placement_scan_s_per_file: float = 0.0,  # per-cached-file walk cost
         shared_ledger: bool = False,         # cross-process ledger + 1 flusher
         ledger_lock_s: float = 0.0,          # fcntl critical-section length
+        resolver_cache: bool = True,         # cached key->location index
+        resolve_probe_s: float = 0.0,        # one lexists/lstat metadata RTT
     ):
         assert system in ("lustre", "sea", "sea-flushall")
         self.cl = cluster
@@ -165,6 +169,14 @@ class Simulator:
         if flushers_per_node is None:
             flushers_per_node = 1 if shared_ledger else cluster.p
         self.flushers_per_node = flushers_per_node
+        # Resolution-cost model: locating a file before a read probes the
+        # tier roots fastest-first (`resolve_probe_s` per lexists). With
+        # the resolver cache, a repeat access is one verify lstat; without
+        # it, every access pays the cascade down to the resident tier.
+        self.resolver_cache = resolver_cache
+        self.resolve_probe_s = resolve_probe_s
+        self.resolver_hits = 0
+        self.resolver_misses = 0
         self.nodes = [_Node(i, cluster) for i in range(cluster.c)]
         self.caps = self._build_resources()
         self.bytes_by_tier: dict[str, float] = defaultdict(float)
@@ -213,6 +225,27 @@ class Simulator:
             cost += self.ledger_lock_s * (1.0 + (self.cl.p - 1) / 2.0)
         return cost
 
+    def resolution_cost_s(self, *, repeat: bool, resident: str) -> float:
+        """Seconds one read-side resolution costs. A cached repeat access
+        is a single verify ``lstat``; a cold access (or any access with
+        the resolver disabled) probes the roots fastest-first until the
+        resident tier answers — 1 probe for tmpfs, up to g+1 for a local
+        disk, and the full ``1 + g + 1`` cascade for Lustre-resident
+        files (every cache root says ENOENT first)."""
+        if self.resolve_probe_s <= 0.0:
+            return 0.0
+        if self.resolver_cache and repeat:
+            self.resolver_hits += 1
+            return self.resolve_probe_s
+        self.resolver_misses += 1
+        if resident == "tmpfs":
+            probes = 1
+        elif resident.startswith("disk"):
+            probes = 1 + self.cl.g
+        else:  # lustre / pagecache-backed base tier
+            probes = 1 + self.cl.g + 1
+        return self.resolve_probe_s * probes
+
     def sea_place_write(self, nd: _Node) -> tuple[str, tuple[str, ...]]:
         cl, F = self.cl, self.w.F
         reserve = cl.p * F
@@ -240,14 +273,26 @@ class Simulator:
                 blocks.popleft()
             except IndexError:
                 return
-            # initial read from Lustre (cold input)
+            # initial read from Lustre (cold input): a Sea resolution pays
+            # the full probe cascade — the file lives on the base tier
+            if self.system != "lustre":
+                rcost = self.resolution_cost_s(repeat=False, resident="lustre")
+                if rcost > 0.0:
+                    yield ComputeOp(rcost)
             yield ReadOp(self.lustre_read_path(nd.idx), w.F, cap=self.cl.L_stream_r)
             last_tier = None
             for i in range(1, w.n + 1):
                 if self.compute_s:
                     yield ComputeOp(self.compute_s)
                 if i > 1:
-                    # re-read previous iteration's file: page-cache hit
+                    # re-read previous iteration's file: page-cache hit,
+                    # located via the resolver (repeat access)
+                    if self.system != "lustre":
+                        rcost = self.resolution_cost_s(
+                            repeat=True, resident=last_tier or "tmpfs"
+                        )
+                        if rcost > 0.0:
+                            yield ComputeOp(rcost)
                     yield ReadOp((f"mem_r{nd.idx}",), w.F)
                 if self.system == "lustre":
                     tier, path = self._lustre_app_write(nd)
@@ -362,6 +407,8 @@ class Simulator:
             bytes_by_tier=dict(self.bytes_by_tier),
             flush_tail_s=makespan - (app_done_t if app_done_t is not None else makespan),
             app_done_s=app_done_t if app_done_t is not None else makespan,
+            resolver_hits=self.resolver_hits,
+            resolver_misses=self.resolver_misses,
         )
 
     def _has_flush_work(self) -> bool:

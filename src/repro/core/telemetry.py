@@ -44,6 +44,13 @@ class Telemetry:
     passthrough: int = 0       # paths outside the mount (left untouched)
     ledger_hits: int = 0       # O(1) capacity queries answered by the ledger
     ledger_reconciles: int = 0  # full-root walks (reconcile path only)
+    resolver_hits: int = 0          # resolutions served by the location index
+    resolver_misses: int = 0        # full probe cascades (cold or invalidated)
+    resolver_negative_hits: int = 0  # misses absorbed by the negative cache
+    resolver_verify_fails: int = 0  # cached paths that vanished (file moved)
+    resolver_invalidations: int = 0  # entries dropped by mutation paths
+    dir_index_hits: int = 0         # listdir unions served by the child index
+    dir_index_misses: int = 0       # listdir unions that re-walked the roots
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def record_io(
@@ -89,6 +96,30 @@ class Telemetry:
         with self._lock:
             self.ledger_reconciles += 1
 
+    def record_resolve(
+        self, *, hit: bool, negative: bool = False, verify_failed: bool = False
+    ) -> None:
+        with self._lock:
+            if hit:
+                self.resolver_hits += 1
+                if negative:
+                    self.resolver_negative_hits += 1
+            else:
+                self.resolver_misses += 1
+                if verify_failed:
+                    self.resolver_verify_fails += 1
+
+    def record_resolver_invalidate(self) -> None:
+        with self._lock:
+            self.resolver_invalidations += 1
+
+    def record_dir_resolve(self, *, hit: bool) -> None:
+        with self._lock:
+            if hit:
+                self.dir_index_hits += 1
+            else:
+                self.dir_index_misses += 1
+
     def snapshot(self) -> dict:
         with self._lock:
             return {
@@ -104,6 +135,13 @@ class Telemetry:
                 "passthrough": self.passthrough,
                 "ledger_hits": self.ledger_hits,
                 "ledger_reconciles": self.ledger_reconciles,
+                "resolver_hits": self.resolver_hits,
+                "resolver_misses": self.resolver_misses,
+                "resolver_negative_hits": self.resolver_negative_hits,
+                "resolver_verify_fails": self.resolver_verify_fails,
+                "resolver_invalidations": self.resolver_invalidations,
+                "dir_index_hits": self.dir_index_hits,
+                "dir_index_misses": self.dir_index_misses,
             }
 
     def export(self, path: str) -> str:

@@ -259,14 +259,44 @@ class Hierarchy:
     def __len__(self) -> int:
         return len(self.tiers)
 
+    @property
+    def total_roots(self) -> int:
+        """Number of probe targets one full resolution cascade touches."""
+        return sum(len(t.roots) for t in self.tiers)
+
     def locate(self, relpath: str) -> tuple[Tier, str] | None:
         """Find a file across the hierarchy, fastest tier first.
 
         This is the stateless resolution at the heart of Sea: no metadata
         server — a file's location IS its state on the file systems.
+        (:class:`~repro.core.resolver.Resolver` caches this cascade; this
+        method remains the source-of-truth fallback.)
         """
         for tier in self.tiers:
             real = tier.locate(relpath)
             if real is not None:
                 return tier, real
         return None
+
+    def locate_above(self, relpath: str, level: int) -> tuple[Tier, str] | None:
+        """Find a replica on a tier *faster* than ``level`` — the
+        write-side verify: an overwrite of a cached hit must never miss a
+        faster copy (probes zero roots when ``level`` is already 0)."""
+        for tier in self.tiers:
+            if tier.level >= level:
+                break
+            real = tier.locate(relpath)
+            if real is not None:
+                return tier, real
+        return None
+
+    def locate_all(self, relpath: str) -> list[tuple[Tier, str]]:
+        """Every replica of ``relpath`` across every root of every tier
+        (``locate`` stops at the first hit per tier; removal must not)."""
+        out: list[tuple[Tier, str]] = []
+        for tier in self.tiers:
+            for root in tier.roots:
+                p = os.path.join(root, relpath)
+                if os.path.lexists(p):
+                    out.append((tier, p))
+        return out

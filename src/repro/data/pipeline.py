@@ -148,18 +148,22 @@ class DataPipeline:
         else:
             self.stats.cache_misses += 1
             # stage into the fastest cache tier with room (prefetch)
-            located = self.fs.hierarchy.locate(key)
+            located = self.fs.resolver.resolve(key, ignore_negative=True)
             if located is not None:
                 nbytes = os.path.getsize(located[1])
                 slot = self.fs.policy.select_cache_for_prefetch(nbytes)
                 if slot is not None:
-                    _tier, croot = slot
+                    ctier, croot = slot
                     dst = os.path.join(croot, key)
                     os.makedirs(os.path.dirname(dst), exist_ok=True)
                     import shutil
 
                     shutil.copyfile(located[1], dst + ".sea_tmp")
                     os.replace(dst + ".sea_tmp", dst)
+                    # account the staged bytes and point the resolver at
+                    # the fast copy (mirrors Flusher.prefetch)
+                    ctier.note_written(croot, key, nbytes)
+                    self.fs.resolver.note_location(key, ctier, dst)
                     self.fs.telemetry.record_prefetch(nbytes)
         with self.fs.open(path, "rb") as f:
             arr = np.load(f, allow_pickle=False)
@@ -171,15 +175,22 @@ class DataPipeline:
         with self.fs.key_lock(key):
             if self.fs.hierarchy.base.locate(key) is None:
                 return  # never orphan the only copy
+            evicted = False
             for tier in self.fs.hierarchy.cache_tiers:
                 real = tier.locate(key)
                 if real is not None:
                     try:
                         os.remove(real)
+                        root = tier.root_of(real)
+                        if root is not None:
+                            tier.note_removed(root, key)
                         self.stats.evictions += 1
                         self.fs.telemetry.record_evict(0)
+                        evicted = True
                     except OSError:
                         pass
+            if evicted:
+                self.fs.resolver.invalidate(key)
 
     # -- iteration --------------------------------------------------------------
     def __iter__(self):
