@@ -1,9 +1,10 @@
-"""CI perf-regression gate for the placement/multiproc/resolve benchmarks.
+"""CI perf-regression gate for the placement/multiproc/resolve/transfer
+benchmarks.
 
 Compares a freshly produced ``BENCH_pr2.json`` (written by
 ``placement_bench --json`` + ``multiproc_bench --json`` +
-``resolve_bench --json``, merged by the CI workflow) against the
-committed ``benchmarks/BENCH_baseline.json``.
+``resolve_bench --json`` + ``transfer_bench --json``, merged by the CI
+workflow) against the committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
@@ -12,7 +13,12 @@ The structural gates are machine-independent and strict:
   * multi-process run never over-committed the capped root,
   * multi-process aggregate throughput did not collapse (>= 0.5x 1-proc),
   * cached resolution at 3 tiers x 4 roots >= 10x faster than the seed's
-    probe cascade, with the hit path flat across root counts.
+    probe cascade, with the hit path flat across root counts,
+  * transfer engine moves a large file at parity with shutil.copyfile
+    (ratio >= MIN_TRANSFER_RATIO) and pooled prefetch staging overlaps
+    > MIN_OVERLAP_SPEEDUP x over serial copies. (Transfer gates are
+    pure ratios — absolute throughputs are machine-dependent, so no
+    baseline comparison is applied to them.)
 
 Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
@@ -33,6 +39,11 @@ MIN_SCALING = 0.5     # multiproc aggregate vs single-process
 ABS_TOLERANCE_X = 5.0  # gross-regression multiplier vs committed baseline
 MIN_RESOLVE_SPEEDUP = 10.0  # cached resolution vs seed cascade at 3x4
 RESOLVE_FLATNESS_X = 3.0    # cached hit path: widest layout vs narrowest
+MIN_TRANSFER_RATIO = 0.85   # engine vs shutil.copyfile large-file parity:
+                            # both bottom out at the same zero-copy syscalls,
+                            # so a genuine chunk-loop regression measures
+                            # 0.6-0.75 while runner noise stays within ±0.1
+MIN_OVERLAP_SPEEDUP = 1.5   # pooled staging vs serial copies (latency-bound)
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -99,6 +110,23 @@ def check(current: dict, baseline: dict | None) -> list[str]:
             failures.append(
                 f"resolver hit path not flat across root counts: "
                 f"{flatness}x (allowed {RESOLVE_FLATNESS_X}x)"
+            )
+
+    transfer = current.get("transfer")
+    if transfer is None:
+        failures.append("transfer section missing (transfer_bench not run)")
+    else:
+        ratio = transfer["large_ratio"]
+        if ratio < MIN_TRANSFER_RATIO:
+            failures.append(
+                f"transfer engine large-file throughput {ratio}x of shutil "
+                f"< required {MIN_TRANSFER_RATIO}x parity"
+            )
+        overlap = transfer["overlap_speedup"]
+        if overlap <= MIN_OVERLAP_SPEEDUP:
+            failures.append(
+                f"concurrent-prefetch overlap {overlap}x <= required "
+                f"{MIN_OVERLAP_SPEEDUP}x over serial staging"
             )
 
     if baseline is not None:

@@ -1,0 +1,218 @@
+"""Data-plane benchmark: the TransferEngine vs the seed's shutil copies.
+
+Two acceptance targets for the transfer-engine PR:
+
+* **Large-file throughput** — the engine's chunked ``copy_file_range``
+  loop must move a large file at least as fast as a bare
+  ``shutil.copyfile`` (the seed's whole-file copy). Both bottom out at
+  the same in-kernel copy syscalls, so the pass condition is parity:
+  median per-round ratio >= 0.85 after de-biasing (alternating
+  measurement order, fresh destination files for both sides) — a
+  genuine chunk-loop regression (e.g. a too-small chunk size, or the
+  buffered fallback engaging when zero-copy is available) measures
+  0.6-0.75; a ratio above 1 is noise in the engine's favour, not a
+  real win.
+* **Concurrent overlap** — staging N independent files through the
+  engine's bounded worker pool must beat the seed's serial copy loop by
+  > 1.5x when per-chunk device latency dominates (the chunk hook injects
+  a fixed per-chunk stall, modelling a high-latency device/network the
+  way the openPMD/ADIOS2 streaming pipelines overlap I/O).
+
+``PYTHONPATH=src python -m benchmarks.transfer_bench [--json PATH]``
+prints the same ``name,us_per_call,derived`` CSV as the other benches;
+``--json`` dumps rows + derived ratios for ``benchmarks.check_regression``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+from repro.core import SeaConfig, TierSpec, TransferEngine
+
+_LARGE_BYTES = 64 << 20      # one large artifact (a checkpoint shard)
+_LARGE_ROUNDS = 16           # best-of, alternating measurement order
+_MIN_LARGE_RATIO = 0.85      # parity gate (see module docstring): a real
+                             # chunk-loop regression measures ~0.6-0.75;
+                             # scheduler drift on busy runners is ~±0.1
+_OVERLAP_FILES = 8
+_OVERLAP_BYTES = 4 << 20
+_OVERLAP_CHUNK = 1 << 20
+_OVERLAP_STALL_S = 0.005     # injected per-chunk device latency — large
+                             # enough that the stall (not the memcpy)
+                             # dominates, so the pool's overlap is what
+                             # the measurement sees even on 2-core runners
+
+
+def _config(workdir: str, workers: int, chunk: int | None = None) -> SeaConfig:
+    kw = {"transfer_chunk_bytes": chunk} if chunk else {}
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(name="fast", roots=(os.path.join(workdir, "fast"),)),
+            TierSpec(
+                name="pfs", roots=(os.path.join(workdir, "pfs"),), persistent=True
+            ),
+        ],
+        transfer_workers=workers,
+        **kw,
+    )
+
+
+def _make_file(path: str, nbytes: int) -> str:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(os.urandom(1 << 20) * (nbytes >> 20) or os.urandom(nbytes))
+    return path
+
+
+def bench_large_file(workdir: str) -> tuple[list[dict], float]:
+    src = _make_file(os.path.join(workdir, "src", "big.bin"), _LARGE_BYTES)
+    engine = TransferEngine(_config(workdir, workers=1))
+    dst_dir = os.path.join(workdir, "dst")
+    os.makedirs(dst_dir, exist_ok=True)
+    seq = [0]
+
+    def timed(fn) -> float:
+        # a FRESH destination every round for BOTH sides: rewriting an
+        # existing file reuses already-allocated pages (tmpfs/page
+        # cache), which flattered whichever side kept its dst path
+        seq[0] += 1
+        dst = os.path.join(dst_dir, f"out_{seq[0]}.bin")
+        t0 = time.perf_counter()
+        fn(dst)
+        dt = time.perf_counter() - t0
+        if seq[0] <= 2:  # verify both copiers' output once (warmup round)
+            with open(dst, "rb") as a, open(src, "rb") as b:
+                assert a.read(1 << 16) == b.read(1 << 16)  # sanity
+        os.unlink(dst)
+        return dt
+
+    copy_shutil = lambda dst: shutil.copyfile(src, dst)  # noqa: E731
+    copy_engine = lambda dst: engine.copy(src, dst)  # noqa: E731
+    timed(copy_shutil), timed(copy_engine)  # warmup (page in the source)
+    ratios: list[float] = []
+    shutil_times: list[float] = []
+    engine_times: list[float] = []
+    for i in range(_LARGE_ROUNDS):
+        # alternate who goes first inside a round (the first copy of a
+        # pair consistently measures faster — frequency/cache effects)
+        # and take the MEDIAN of per-round ratios: robust to the load
+        # spikes of shared CI runners, which best-of is not
+        if i % 2 == 0:
+            ts, te = timed(copy_shutil), timed(copy_engine)
+        else:
+            te, ts = timed(copy_engine), timed(copy_shutil)
+        shutil_times.append(ts)
+        engine_times.append(te)
+        ratios.append(ts / te)
+    s_shutil, s_engine = min(shutil_times), min(engine_times)
+    ratio = sorted(ratios)[len(ratios) // 2]
+
+    mbps = lambda s: _LARGE_BYTES / s / 1e6  # noqa: E731
+    rows = [
+        {
+            "name": f"copy_shutil_{_LARGE_BYTES >> 20}MiB",
+            "us_per_call": round(s_shutil * 1e6, 2),
+            "derived": f"{mbps(s_shutil):.0f}MB/s",
+        },
+        {
+            "name": f"copy_engine_{_LARGE_BYTES >> 20}MiB",
+            "us_per_call": round(s_engine * 1e6, 2),
+            "derived": f"{mbps(s_engine):.0f}MB/s ratio={ratio:.2f}x",
+        },
+    ]
+    return rows, ratio
+
+
+def bench_overlap(workdir: str) -> tuple[list[dict], float]:
+    """Serial vs pooled staging of independent files with per-chunk
+    latency injected through the engine's chunk hook."""
+    srcs = [
+        _make_file(os.path.join(workdir, "pfs", f"in_{i}.bin"), _OVERLAP_BYTES)
+        for i in range(_OVERLAP_FILES)
+    ]
+
+    def run(workers: int) -> float:
+        engine = TransferEngine(
+            _config(workdir, workers=workers, chunk=_OVERLAP_CHUNK)
+        )
+        engine.chunk_hook = lambda *_a: time.sleep(_OVERLAP_STALL_S)
+        dsts = [
+            os.path.join(workdir, f"stage{workers}", f"out_{i}.bin")
+            for i in range(_OVERLAP_FILES)
+        ]
+        for d in dsts:
+            os.makedirs(os.path.dirname(d), exist_ok=True)
+        t0 = time.perf_counter()
+        if workers == 1:
+            for s, d in zip(srcs, dsts):
+                engine.copy(s, d)
+        else:
+            futs = [engine.submit_copy(s, d) for s, d in zip(srcs, dsts)]
+            for f in futs:
+                f.result()
+        dt = time.perf_counter() - t0
+        engine.close()
+        return dt
+
+    s_serial = run(1)
+    s_pool = run(4)
+    speedup = s_serial / s_pool
+    rows = [
+        {
+            "name": f"prefetch_serial_{_OVERLAP_FILES}x{_OVERLAP_BYTES >> 20}MiB",
+            "us_per_call": round(s_serial * 1e6, 2),
+            "derived": "",
+        },
+        {
+            "name": f"prefetch_pool4_{_OVERLAP_FILES}x{_OVERLAP_BYTES >> 20}MiB",
+            "us_per_call": round(s_pool * 1e6, 2),
+            "derived": f"overlap={speedup:.2f}x",
+        },
+    ]
+    return rows, speedup
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        if argv.index("--json") + 1 >= len(argv):
+            print("usage: transfer_bench [--json PATH]")
+            raise SystemExit(2)
+        json_path = argv[argv.index("--json") + 1]
+
+    workdir = tempfile.mkdtemp(prefix="sea_transfer_bench_")
+    try:
+        print("name,us_per_call,derived")
+        large_rows, ratio = bench_large_file(workdir)
+        overlap_rows, speedup = bench_overlap(workdir)
+        rows = large_rows + overlap_rows
+        for row in rows:
+            print(f"{row['name']},{row['us_per_call']},{row['derived']}")
+        print(f"acceptance_large_ratio,{ratio:.2f},>={_MIN_LARGE_RATIO}x_required")
+        print(f"acceptance_overlap_speedup,{speedup:.2f},>1.5x_required")
+        ok = ratio >= _MIN_LARGE_RATIO and speedup > 1.5
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(
+                    {
+                        "rows": rows,
+                        "large_ratio": round(ratio, 2),
+                        "overlap_speedup": round(speedup, 2),
+                    },
+                    f,
+                    indent=2,
+                )
+        raise SystemExit(0 if ok else 1)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@ Public surface:
     CapacityLedger            O(1) capacity accounting (beyond-paper hot path)
     SharedCapacityLedger      cross-process ledger (n_procs instances per node)
     Mode / CompiledRules      copy / remove / move / keep (Table 1)
+    TransferEngine            data plane: chunked, atomic tier-to-tier copies
     perf model                ``repro.core.model`` (Eqs. 1–11)
     simulator                 ``repro.core.simulator`` (paper-scale experiments)
 """
@@ -24,6 +25,13 @@ from .seafs import SeaFS
 from .shared_ledger import SharedCapacityLedger, SharedReservation
 from .telemetry import Telemetry
 from .tiers import Hierarchy, Tier, TierSpec
+from .transfer import (
+    TransferAdmissionError,
+    TransferCancelled,
+    TransferEngine,
+    TransferError,
+    TransferResult,
+)
 
 __all__ = [
     "SeaConfig",
@@ -46,4 +54,9 @@ __all__ = [
     "Hierarchy",
     "Tier",
     "TierSpec",
+    "TransferEngine",
+    "TransferError",
+    "TransferAdmissionError",
+    "TransferCancelled",
+    "TransferResult",
 ]

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import configparser
 import os
-from dataclasses import dataclass, replace
+from dataclasses import dataclass, field, replace
 
 from .tiers import Hierarchy, TierSpec
 
@@ -51,6 +51,21 @@ class SeaConfig:
                                             # the lstat (0 = verify every
                                             # hit; data reads always heal
                                             # on ENOENT either way)
+    #: data plane (chunked streaming transfer engine — every byte moved
+    #: between tiers goes through repro.core.transfer.TransferEngine)
+    transfer_engine: bool = True        # False = seed's whole-file shutil copy
+                                        # (atomic commit + accounting kept)
+    transfer_workers: int = 4           # bounded parallel transfer pool size
+    transfer_chunk_bytes: int = 32 << 20  # chunk size of the streaming copy
+                                        # loop (zero-copy syscalls: large
+                                        # chunks cost no userspace memory,
+                                        # small ones measurably lose to the
+                                        # per-call setup overhead)
+    transfer_bandwidth_caps: dict[str, float] = field(default_factory=dict)
+                                        # bytes/sec per tier pair: "src->dst",
+                                        # "src->*", "*->dst", or "*" wildcard
+    transfer_retries: int = 2           # retry-with-backoff on transient I/O
+    transfer_backoff_s: float = 0.02    # first backoff; doubles per attempt
     #: multi-process coordination (n_procs Sea instances on one node)
     shared_ledger: bool = False         # file-backed cross-process ledger under
                                         # each root + single-flusher election
@@ -79,6 +94,20 @@ class SeaConfig:
             raise ValueError("resolver_verify_window_s must be >= 0")
         if self.leader_heartbeat_s <= 0:
             raise ValueError("leader_heartbeat_s must be positive")
+        if self.transfer_workers <= 0:
+            raise ValueError("transfer_workers must be positive")
+        if self.transfer_chunk_bytes <= 0:
+            raise ValueError("transfer_chunk_bytes must be positive")
+        if self.transfer_retries < 0:
+            raise ValueError("transfer_retries must be >= 0")
+        if self.transfer_backoff_s < 0:
+            raise ValueError("transfer_backoff_s must be >= 0")
+        self.transfer_bandwidth_caps = dict(self.transfer_bandwidth_caps)
+        for pair, rate in self.transfer_bandwidth_caps.items():
+            if float(rate) <= 0:
+                raise ValueError(
+                    f"transfer_bandwidth_caps[{pair!r}] must be positive"
+                )
         if self.shared_ledger and not self.capacity_ledger:
             raise ValueError("shared_ledger requires capacity_ledger=True")
 
@@ -122,6 +151,21 @@ class SeaConfig:
         cp = configparser.ConfigParser()
         with open(path) as f:
             cp.read_file(f)
+        # [transfer.caps] keys are tier-pair names ("NVMe->pfs") that must
+        # match TierSpec names exactly — re-read just that section with a
+        # case-preserving transform so every other section keeps the
+        # historical case-insensitive option lookup
+        caps: dict[str, float] = {}
+        if cp.has_section("transfer.caps"):
+            cpc = configparser.ConfigParser()
+            cpc.optionxform = str
+            with open(path) as f:
+                cpc.read_file(f)
+            caps = {
+                k: cpc["transfer.caps"].getfloat(k)
+                for k in cpc.options("transfer.caps")
+                if k not in cpc.defaults()  # [DEFAULT] keys are not caps
+            }
         sea = cp["sea"]
         tiers: list[TierSpec] = []
         for section in cp.sections():
@@ -166,6 +210,12 @@ class SeaConfig:
             ),
             shared_ledger=sea.getboolean("shared_ledger", False),
             leader_heartbeat_s=sea.getfloat("leader_heartbeat_s", 0.5),
+            transfer_engine=sea.getboolean("transfer_engine", True),
+            transfer_workers=sea.getint("transfer_workers", 4),
+            transfer_chunk_bytes=sea.getint("transfer_chunk_bytes", 32 << 20),
+            transfer_retries=sea.getint("transfer_retries", 2),
+            transfer_backoff_s=sea.getfloat("transfer_backoff_s", 0.02),
+            transfer_bandwidth_caps=caps,
             flushlist=_read_list(FLUSHLIST_NAME),
             evictlist=_read_list(EVICTLIST_NAME),
             prefetchlist=_read_list(PREFETCHLIST_NAME),

@@ -35,16 +35,16 @@ import fcntl
 import json
 import os
 import queue
-import shutil
 import threading
 import time
+import traceback
 from urllib.parse import quote, unquote
 
-from .ledger import LEDGER_DIRNAME
+from .ledger import LEDGER_DIRNAME, TMP_SUFFIX
 from .lists import Mode
 from .seafs import SeaFS
 
-_TMP_SUFFIX = ".sea_tmp"
+_TMP_SUFFIX = TMP_SUFFIX  # one canonical staging suffix (ledger.py)
 
 #: leadership lock paths held by THIS process. fcntl locks are owned per
 #: (process, inode): a second Flusher in the same process would "win" the
@@ -63,6 +63,10 @@ class Flusher:
         self._pending: set[str] = set()   # keys queued but not yet picked up
         self._active: dict[str, bool] = {}  # being processed -> resubmit flag
         self._deferred: set[str] = set()  # skipped busy; await any close
+        self._failed: dict[str, float] = {}  # key -> monotonic not-before:
+                                             # failed flushes, retried on
+                                             # idle ticks after a backoff
+        self._draining = False            # suppress idle retries in drain()
         self._inflight = 0                # keys currently being processed
         self._cv = threading.Condition()  # guards the four fields above
         self._stop = threading.Event()
@@ -246,7 +250,31 @@ class Flusher:
         storage'). Correct under the worker pool: waits on an explicit
         queued+in-flight count rather than poking at the queue's private
         ``unfinished_tasks`` outside its mutex. A follower instead hands
-        its keys to the leader and waits for the spool to empty."""
+        its keys to the leader and waits for the spool to empty.
+
+        Durability contract: a flush that still fails by the end of the
+        drain RAISES to the caller (the seed surfaced this through its
+        dying worker's exception) — shutdown must never silently report
+        success while a file never reached long-term storage."""
+        self._draining = True
+        try:
+            self._drain_inner()
+            self._raise_failed_sync()
+        finally:
+            self._draining = False
+
+    def _raise_failed_sync(self) -> None:
+        """Final synchronous pass over flushes that failed during the
+        drain: transient blips heal here; a persistent error propagates
+        (``process`` has no handler) so the caller knows durability was
+        not achieved."""
+        with self._cv:
+            failed = sorted(self._failed)
+            self._failed.clear()
+        for key in failed:
+            self.process(key)
+
+    def _drain_inner(self) -> None:
         self.scan()
         if self._coordinated and not self.is_leader:
             if not self._drain_as_follower():
@@ -349,6 +377,11 @@ class Flusher:
                         dirs.remove(LEDGER_DIRNAME)
                     for fn in files:
                         if fn.endswith(_TMP_SUFFIX):
+                            # in-flight staging files are not keys; dead
+                            # ones (crashed transfers) are reclaimed here
+                            self.fs.transfer.maybe_reap_orphan(
+                                os.path.join(dirpath, fn)
+                            )
                             continue
                         key = os.path.relpath(os.path.join(dirpath, fn), root)
                         if self.fs.rules.mode(key) is not Mode.KEEP:
@@ -362,6 +395,7 @@ class Flusher:
             try:
                 key = self._q.get(timeout=self.config.flush_interval_s)
             except queue.Empty:
+                self._maybe_retry_failed()
                 continue
             if key is None:
                 if self._stop.is_set():
@@ -372,7 +406,23 @@ class Flusher:
                 self._active[key] = False
                 self._inflight += 1
             try:
-                self.process(key)
+                try:
+                    self.process(key)
+                except Exception:
+                    # a failed flush (exhausted transfer retries, device
+                    # error) must not kill the worker thread — but it
+                    # must not vanish either: count it, surface the
+                    # traceback, and queue the key for a retry on the
+                    # next idle tick (drain()/shutdown also re-scan)
+                    self.fs.telemetry.record_flush_failure()
+                    traceback.print_exc()
+                    with self._cv:
+                        # backoff: a persistently failing key re-copies
+                        # (and tracebacks) at most ~once per second, not
+                        # once per idle tick
+                        self._failed[key] = time.monotonic() + max(
+                            1.0, 10 * self.config.flush_interval_s
+                        )
             finally:
                 requeue = False
                 with self._cv:
@@ -384,6 +434,28 @@ class Flusher:
                     self._cv.notify_all()
                 if requeue:
                     self._q.put(key)
+                # re-check after every task as well as on idle ticks: a
+                # sustained submit stream never leaves the queue empty,
+                # and a failed key must still get its backed-off retry
+                self._maybe_retry_failed()
+
+    def _maybe_retry_failed(self) -> None:
+        """Re-submit one failed flush whose backoff has elapsed (the
+        engine's own retry/backoff absorbed the fast transients; this
+        covers longer outages). Suspended during drain() — a permanently
+        failing key must not keep the pending set non-empty forever."""
+        retry = None
+        with self._cv:
+            if not self._draining:
+                now = time.monotonic()
+                for k, not_before in self._failed.items():
+                    if not_before <= now:
+                        retry = k
+                        break
+                if retry is not None:
+                    del self._failed[retry]
+        if retry is not None:
+            self.submit(retry)
 
     def _process_all_sync(self) -> None:
         while True:
@@ -427,24 +499,45 @@ class Flusher:
             if tier.persistent:
                 return mode  # already on long-term storage: nothing to do
             if mode in (Mode.COPY, Mode.MOVE):
-                self._flush_one(key, real)
+                self._flush_one(key, real, tier)
             if mode in (Mode.MOVE, Mode.REMOVE):
                 self._evict_one(key, real, tier)
         return mode
 
-    def _flush_one(self, key: str, src: str) -> None:
+    def _flush_one(self, key: str, src: str, src_tier=None) -> None:
         base = self.fs.hierarchy.base
         base_root = base.roots[0]
         dst = os.path.join(base_root, key)
         os.makedirs(os.path.dirname(dst), exist_ok=True)
-        if os.path.exists(dst) and os.path.getmtime(dst) >= os.path.getmtime(src):
-            return  # already materialized and fresh
-        tmp = dst + _TMP_SUFFIX
-        shutil.copyfile(src, tmp)
-        os.replace(tmp, dst)  # atomic commit
-        nbytes = os.path.getsize(dst)
-        base.note_written(base_root, key, nbytes)
-        self.fs.telemetry.record_flush(nbytes)
+        try:
+            sst = os.stat(src)
+        except OSError:
+            return  # vanished under the key lock's last release: nothing to do
+        try:
+            dst_st = os.stat(dst)
+        except OSError:
+            dst_st = None
+        if (
+            dst_st is not None
+            and dst_st.st_mtime_ns >= sst.st_mtime_ns
+            and dst_st.st_size == sst.st_size
+        ):
+            # already materialized and fresh. Nanosecond mtimes + size:
+            # a coarse same-second getmtime() compare silently skipped
+            # sources rewritten within one mtime tick of the last flush.
+            # The engine copystats the source onto the committed copy, so
+            # equality here means byte-for-byte freshness.
+            return
+        result = self.fs.transfer.copy(
+            src,
+            dst,
+            src_tier=src_tier,
+            dst_tier=base,
+            dst_root=base_root,
+            key=key,
+            admit="reserve",
+        )
+        self.fs.telemetry.record_flush(result.nbytes)
 
     def _evict_one(self, key: str, src: str, tier) -> None:
         try:
@@ -464,39 +557,36 @@ class Flusher:
     def prefetch(self) -> int:
         """Stage .sea_prefetchlist matches from the base tier into the
         fastest cache tier with room ("For files to be prefetched, they
-        must be located within Sea's mountpoint at startup")."""
-        total = 0
+        must be located within Sea's mountpoint at startup").
+
+        Candidates are collected in one walk, then staged through the
+        transfer engine's bounded worker pool — independent copies
+        overlap (``transfer_workers`` at a time), which is where the
+        wall-clock win over the seed's serial loop lives."""
         base = self.fs.hierarchy.base
+        candidates: list[str] = []
+        seen: set[str] = set()  # multi-root base: one stage per key
         for root in base.roots:
             for dirpath, dirs, files in os.walk(root):
                 if LEDGER_DIRNAME in dirs:
                     dirs.remove(LEDGER_DIRNAME)
                 for fn in files:
                     real = os.path.join(dirpath, fn)
-                    key = os.path.relpath(real, root)
-                    if not self.fs.rules.prefetch_match(key):
+                    if fn.endswith(_TMP_SUFFIX):
+                        # half-written staging files are not prefetchable
+                        # keys; reclaim provably-dead ones
+                        self.fs.transfer.maybe_reap_orphan(real)
                         continue
-                    with self.fs.key_lock(key):
-                        cur = self.fs.resolver.resolve(key, ignore_negative=True)
-                        if cur is not None and not cur[0].persistent:
-                            continue  # already cached
-                        nbytes = os.path.getsize(real)
-                        slot = self.fs.policy.select_cache_for_prefetch(nbytes)
-                        if slot is None:
-                            continue
-                        ctier, croot = slot
-                        dst = os.path.join(croot, key)
-                        os.makedirs(os.path.dirname(dst), exist_ok=True)
-                        tmp = dst + _TMP_SUFFIX
-                        shutil.copyfile(real, tmp)
-                        os.replace(tmp, dst)
-                        ctier.note_written(croot, key, nbytes)
-                        # staging created a faster replica: point the index
-                        # straight at it
-                        self.fs.resolver.note_location(key, ctier, dst)
-                        self.fs.telemetry.record_prefetch(nbytes)
-                        total += nbytes
-        return total
+                    key = os.path.relpath(real, root)
+                    if key not in seen and self.fs.rules.prefetch_match(key):
+                        seen.add(key)
+                        candidates.append(key)
+        if not candidates:
+            return 0
+        # SeaFS.stage_to_cache holds the key lock on a transfer worker, so
+        # staging stays atomic against evicts/flushes of the same key and
+        # shares one code path with the data pipeline
+        return sum(self.fs.transfer.map(self.fs.stage_to_cache, candidates))
 
 
 class Sea:
@@ -523,10 +613,16 @@ class Sea:
 
     def shutdown(self) -> None:
         try:
-            self.flusher.drain()
-            self.flusher.stop()
+            # drain may RAISE when a flush never succeeded (durability
+            # contract) — leadership and workers must still be released
+            try:
+                self.flusher.drain()
+            finally:
+                self.flusher.stop()
         finally:
             self._started = False
+            # stop the transfer pool too (it restarts lazily if reused)
+            self.fs.transfer.close()
         if self.fs.config.shared_ledger:
             # leave this process's counters next to the shared store so the
             # workflow can aggregate telemetry across all its workers

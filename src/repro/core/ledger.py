@@ -72,6 +72,13 @@ class _RootAccount:
         self.version = 0                  # bumped by every files/used mutation
 
 
+#: in-flight staging files of the transfer engine — not data, and a
+#: failed transfer unlinks them without a ledger notification, so every
+#: capacity scan must skip them or a reconcile racing a chunked copy
+#: records phantom bytes nothing ever removes
+TMP_SUFFIX = ".sea_tmp"
+
+
 def scan_root(root: str) -> dict[str, int]:
     """Walk one root and return {relpath: size}. This is the seed's O(n)
     scan, demoted from the per-call hot path to the reconcile path."""
@@ -80,6 +87,8 @@ def scan_root(root: str) -> dict[str, int]:
         if LEDGER_DIRNAME in dirnames:
             dirnames.remove(LEDGER_DIRNAME)
         for fn in filenames:
+            if fn.endswith(TMP_SUFFIX):
+                continue
             p = os.path.join(dirpath, fn)
             try:
                 files[os.path.relpath(p, root)] = os.path.getsize(p)

@@ -13,23 +13,23 @@ from __future__ import annotations
 import errno
 import io
 import os
-import shutil
 import stat as stat_mod
 import threading
 import time
 from collections import defaultdict
 
 from .config import SeaConfig
-from .ledger import LEDGER_DIRNAME
+from .ledger import LEDGER_DIRNAME, TMP_SUFFIX
 from .lists import CompiledRules, Mode
 from .placement import PlacementPolicy
 from .resolver import Resolver
 from .telemetry import Stopwatch, Telemetry
 from .tiers import Hierarchy, Tier
+from .transfer import TransferEngine
 
 _WRITE_CHARS = ("w", "a", "x", "+")
 _STRIPE_MANIFEST_SUFFIX = ".sea_stripe.json"
-_TMP_SUFFIX = ".sea_tmp"  # atomic-commit staging (flusher/persist)
+_TMP_SUFFIX = TMP_SUFFIX  # atomic-commit staging (one canonical suffix)
 
 
 def _is_write_mode(mode: str) -> bool:
@@ -130,6 +130,8 @@ class SeaFS:
         self.rules = CompiledRules(
             config.flushlist, config.evictlist, config.prefetchlist
         )
+        # the data plane: every tier-to-tier byte moves through here
+        self.transfer = TransferEngine(config, self.telemetry, self.policy)
         self.mount = config.mount
         os.makedirs(self.mount, exist_ok=True)
         self._open_counts: dict[str, int] = defaultdict(int)
@@ -519,6 +521,32 @@ class SeaFS:
             os.path.join(self.hierarchy.base.roots[0], key), exist_ok=exist_ok
         )
 
+    def _drop_replicas(
+        self, key: str, *, keep: str | None = None, replicas=None
+    ) -> int:
+        """Remove every on-disk replica of ``key`` across every root of
+        every tier (``locate_all`` — a tier may hold copies on several
+        roots), except ``keep``. ``replicas`` lets a caller that already
+        ran the locate cascade pass its result in. The caller holds the
+        key lock and owns the resolver invalidation. Returns the number
+        dropped."""
+        keep_ap = os.path.abspath(keep) if keep is not None else None
+        dropped = 0
+        if replicas is None:
+            replicas = self.hierarchy.locate_all(key)
+        for tier, real in replicas:
+            if keep_ap is not None and os.path.abspath(real) == keep_ap:
+                continue
+            try:
+                os.remove(real)
+            except FileNotFoundError:
+                continue  # raced an evict: already gone
+            root = tier.root_of(real)
+            if root is not None:
+                tier.note_removed(root, key)
+            dropped += 1
+        return dropped
+
     def remove(self, path: str) -> None:
         if not self.is_sea_path(path):
             os.remove(path)
@@ -536,14 +564,7 @@ class SeaFS:
                 raise FileNotFoundError(
                     errno.ENOENT, os.strerror(errno.ENOENT), path
                 )
-            for tier, real in replicas:
-                try:
-                    os.remove(real)
-                except FileNotFoundError:
-                    continue  # raced an evict: already gone
-                root = tier.root_of(real)
-                if root is not None:
-                    tier.note_removed(root, key)
+            self._drop_replicas(key, replicas=replicas)
             self.resolver.invalidate(key)
 
     def rename(self, src: str, dst: str) -> None:
@@ -564,14 +585,8 @@ class SeaFS:
                     droot = tier.roots[0]
                 dreal = os.path.join(droot, dkey)
                 os.makedirs(os.path.dirname(dreal), exist_ok=True)
-                # drop stale copies of dst on other tiers first
-                for t in self.hierarchy:
-                    old = t.locate(dkey)
-                    if old is not None and os.path.abspath(old) != os.path.abspath(dreal):
-                        os.remove(old)
-                        oroot = t.root_of(old)
-                        if oroot is not None:
-                            t.note_removed(oroot, dkey)
+                # drop stale copies of dst on other tiers/roots first
+                self._drop_replicas(dkey, keep=dreal)
                 os.replace(real, dreal)
                 self.resolver.invalidate(skey)
                 sroot = tier.root_of(real)
@@ -589,25 +604,52 @@ class SeaFS:
                 else:
                     self.resolver.invalidate(dkey)
             return
-        # crossing the mount boundary: copy semantics via resolve
-        rsrc = self.resolve(src, "r")
-        rdst = self.resolve(dst, "w")
-        os.makedirs(os.path.dirname(rdst), exist_ok=True)
-        shutil.copyfile(rsrc, rdst)
+        # crossing the mount boundary (exactly one side is inside): copy
+        # semantics, routed through the transfer engine — the destination
+        # appears atomically via .sea_tmp + os.replace, with ledger
+        # admission held against the destination root before bytes move,
+        # so a concurrent reader (or a crash) never observes a partial
+        # file and capped roots cannot be over-committed.
         if d_in:
-            owner = self.hierarchy.owner_of(rdst)
-            if owner is not None:
-                self.resolver.note_location(self.key_of(dst), owner[0], rdst)
-                try:
-                    owner[0].note_written(
-                        owner[1], self.key_of(dst), os.path.getsize(rdst)
-                    )
-                except OSError:
-                    pass
-        if s_in:
-            self.remove(src)
-        else:
+            dkey = self.key_of(dst)
+            with self.key_lock(dkey):
+                # _resolve_write creates the destination's parent dir and
+                # holds the admission reservation (released by the engine
+                # on any failure, committed with the actual size)
+                dtier, rdst, res = self._resolve_write(dkey, reserve=True)
+                self.transfer.copy(
+                    src,
+                    rdst,
+                    src_tier=None,
+                    dst_tier=dtier,
+                    dst_root=dtier.root_of(rdst),
+                    key=dkey,
+                    reservation=res,
+                )
+                # drop stale replicas of dst on other tiers/roots (mirrors
+                # the in-mount rename): the overwrite landed on the
+                # fastest copy, and an old slower replica must not
+                # resurface after an eviction
+                self._drop_replicas(dkey, keep=rdst)
+                self.resolver.invalidate(dkey)
+                self.resolver.note_location(dkey, dtier, rdst)
             os.remove(src)
+        else:
+            skey = self.key_of(src)
+            with self.key_lock(skey):
+                # hold the key lock across resolve + copy: the flusher
+                # must not move/evict the source mid-transfer
+                found = self.resolver.resolve(skey, ignore_negative=True)
+                if found is None:
+                    raise FileNotFoundError(
+                        errno.ENOENT, os.strerror(errno.ENOENT), src
+                    )
+                stier, rsrc = found
+                os.makedirs(
+                    os.path.dirname(os.path.abspath(dst)), exist_ok=True
+                )
+                self.transfer.copy(rsrc, dst, src_tier=stier, dst_tier=None)
+            self.remove(src)
 
     # -- LRU room-making (beyond-paper, opt-in) --------------------------------
     def _lru_make_room(self) -> bool:
@@ -622,6 +664,12 @@ class SeaFS:
                         dirnames.remove(LEDGER_DIRNAME)
                     for fn in files:
                         real = os.path.join(dirpath, fn)
+                        if fn.endswith(_TMP_SUFFIX):
+                            # never evict an in-flight staging file out
+                            # from under a racing os.replace; dead ones
+                            # are reclaimed on the spot
+                            self.transfer.maybe_reap_orphan(real)
+                            continue
                         key = os.path.relpath(real, root)
                         if self.open_count(key):
                             continue
@@ -649,12 +697,55 @@ class SeaFS:
                     return True
         return freed_any
 
+    def stage_to_cache(self, key: str) -> int:
+        """Stage one base-tier file into the fastest cache root with room
+        (the prefetch/staging primitive shared by ``Flusher.prefetch``
+        and the data pipeline): under the key lock — a racing
+        evict/flusher move can't pull the source out from under the copy
+        — with ledger admission reserved before bytes move and the
+        staging tmp cleaned up on failure. Best-effort: returns the bytes
+        staged, or 0 when the key is gone, already cached, out of room,
+        or the transfer failed (callers fall back to the base copy)."""
+        with self.key_lock(key):
+            located = self.resolver.resolve(key, ignore_negative=True)
+            if located is None or not located[0].persistent:
+                return 0  # gone, or already cached
+            try:
+                nbytes = os.path.getsize(located[1])
+            except OSError:
+                return 0  # removed since resolution
+            slot = self.policy.select_cache_for_prefetch(nbytes)
+            if slot is None:
+                return 0
+            ctier, croot = slot
+            dst = os.path.join(croot, key)
+            os.makedirs(os.path.dirname(dst), exist_ok=True)
+            try:
+                result = self.transfer.copy(
+                    located[1],
+                    dst,
+                    src_tier=located[0],
+                    dst_tier=ctier,
+                    dst_root=croot,
+                    key=key,
+                    admit="require",
+                )
+            except OSError:
+                # admission lost to a racing writer, or an I/O error
+                # (engine errors preserve their POSIX class): staging is
+                # best-effort — the file simply stays on the base tier
+                return 0
+            # staging created a faster replica: point the index straight
+            # at it
+            self.resolver.note_location(key, ctier, dst)
+            self.telemetry.record_prefetch(result.nbytes)
+            return result.nbytes
+
     def persist(self, path: str) -> str:
         """Ensure a durable copy exists on the base (persistent) tier,
         keeping any cache copy (explicit COPY — used for input datasets
-        that eviction must never orphan)."""
-        import shutil
-
+        that eviction must never orphan). Bytes move through the transfer
+        engine: chunked, atomically committed, ledger-accounted."""
         key = self.key_of(path)
         with self.key_lock(key):
             located = self.resolver.resolve(key)
@@ -663,17 +754,22 @@ class SeaFS:
                     errno.ENOENT, os.strerror(errno.ENOENT), path
                 )
             tier, real = located
-            base_root = self.hierarchy.base.roots[0]
+            base = self.hierarchy.base
+            base_root = base.roots[0]
             dst = os.path.join(base_root, key)
             if tier.persistent or os.path.abspath(real) == os.path.abspath(dst):
                 return dst
             os.makedirs(os.path.dirname(dst), exist_ok=True)
-            tmp = dst + ".sea_tmp"
-            shutil.copyfile(real, tmp)
-            os.replace(tmp, dst)
-            nbytes = os.path.getsize(dst)
-            self.hierarchy.base.note_written(base_root, key, nbytes)
-            self.telemetry.record_flush(nbytes)
+            result = self.transfer.copy(
+                real,
+                dst,
+                src_tier=tier,
+                dst_tier=base,
+                dst_root=base_root,
+                key=key,
+                admit="reserve",
+            )
+            self.telemetry.record_flush(result.nbytes)
             return dst
 
     # -- introspection ----------------------------------------------------------

@@ -140,6 +140,12 @@ class Simulator:
         ledger_lock_s: float = 0.0,          # fcntl critical-section length
         resolver_cache: bool = True,         # cached key->location index
         resolve_probe_s: float = 0.0,        # one lexists/lstat metadata RTT
+        transfer_workers: int = 1,           # overlapped transfer streams per
+                                             # flusher (data-plane worker pool)
+        transfer_bandwidth_caps: dict[str, float] | None = None,
+                                             # per-flow bytes/s cap by source
+                                             # tier of a flush copy ("tmpfs",
+                                             # "disk", or "*")
     ):
         assert system in ("lustre", "sea", "sea-flushall")
         self.cl = cluster
@@ -168,7 +174,18 @@ class Simulator:
         # unless the shared ledger's leader election caps it at exactly one.
         if flushers_per_node is None:
             flushers_per_node = 1 if shared_ledger else cluster.p
-        self.flushers_per_node = flushers_per_node
+        # Data-plane overlap model: the transfer engine drives up to
+        # ``transfer_workers`` concurrent streams per flusher, so each
+        # worker is one more flow contending max-min-fairly for the same
+        # device/network resources — overlap wins wall-clock exactly when
+        # a single stream cannot saturate the bottleneck (per-stream caps,
+        # high-latency paths), mirroring the real engine's worker pool.
+        self.transfer_workers = max(1, int(transfer_workers))
+        self.flushers_per_node = flushers_per_node * self.transfer_workers
+        # Per-stream bandwidth throttling (transfer_bandwidth_caps): a
+        # flush flow from tier T is additionally capped at caps[T] (or
+        # caps["*"]) bytes/s, modelling the engine's token buckets.
+        self.transfer_bandwidth_caps = dict(transfer_bandwidth_caps or {})
         # Resolution-cost model: locating a file before a read probes the
         # tier roots fastest-first (`resolve_probe_s` per lexists). With
         # the resolver cache, a repeat access is one verify lstat; without
@@ -341,8 +358,27 @@ class Simulator:
             yield WriteOp(
                 rpath + self.lustre_write_path(nd.idx) + ("lus_flush_eff",),
                 self.w.F,
-                cap=self.cl.L_stream_w,
+                cap=self._flush_stream_cap(tier),
             )
+
+    def _flush_stream_cap(self, src_tier: str) -> float:
+        """Per-flow rate cap of one flush stream: the single-client Lustre
+        stream limit, tightened by any configured transfer throttle for
+        the source tier ("disk3" matches the "disk" cap). Accepts BOTH
+        the engine's pair grammar ("tmpfs->lustre", "tmpfs->*") and bare
+        source-tier keys, so the same dict handed to SeaConfig models the
+        same system here."""
+        cap = self.cl.L_stream_w
+        name = "disk" if src_tier.startswith("disk") else src_tier
+        caps = self.transfer_bandwidth_caps
+        throttle = 0.0
+        for k in (f"{name}->lustre", f"{name}->*", name, "*->lustre", "*"):
+            if k in caps:
+                throttle = float(caps[k])
+                break
+        if throttle > 0.0:
+            cap = min(cap, throttle) if cap > 0.0 else throttle
+        return cap
 
     # -- engine ------------------------------------------------------------------
     def run(self) -> SimResult:

@@ -31,12 +31,27 @@ class TierCounters:
 
 
 @dataclass
+class TransferCounters:
+    """One tier pair ("src->dst") of the transfer engine's data plane."""
+
+    nbytes: int = 0
+    files: int = 0
+    seconds: float = 0.0
+    retries: int = 0
+
+
+@dataclass
 class Telemetry:
     per_tier: dict[str, TierCounters] = field(
         default_factory=lambda: defaultdict(TierCounters)
     )
+    transfers: dict[str, TransferCounters] = field(
+        default_factory=lambda: defaultdict(TransferCounters)
+    )
+    transfer_orphans_reaped: int = 0  # dead .sea_tmp staging files swept
     flushed_bytes: int = 0
     flushed_files: int = 0
+    flush_failures: int = 0    # flushes abandoned after exhausting retries
     evicted_bytes: int = 0
     evicted_files: int = 0
     prefetched_bytes: int = 0
@@ -67,10 +82,38 @@ class Telemetry:
                 c.files_written += 1
                 c.write_seconds += seconds
 
+    def record_transfer(
+        self, pair: str, *, nbytes: int, seconds: float = 0.0, retries: int = 0
+    ) -> None:
+        """One committed engine transfer over a ``"src->dst"`` tier pair —
+        ``nbytes / seconds`` is that pair's observed bytes/sec."""
+        with self._lock:
+            c = self.transfers[pair]
+            c.nbytes += nbytes
+            c.files += 1
+            c.seconds += seconds
+            c.retries += retries
+
+    def record_orphan_reaped(self) -> None:
+        with self._lock:
+            self.transfer_orphans_reaped += 1
+
+    def transfer_rate_bps(self, pair: str) -> float:
+        """Observed mean bytes/sec of one tier pair (0 when unmeasured)."""
+        with self._lock:
+            c = self.transfers.get(pair)
+            if c is None or c.seconds <= 0:
+                return 0.0
+            return c.nbytes / c.seconds
+
     def record_flush(self, nbytes: int) -> None:
         with self._lock:
             self.flushed_bytes += nbytes
             self.flushed_files += 1
+
+    def record_flush_failure(self) -> None:
+        with self._lock:
+            self.flush_failures += 1
 
     def record_evict(self, nbytes: int) -> None:
         with self._lock:
@@ -126,8 +169,13 @@ class Telemetry:
                 "tiers": {
                     k: vars(v).copy() for k, v in sorted(self.per_tier.items())
                 },
+                "transfers": {
+                    k: vars(v).copy() for k, v in sorted(self.transfers.items())
+                },
+                "transfer_orphans_reaped": self.transfer_orphans_reaped,
                 "flushed_bytes": self.flushed_bytes,
                 "flushed_files": self.flushed_files,
+                "flush_failures": self.flush_failures,
                 "evicted_bytes": self.evicted_bytes,
                 "evicted_files": self.evicted_files,
                 "prefetched_bytes": self.prefetched_bytes,
@@ -161,20 +209,22 @@ class Telemetry:
 def aggregate_snapshots(snapshots: list[dict]) -> dict:
     """Merge per-process snapshots into one aggregate view: numeric
     counters sum (per tier and global); pids are collected for attribution."""
-    agg: dict = {"tiers": {}, "pids": []}
+    agg: dict = {"tiers": {}, "transfers": {}, "pids": []}
     for snap in snapshots:
         if "pid" in snap:
             agg["pids"].append(snap["pid"])
-        for tier, counters in snap.get("tiers", {}).items():
-            out = agg["tiers"].setdefault(tier, defaultdict(float))
-            for k, v in counters.items():
-                out[k] += v
+        for section in ("tiers", "transfers"):
+            for name, counters in snap.get(section, {}).items():
+                out = agg[section].setdefault(name, defaultdict(float))
+                for k, v in counters.items():
+                    out[k] += v
         for k, v in snap.items():
-            if k in ("tiers", "pid", "exported_at"):
+            if k in ("tiers", "transfers", "pid", "exported_at"):
                 continue
             if isinstance(v, (int, float)):
                 agg[k] = agg.get(k, 0) + v
     agg["tiers"] = {t: dict(c) for t, c in agg["tiers"].items()}
+    agg["transfers"] = {t: dict(c) for t, c in agg["transfers"].items()}
     agg["pids"].sort()
     return agg
 

@@ -15,7 +15,7 @@ import os
 import shutil
 from dataclasses import dataclass, field
 
-from .ledger import LEDGER_DIRNAME, CapacityLedger, Reservation
+from .ledger import LEDGER_DIRNAME, TMP_SUFFIX, CapacityLedger, Reservation
 from .shared_ledger import SharedCapacityLedger
 
 
@@ -79,12 +79,17 @@ class Tier:
     # -- capacity ----------------------------------------------------------
     def scan_used_bytes(self, root: str) -> int:
         """Bytes used under one root by a full re-scan (the seed's per-call
-        behaviour; now the reconcile/baseline path only)."""
+        behaviour; now the reconcile/baseline path only). In-flight
+        ``.sea_tmp`` staging files are not data: counting one that a
+        failed transfer later unlinks would overstate ``used`` with bytes
+        nothing ever removes."""
         total = 0
         for dirpath, dirnames, filenames in os.walk(root):
             if LEDGER_DIRNAME in dirnames:
                 dirnames.remove(LEDGER_DIRNAME)
             for fn in filenames:
+                if fn.endswith(TMP_SUFFIX):
+                    continue
                 try:
                     total += os.path.getsize(os.path.join(dirpath, fn))
                 except OSError:

@@ -1,0 +1,610 @@
+"""TransferEngine — the data plane: every byte moved between tiers.
+
+PRs 1–3 made Sea's *metadata* hot paths O(1); the actual bytes, however,
+still moved through five independent synchronous ``shutil.copyfile`` call
+sites (cross-mount rename, persist, flush, prefetch, pipeline staging)
+with divergent atomicity, locking, and capacity-accounting semantics.
+This module unifies them behind one engine, following the chunked,
+overlapped-transfer designs of the HSM follow-up work (Hayot-Sasson &
+Glatard 2024) and the openPMD/ADIOS2 streaming pipelines (Poeschel et
+al. 2021):
+
+* **Chunked copies** via ``os.copy_file_range`` (zero userspace copies,
+  reflink/server-side offload where the filesystem supports it), falling
+  back per-transfer to ``os.sendfile`` and finally to buffered
+  read/write — the same chunk loop serves throttling, cancellation, and
+  fault injection.
+* **Admission before bytes move**: the capacity ledger's ``try_reserve``
+  runs *before* the first chunk; the reservation is committed with the
+  actual on-disk size after the rename, and released on any failure — a
+  transfer can never over-commit a capped root or leak budget.
+* **Crash-safe commit**: chunks land in a
+  ``<dst>.<host>.<pid>.<seq>.sea_tmp`` staging file and the destination
+  appears atomically via ``os.replace`` after a size verify, so a
+  concurrent reader (or a crash at any chunk boundary) never observes a
+  partial file. Orphaned staging files from dead processes are swept by
+  :meth:`maybe_reap_orphan` (pid liveness on the owning host, age grace
+  everywhere else).
+* **Bounded parallelism with backpressure**: a lazy pool of
+  ``transfer_workers`` threads executes submitted jobs; the submission
+  queue is bounded, so producers block instead of buffering unbounded
+  work (the prefetcher's overlap win lives here).
+* **Per-tier-pair bandwidth throttling**: token buckets keyed
+  ``"src->dst"`` (``SeaConfig.transfer_bandwidth_caps``) pace the chunk
+  loop so background flushes can be capped below application I/O.
+* **Retry with backoff** on transient ``OSError``; cooperative
+  **cancellation** between chunks.
+
+``SeaConfig(transfer_engine=False)`` keeps the atomic-commit and
+accounting semantics but moves bytes with one whole-file
+``shutil.copyfile`` — the seed's behaviour, kept for benchmarking.
+"""
+
+from __future__ import annotations
+
+import errno
+import itertools
+import os
+import queue
+import shutil
+import socket
+import threading
+import time
+
+from .config import SeaConfig
+from .ledger import TMP_SUFFIX as _TMP_SUFFIX
+from .telemetry import Telemetry
+from .tiers import Tier
+
+#: errnos that demote the copy implementation instead of failing the
+#: transfer: cross-device / unsupported-by-fs for copy_file_range, bad
+#: descriptor types for sendfile, and plain "not implemented" kernels.
+_FALLBACK_ERRNOS = frozenset(
+    (
+        errno.EXDEV,
+        errno.EINVAL,
+        errno.ENOSYS,
+        errno.EOPNOTSUPP,
+        getattr(errno, "ENOTSUP", errno.EOPNOTSUPP),
+        errno.EBADF,
+    )
+)
+
+#: errnos that no amount of retrying fixes — fail fast, don't burn
+#: retries+backoff re-copying into the same wall
+_PERMANENT_ERRNOS = frozenset(
+    (
+        errno.EISDIR,
+        errno.ENOTDIR,
+        errno.EACCES,
+        errno.EPERM,
+        errno.ENAMETOOLONG,
+    )
+)
+
+_HAS_COPY_FILE_RANGE = hasattr(os, "copy_file_range")
+_HAS_SENDFILE = hasattr(os, "sendfile")
+
+#: unique staging-file sequence within this process
+_TMP_SEQ = itertools.count()
+
+#: host tag embedded in staging-file names — pid liveness is only
+#: meaningful on the node that created the file (tiers may be shared
+#: parallel file systems); dots are stripped so the name stays parseable
+_HOST = (socket.gethostname() or "localhost").replace(".", "-") or "localhost"
+
+#: age past which a staging file not provably owned by a live local
+#: process is declared dead. In-flight transfers keep their tmp's mtime
+#: fresh (every chunk is a write), so age is a safe cross-node signal.
+ORPHAN_GRACE_S = 300.0
+
+
+class TransferError(OSError):
+    """A transfer failed after exhausting its retries."""
+
+
+class TransferAdmissionError(TransferError):
+    """The destination root refused the ledger reservation (no room)."""
+
+
+class TransferCancelled(TransferError):
+    """The transfer's cancel event fired between chunks."""
+
+
+class TransferResult:
+    """Outcome of one committed transfer."""
+
+    __slots__ = ("nbytes", "seconds", "attempts", "impl")
+
+    def __init__(self, nbytes: int, seconds: float, attempts: int, impl: str):
+        self.nbytes = nbytes
+        self.seconds = seconds
+        self.attempts = attempts
+        self.impl = impl
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"TransferResult(nbytes={self.nbytes}, seconds={self.seconds:.4f}, "
+            f"attempts={self.attempts}, impl={self.impl!r})"
+        )
+
+
+class _TokenBucket:
+    """Bytes/sec pacing for one tier pair. ``consume`` debits the bucket
+    and returns how long the caller must sleep to honour the cap — the
+    sleep happens outside the lock so concurrent transfers sharing a pair
+    serialize only the arithmetic, not the wait."""
+
+    def __init__(self, rate_bps: float):
+        self.rate = float(rate_bps)
+        self._lock = threading.Lock()
+        self._available = self.rate * 0.05  # small burst allowance
+        self._ts = time.monotonic()
+
+    def consume(self, nbytes: int) -> float:
+        with self._lock:
+            now = time.monotonic()
+            self._available = min(
+                self._available + (now - self._ts) * self.rate, self.rate * 0.25
+            )
+            self._ts = now
+            self._available -= nbytes
+            if self._available >= 0:
+                return 0.0
+            return -self._available / self.rate
+
+
+class _Future:
+    """Minimal completion handle for a submitted transfer job."""
+
+    __slots__ = ("_done", "_result", "_exc", "cancel_event")
+
+    def __init__(self):
+        self._done = threading.Event()
+        self._result = None
+        self._exc: BaseException | None = None
+        self.cancel_event = threading.Event()
+
+    def cancel(self) -> None:
+        """Request cooperative cancellation (checked between chunks)."""
+        self.cancel_event.set()
+
+    def _finish(self, result=None, exc: BaseException | None = None) -> None:
+        self._result = result
+        self._exc = exc
+        self._done.set()
+
+    def result(self, timeout: float | None = None):
+        if not self._done.wait(timeout):
+            raise TimeoutError("transfer job still running")
+        if self._exc is not None:
+            raise self._exc
+        return self._result
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except (PermissionError, OSError):
+        return True
+    return True
+
+
+def tmp_owner(path: str) -> tuple[str, int] | None:
+    """Parse the owning (host, pid) out of a
+    ``<dst>.<host>.<pid>.<seq>.sea_tmp`` staging-file name. Returns None
+    for names the engine did not produce (reaping then falls back to the
+    age grace — a numeric suffix in user data must never be mistaken for
+    a dead pid)."""
+    if not path.endswith(_TMP_SUFFIX):
+        return None
+    parts = path[: -len(_TMP_SUFFIX)].rsplit(".", 3)
+    if len(parts) == 4 and parts[-1].isdigit() and parts[-2].isdigit():
+        host = parts[-3]
+        if host and "/" not in host:
+            return host, int(parts[-2])
+    return None
+
+
+class TransferEngine:
+    """One engine per :class:`~repro.core.seafs.SeaFS` instance. The
+    engine owns byte movement only; callers keep resolver/telemetry
+    semantics (key locks, ``note_location``, flush/prefetch counters)."""
+
+    def __init__(
+        self,
+        config: SeaConfig,
+        telemetry: Telemetry | None = None,
+        policy=None,
+    ):
+        self.enabled = bool(getattr(config, "transfer_engine", True))
+        self.chunk_bytes = int(getattr(config, "transfer_chunk_bytes", 32 << 20))
+        self.n_workers = max(1, int(getattr(config, "transfer_workers", 4)))
+        self.retries = max(0, int(getattr(config, "transfer_retries", 2)))
+        self.backoff_s = float(getattr(config, "transfer_backoff_s", 0.02))
+        self.telemetry = telemetry or Telemetry()
+        self.policy = policy  # bound by SeaFS after PlacementPolicy exists
+        self._caps_spec = dict(getattr(config, "transfer_bandwidth_caps", {}) or {})
+        self._buckets: dict[str, _TokenBucket] = {}
+        self._bucket_lock = threading.Lock()
+        #: staging paths of in-flight transfers in THIS process — the
+        #: orphan reaper must never kill a live transfer's tmp file
+        self._active_tmps: set[str] = set()
+        self._active_lock = threading.Lock()
+        #: fault-injection / instrumentation hook, called after every
+        #: committed chunk as ``hook(copied_bytes, total_bytes, dst)``;
+        #: an exception it raises fails the transfer like an I/O error
+        self.chunk_hook = None
+        #: lazy bounded worker pool
+        self._q: "queue.Queue" = queue.Queue(maxsize=self.n_workers * 2)
+        self._threads: list[threading.Thread] = []
+        self._pool_lock = threading.Lock()
+
+    # -- worker pool ---------------------------------------------------------
+    def _ensure_pool(self) -> None:
+        with self._pool_lock:
+            self._threads = [t for t in self._threads if t.is_alive()]
+            while len(self._threads) < self.n_workers:
+                t = threading.Thread(
+                    target=self._worker,
+                    name=f"sea-transfer-{len(self._threads)}",
+                    daemon=True,
+                )
+                t.start()
+                self._threads.append(t)
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            fn, args, kwargs, fut = item
+            try:
+                fut._finish(result=fn(*args, **kwargs))
+            except BaseException as e:  # delivered through Future.result
+                fut._finish(exc=e)
+
+    def submit(self, fn, /, *args, **kwargs) -> _Future:
+        """Run ``fn(*args, cancel=..., **kwargs)`` on the bounded pool.
+        The queue is bounded at ``2 x workers``: a producer that outruns
+        the device blocks here instead of buffering unbounded work
+        (backpressure). ``fn`` receives the future's cancel event as a
+        ``cancel`` keyword when it accepts one (``copy`` does)."""
+        self._ensure_pool()
+        fut = _Future()
+        self._q.put((fn, args, kwargs, fut))
+        return fut
+
+    def submit_copy(self, src: str, dst: str, /, **kwargs) -> _Future:
+        """``submit`` specialised to :meth:`copy`, wiring the future's
+        cancel event into the chunk loop."""
+        self._ensure_pool()
+        fut = _Future()
+        kwargs.setdefault("cancel", fut.cancel_event)
+        self._q.put((self.copy, (src, dst), kwargs, fut))
+        return fut
+
+    def map(self, fn, items) -> list:
+        """Run ``fn(item)`` for every item on the pool and collect results
+        in order; exceptions propagate after all jobs settle."""
+        futs = [self.submit(fn, item) for item in items]
+        out, first_exc = [], None
+        for f in futs:
+            try:
+                out.append(f.result())
+            except BaseException as e:  # noqa: BLE001 — re-raised below
+                if first_exc is None:
+                    first_exc = e
+                out.append(None)
+        if first_exc is not None:
+            raise first_exc
+        return out
+
+    def close(self) -> None:
+        """Stop the worker pool (restarts lazily on the next submit)."""
+        with self._pool_lock:
+            threads, self._threads = self._threads, []
+        for _ in threads:
+            self._q.put(None)
+        for t in threads:
+            t.join(timeout=10)
+
+    # -- throttling ----------------------------------------------------------
+    def _pair_cap(self, pair: str) -> float:
+        src, _, dst = pair.partition("->")
+        for k in (pair, f"{src}->*", f"*->{dst}", "*"):
+            if k in self._caps_spec:
+                return float(self._caps_spec[k])
+        return 0.0
+
+    def _bucket(self, pair: str) -> _TokenBucket | None:
+        rate = self._pair_cap(pair)
+        if rate <= 0:
+            return None
+        with self._bucket_lock:
+            b = self._buckets.get(pair)
+            if b is None:
+                b = self._buckets[pair] = _TokenBucket(rate)
+            return b
+
+    # -- the transfer primitive ----------------------------------------------
+    @staticmethod
+    def _tier_name(tier) -> str:
+        if tier is None:
+            return "ext"
+        return tier.name if isinstance(tier, Tier) else str(tier)
+
+    def copy(
+        self,
+        src: str,
+        dst: str,
+        *,
+        src_tier: Tier | str | None = None,
+        dst_tier: Tier | str | None = None,
+        dst_root: str | None = None,
+        key: str | None = None,
+        admit: str | None = None,
+        reservation=None,
+        preserve_stat: bool = True,
+        cancel: threading.Event | None = None,
+        on_chunk=None,
+    ) -> TransferResult:
+        """Move ``src`` to ``dst`` atomically, with accounting.
+
+        ``admit`` selects the ledger admission run *before* any byte moves
+        (only meaningful when ``dst_tier`` is a :class:`Tier` with
+        ``dst_root``):
+
+        * ``"require"`` — ``try_reserve`` the source's actual size; raises
+          :class:`TransferAdmissionError` when the root has no room
+          (prefetch/staging callers skip the stage).
+        * ``"reserve"`` — unconditional budget hold (flush/persist to the
+          base tier: there is nowhere slower to go).
+        * ``None`` — no engine-side admission; pass ``reservation`` when
+          the caller already holds one (it is committed with the actual
+          size on success and released on failure either way).
+
+        On success the reservation (engine- or caller-held) is committed
+        via ``Tier.commit_write`` — which also folds the actual size into
+        the capacity ledger — and the staging file has been renamed over
+        ``dst``. On any failure the staging file is unlinked and the
+        reservation released; ``dst`` is untouched.
+        """
+        t0 = time.perf_counter()
+        pair = f"{self._tier_name(src_tier)}->{self._tier_name(dst_tier)}"
+        accounted = isinstance(dst_tier, Tier) and dst_root is not None
+        res = reservation
+        try:
+            # the source must be readable before any admission or staging
+            # — and its error propagates untranslated (callers rely on
+            # POSIX semantics, e.g. FileNotFoundError from a cross-mount
+            # rename). A caller-held reservation must not leak even here.
+            src_size = os.stat(src).st_size
+        except OSError:
+            if res is not None and isinstance(dst_tier, Tier):
+                dst_tier.release_write(res)
+            raise
+        if res is None and accounted and admit is not None:
+            res = self._admit(dst_tier, dst_root, src_size, mode=admit)
+
+        try:
+            nbytes, attempts, impl = self._copy_with_retries(
+                src, dst, pair, preserve_stat, cancel, on_chunk
+            )
+        except BaseException:
+            if res is not None and isinstance(dst_tier, Tier):
+                dst_tier.release_write(res)
+            raise
+        if accounted:
+            if key is None:
+                key = os.path.relpath(dst, dst_root)
+            dst_tier.commit_write(res, dst_root, key, nbytes)
+        elif res is not None and isinstance(dst_tier, Tier):
+            # caller-held reservation with no root to commit against:
+            # return the budget rather than leak it
+            dst_tier.release_write(res)
+        seconds = time.perf_counter() - t0
+        self.telemetry.record_transfer(
+            pair, nbytes=nbytes, seconds=seconds, retries=attempts - 1
+        )
+        return TransferResult(nbytes, seconds, attempts, impl)
+
+    def _admit(self, tier: Tier, root: str, nbytes: int, *, mode: str):
+        if mode == "reserve" or tier.ledger is None:
+            return tier.reserve_write(root, nbytes)
+        if tier.spec.capacity is None:
+            return tier.reserve_write(root, nbytes)
+        required = (
+            self.policy.required_bytes if self.policy is not None else nbytes
+        )
+        res = tier.ledger.try_reserve(
+            root, nbytes, capacity=tier.spec.capacity, required=required
+        )
+        if res is None:
+            raise TransferAdmissionError(
+                f"no room for {nbytes} bytes on {tier.name}:{root}"
+            )
+        return res
+
+    def _copy_with_retries(
+        self, src, dst, pair, preserve_stat, cancel, on_chunk
+    ) -> tuple[int, int, str]:
+        delay = self.backoff_s
+        last_exc: BaseException | None = None
+        for attempt in range(1, self.retries + 2):
+            tmp = f"{dst}.{_HOST}.{os.getpid()}.{next(_TMP_SEQ)}{_TMP_SUFFIX}"
+            with self._active_lock:
+                self._active_tmps.add(tmp)
+            try:
+                nbytes, impl = self._copy_once(
+                    src, tmp, pair, cancel, on_chunk
+                )
+                if preserve_stat:
+                    try:
+                        shutil.copystat(src, tmp)
+                    except OSError:
+                        pass  # stat parity is best-effort (e.g. tmpfs xattrs)
+                os.replace(tmp, dst)  # atomic commit
+                return nbytes, attempt, impl
+            except TransferCancelled:
+                self._discard_tmp(tmp)
+                raise
+            except Exception as e:
+                self._discard_tmp(tmp)
+                last_exc = e
+                permanent = (
+                    isinstance(e, OSError) and e.errno in _PERMANENT_ERRNOS
+                )
+                if permanent or attempt > self.retries:
+                    break
+                if cancel is not None and cancel.is_set():
+                    raise TransferCancelled(f"transfer to {dst} cancelled") from e
+                time.sleep(delay)
+                delay *= 2
+            finally:
+                with self._active_lock:
+                    self._active_tmps.discard(tmp)
+        if isinstance(last_exc, OSError):
+            # preserve the POSIX error class/errno the seed's bare copy
+            # surfaced (callers match `except PermissionError`, check
+            # e.errno, etc.); TransferError wraps only non-OS failures
+            raise last_exc
+        raise TransferError(
+            f"transfer {src} -> {dst} failed after {self.retries + 1} attempts"
+        ) from last_exc
+
+    def _discard_tmp(self, tmp: str) -> None:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+
+    def _copy_once(self, src, tmp, pair, cancel, on_chunk) -> tuple[int, str]:
+        """One staging attempt: chunk loop into ``tmp`` + size verify."""
+        if not self.enabled:
+            # seed behaviour for benchmarking: one whole-file copy (the
+            # atomic rename + accounting above still apply)
+            shutil.copyfile(src, tmp)
+            return os.path.getsize(tmp), "shutil"
+        bucket = self._bucket(pair)
+        copied = 0
+        impl = (
+            "copy_file_range"
+            if _HAS_COPY_FILE_RANGE
+            else ("sendfile" if _HAS_SENDFILE else "readwrite")
+        )
+        with open(src, "rb") as fi, open(tmp, "wb") as fo:
+            ifd, ofd = fi.fileno(), fo.fileno()
+            total = os.fstat(ifd).st_size
+            while True:
+                if cancel is not None and cancel.is_set():
+                    raise TransferCancelled(f"transfer of {src} cancelled")
+                if impl == "copy_file_range":
+                    try:
+                        n = os.copy_file_range(ifd, ofd, self.chunk_bytes)
+                    except OSError as e:
+                        if e.errno in _FALLBACK_ERRNOS:
+                            impl = "sendfile" if _HAS_SENDFILE else "readwrite"
+                            continue
+                        raise
+                elif impl == "sendfile":
+                    try:
+                        n = os.sendfile(ofd, ifd, None, self.chunk_bytes)
+                    except OSError as e:
+                        if e.errno in _FALLBACK_ERRNOS:
+                            impl = "readwrite"
+                            continue
+                        raise
+                else:
+                    buf = fi.read(self.chunk_bytes)
+                    n = len(buf)
+                    if n:
+                        fo.write(buf)
+                if n == 0:
+                    break
+                copied += n
+                if on_chunk is not None:
+                    on_chunk(copied, total, tmp)
+                if self.chunk_hook is not None:
+                    self.chunk_hook(copied, total, tmp)
+                if bucket is not None:
+                    self._throttle_wait(bucket.consume(n), ofd)
+        # size-verified completion: the committed file must hold exactly
+        # what the source holds NOW (a mid-copy rewrite forces a retry)
+        final = os.path.getsize(src)
+        if copied != final:
+            raise TransferError(
+                f"size verify failed for {src}: copied {copied}, source {final}"
+            )
+        return copied, impl
+
+    @staticmethod
+    def _throttle_wait(wait: float, fd: int) -> None:
+        """Sleep out a token-bucket debt in bounded slices, refreshing
+        the staging file's mtime between slices — a heavily throttled
+        transfer (one chunk's debt can exceed the orphan grace) must
+        never look age-dead to another node's reaper."""
+        slice_s = ORPHAN_GRACE_S / 4
+        while wait > 0:
+            time.sleep(min(wait, slice_s))
+            wait -= slice_s
+            if wait > 0:
+                try:
+                    os.utime(fd)
+                except OSError:
+                    pass
+
+    # -- orphan staging files --------------------------------------------------
+    def maybe_reap_orphan(self, path: str) -> bool:
+        """Delete a ``*.sea_tmp`` staging file iff it is provably dead:
+        created on THIS host by a pid that no longer exists, or untouched
+        for :data:`ORPHAN_GRACE_S` (an in-flight transfer keeps its tmp's
+        mtime fresh with every chunk, so age is safe even for files owned
+        by another node of a shared tier). Anything else is left alone —
+        the LRU and scan walks must never delete a half-written staging
+        file out from under a racing ``os.replace``."""
+        if not path.endswith(_TMP_SUFFIX):
+            return False
+        with self._active_lock:
+            if path in self._active_tmps:
+                return False
+        owner = tmp_owner(path)
+        local_dead = (
+            owner is not None
+            and owner[0] == _HOST
+            and not _pid_alive(owner[1])
+        )
+        if not local_dead:
+            # foreign host, unparseable name, or a live local pid (which
+            # may be a RECYCLED pid squatting on a crashed writer's name):
+            # fall back to the age grace. Safe for genuinely in-flight
+            # transfers — every chunk write and every throttle slice
+            # (_throttle_wait) keeps the tmp's mtime fresh.
+            try:
+                age = time.time() - os.path.getmtime(path)
+            except OSError:
+                return False
+            if age < ORPHAN_GRACE_S:
+                return False
+        try:
+            os.unlink(path)
+        except OSError:
+            return False
+        self.telemetry.record_orphan_reaped()
+        return True
+
+    def sweep_orphans(self, root: str) -> int:
+        """Walk one root and reap every provably-dead staging file."""
+        n = 0
+        for dirpath, _dirs, files in os.walk(root):
+            for fn in files:
+                if fn.endswith(_TMP_SUFFIX) and self.maybe_reap_orphan(
+                    os.path.join(dirpath, fn)
+                ):
+                    n += 1
+        return n

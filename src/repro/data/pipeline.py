@@ -147,24 +147,12 @@ class DataPipeline:
             self.stats.cache_hits += 1
         else:
             self.stats.cache_misses += 1
-            # stage into the fastest cache tier with room (prefetch)
-            located = self.fs.resolver.resolve(key, ignore_negative=True)
-            if located is not None:
-                nbytes = os.path.getsize(located[1])
-                slot = self.fs.policy.select_cache_for_prefetch(nbytes)
-                if slot is not None:
-                    ctier, croot = slot
-                    dst = os.path.join(croot, key)
-                    os.makedirs(os.path.dirname(dst), exist_ok=True)
-                    import shutil
-
-                    shutil.copyfile(located[1], dst + ".sea_tmp")
-                    os.replace(dst + ".sea_tmp", dst)
-                    # account the staged bytes and point the resolver at
-                    # the fast copy (mirrors Flusher.prefetch)
-                    ctier.note_written(croot, key, nbytes)
-                    self.fs.resolver.note_location(key, ctier, dst)
-                    self.fs.telemetry.record_prefetch(nbytes)
+            # stage through the shared engine-backed primitive (same code
+            # path as Flusher.prefetch): key-locked against racing
+            # _evict/flusher moves, ledger admission before bytes move,
+            # staging tmp cleaned up on failure. Best-effort — on any
+            # transfer error the shard is read from its persistent copy.
+            self.fs.stage_to_cache(key)
         with self.fs.open(path, "rb") as f:
             arr = np.load(f, allow_pickle=False)
         self._staged.put((sid, arr))

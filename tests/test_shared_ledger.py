@@ -315,7 +315,13 @@ def test_second_instance_in_same_process_is_follower(tmp_path):
         while not os.path.exists(os.path.join(base, "routed.out")):
             assert time.time() < deadline, "leader never drained the spool"
             time.sleep(0.05)
-        assert sea2.fs.where(p) == "pfs"
+        # the base copy appears at the flush's os.replace commit, a few
+        # ledger transactions BEFORE the MOVE-mode evict of the cache
+        # copy runs (flush must durably commit first) — poll for the
+        # eviction rather than assuming the two are atomically visible
+        while sea2.fs.where(p) != "pfs":
+            assert time.time() < deadline, "cache copy never evicted"
+            time.sleep(0.05)
     finally:
         sea2.shutdown()
         sea1.shutdown()
