@@ -1,10 +1,11 @@
-"""CI perf-regression gate for the placement/multiproc/resolve/transfer
-benchmarks.
+"""CI perf-regression gate for the placement/multiproc/resolve/transfer/
+readahead benchmarks.
 
-Compares a freshly produced ``BENCH_pr2.json`` (written by
+Compares a freshly produced ``BENCH_pr5.json`` (written by
 ``placement_bench --json`` + ``multiproc_bench --json`` +
-``resolve_bench --json`` + ``transfer_bench --json``, merged by the CI
-workflow) against the committed ``benchmarks/BENCH_baseline.json``.
+``resolve_bench --json`` + ``transfer_bench --json`` +
+``readahead_bench --json``, merged by the CI workflow) against the
+committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
@@ -19,6 +20,11 @@ The structural gates are machine-independent and strict:
     > MIN_OVERLAP_SPEEDUP x over serial copies. (Transfer gates are
     pure ratios — absolute throughputs are machine-dependent, so no
     baseline comparison is applied to them.)
+  * predictive readahead: cold sequential block reads >= MIN_SEQ_SPEEDUP x
+    faster with readahead on (modelled tier bandwidths: deterministic),
+    wasted-prefetch bytes < MAX_WASTED_RATIO of staged bytes on a
+    random-access permutation, and the read-hit open fast path cuts
+    per-call overhead >= MIN_FASTPATH_REDUCTION vs the PR-4 open path.
 
 Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
@@ -44,6 +50,9 @@ MIN_TRANSFER_RATIO = 0.85   # engine vs shutil.copyfile large-file parity:
                             # so a genuine chunk-loop regression measures
                             # 0.6-0.75 while runner noise stays within ±0.1
 MIN_OVERLAP_SPEEDUP = 1.5   # pooled staging vs serial copies (latency-bound)
+MIN_SEQ_SPEEDUP = 2.0       # cold sequential reads: readahead on vs off
+MAX_WASTED_RATIO = 0.20     # wasted / staged speculative bytes, random access
+MIN_FASTPATH_REDUCTION = 0.30  # read-hit open overhead cut vs PR-4 path
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -129,6 +138,29 @@ def check(current: dict, baseline: dict | None) -> list[str]:
                 f"{MIN_OVERLAP_SPEEDUP}x over serial staging"
             )
 
+    readahead = current.get("readahead")
+    if readahead is None:
+        failures.append("readahead section missing (readahead_bench not run)")
+    else:
+        seq = readahead["cold_seq_speedup"]
+        if seq < MIN_SEQ_SPEEDUP:
+            failures.append(
+                f"cold sequential readahead speedup {seq}x "
+                f"< required {MIN_SEQ_SPEEDUP}x"
+            )
+        wasted = readahead["wasted_ratio"]
+        if wasted >= MAX_WASTED_RATIO:
+            failures.append(
+                f"wasted-prefetch ratio {wasted} on random access "
+                f">= allowed {MAX_WASTED_RATIO}"
+            )
+        cut = readahead["fastpath_overhead_reduction"]
+        if cut < MIN_FASTPATH_REDUCTION:
+            failures.append(
+                f"open fast-path overhead reduction {cut} "
+                f"< required {MIN_FASTPATH_REDUCTION}"
+            )
+
     if baseline is not None:
         base_rows = baseline["placement"]["rows"]
         for r in rows:
@@ -157,7 +189,7 @@ def check(current: dict, baseline: dict | None) -> list[str]:
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: check_regression.py BENCH_pr2.json [baseline.json]")
+        print("usage: check_regression.py BENCH_pr5.json [baseline.json]")
         raise SystemExit(2)
     with open(argv[0]) as f:
         current = json.load(f)

@@ -20,6 +20,7 @@ from .intercept import SeaMount
 from .ledger import CapacityLedger, Reservation
 from .lists import CompiledRules, Mode, matches, resolve_mode
 from .placement import PlacementPolicy
+from .prefetcher import Prefetcher
 from .resolver import Resolver
 from .seafs import SeaFS
 from .shared_ledger import SharedCapacityLedger, SharedReservation
@@ -48,6 +49,7 @@ __all__ = [
     "matches",
     "resolve_mode",
     "PlacementPolicy",
+    "Prefetcher",
     "Resolver",
     "SeaFS",
     "Telemetry",

@@ -71,6 +71,17 @@ class SeaConfig:
                                         # each root + single-flusher election
     leader_heartbeat_s: float = 0.5     # flush-leader heartbeat period; follower
                                         # takeover within 2 missed heartbeats
+    #: adaptive read path (predictive readahead + open fast path)
+    readahead: bool = False             # access-pattern-driven speculative
+                                        # staging base->cache (beyond-paper)
+    readahead_depth: int = 4            # max files staged ahead per detected
+                                        # sequence (adaptive, 1..depth)
+    readahead_min_confidence: float = 0.5  # empirical confidence a predicted
+                                           # key needs before staging
+    open_fast_path: bool = True         # read-hit opens skip key locks and
+                                        # take batched per-thread telemetry
+                                        # (False = PR-4 open path, benchmark
+                                        # baseline)
     #: beyond-paper options (all default OFF for paper faithfulness)
     stripe_chunk_bytes: int = 0         # >0 enables striping across same-level roots
     lru_evict: bool = False             # auto-evict LRU when a tier is full
@@ -108,6 +119,10 @@ class SeaConfig:
                 raise ValueError(
                     f"transfer_bandwidth_caps[{pair!r}] must be positive"
                 )
+        if self.readahead_depth <= 0:
+            raise ValueError("readahead_depth must be positive")
+        if not 0.0 <= self.readahead_min_confidence <= 1.0:
+            raise ValueError("readahead_min_confidence must be in [0, 1]")
         if self.shared_ledger and not self.capacity_ledger:
             raise ValueError("shared_ledger requires capacity_ledger=True")
 
@@ -216,6 +231,12 @@ class SeaConfig:
             transfer_retries=sea.getint("transfer_retries", 2),
             transfer_backoff_s=sea.getfloat("transfer_backoff_s", 0.02),
             transfer_bandwidth_caps=caps,
+            readahead=sea.getboolean("readahead", False),
+            readahead_depth=sea.getint("readahead_depth", 4),
+            readahead_min_confidence=sea.getfloat(
+                "readahead_min_confidence", 0.5
+            ),
+            open_fast_path=sea.getboolean("open_fast_path", True),
             flushlist=_read_list(FLUSHLIST_NAME),
             evictlist=_read_list(EVICTLIST_NAME),
             prefetchlist=_read_list(PREFETCHLIST_NAME),
@@ -240,6 +261,7 @@ class SeaConfig:
             shared_ledger=env.get("SEA_SHARED_LEDGER", "0") not in ("0", "", "false"),
             resolver_cache=env.get("SEA_RESOLVER_CACHE", "1")
             not in ("0", "", "false"),
+            readahead=env.get("SEA_READAHEAD", "0") not in ("0", "", "false"),
         )
 
 

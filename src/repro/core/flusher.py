@@ -501,6 +501,18 @@ class Flusher:
             if mode in (Mode.COPY, Mode.MOVE):
                 self._flush_one(key, real, tier)
             if mode in (Mode.MOVE, Mode.REMOVE):
+                if not self._draining and self.fs.prefetcher.is_hot(key):
+                    # predicted-hot: the readahead engine staged (or is
+                    # staging) this key because the application is about
+                    # to read it — evicting now would throw that work
+                    # away. The flush above still ran; the evict retries
+                    # on an idle tick once the hotness expires. drain()
+                    # ignores hotness: shutdown durability wins.
+                    with self._cv:
+                        self._failed.setdefault(
+                            key, time.monotonic() + 2 * self._hb_interval
+                        )
+                    return mode
                 self._evict_one(key, real, tier)
         return mode
 
@@ -613,6 +625,9 @@ class Sea:
 
     def shutdown(self) -> None:
         try:
+            # stop speculative readahead first: pending predictions are
+            # cancelled and counted, and no new staging races the drain
+            self.fs.prefetcher.stop()
             # drain may RAISE when a flush never succeeded (durability
             # contract) — leadership and workers must still be released
             try:

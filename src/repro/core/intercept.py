@@ -34,12 +34,28 @@ class SeaMount:
     def __init__(self, fs: SeaFS):
         self.fs = fs
         self._saved: dict = {}
+        # precompiled mount-prefix rejector: the overwhelmingly common
+        # case inside a mount context is a path that has nothing to do
+        # with Sea — it must cost ONE str.startswith, not an fspath +
+        # abspath round-trip. Definitive only for normalized absolute
+        # strings (anything else falls through to the full probe); the
+        # heuristic itself lives in SeaFS.fast_path_class so this layer
+        # and SeaFS.open can never classify the same path differently.
+        classify = fs.fast_path_class
+
+        def fast_nonsea(p):
+            return classify(p) is False
+
+        self._fast_nonsea = fast_nonsea
 
     # -- wrappers --------------------------------------------------------------
     def _wrap_open(self, orig):
         fs = self.fs
+        fast_nonsea = self._fast_nonsea
 
         def sea_open(file, mode="r", *a, **kw):
+            if fast_nonsea(file):
+                return orig(file, mode, *a, **kw)
             try:
                 is_sea = isinstance(file, (str, os.PathLike)) and fs.is_sea_path(
                     os.fspath(file)
@@ -54,8 +70,11 @@ class SeaMount:
 
     def _path_fn(self, orig, handler):
         fs = self.fs
+        fast_nonsea = self._fast_nonsea
 
         def wrapper(path, *a, **kw):
+            if fast_nonsea(path):
+                return orig(path, *a, **kw)
             # the guard covers ONLY the fspath/is_sea_path probe: an error
             # raised by the Sea handler itself must propagate, not silently
             # re-execute the operation against the original function.
@@ -73,8 +92,11 @@ class SeaMount:
 
     def _two_path_fn(self, orig, handler):
         fs = self.fs
+        fast_nonsea = self._fast_nonsea
 
         def wrapper(src, dst, *a, **kw):
+            if fast_nonsea(src) and fast_nonsea(dst):
+                return orig(src, dst, *a, **kw)
             try:
                 s = isinstance(src, (str, os.PathLike)) and fs.is_sea_path(
                     os.fspath(src)
@@ -119,9 +141,10 @@ class SeaMount:
             os.rename = self._two_path_fn(os.rename, fs.rename)
             os.replace = self._two_path_fn(os.replace, fs.rename)
             os.listdir = self._path_fn(os.listdir, fs.listdir)
-            os.makedirs = self._path_fn(
-                os.makedirs, lambda p, *a, **kw: fs.makedirs(p, **kw)
-            )
+            # fs.makedirs mirrors os.makedirs(name, mode=0o777,
+            # exist_ok=False) exactly — the positional mode argument is
+            # forwarded, not dropped (the old lambda routed *a nowhere)
+            os.makedirs = self._path_fn(os.makedirs, fs.makedirs)
             os.path.exists = self._path_fn(os.path.exists, fs.exists)
             os.path.getsize = self._path_fn(os.path.getsize, fs.getsize)
             # fs.isfile checks the *located real path* with os.path.isfile:
@@ -131,12 +154,12 @@ class SeaMount:
             # served from the resolver's directory index
             os.path.isdir = self._path_fn(os.path.isdir, fs.isdir)
 
-            def _copyfile(src, dst, **kw):
-                with fs.open(src, "rb") as fi, fs.open(dst, "wb") as fo:
-                    shutil.copyfileobj(fi, fo)
-                return dst
-
-            shutil.copyfile = self._two_path_fn(shutil.copyfile, _copyfile)
+            # sea↔sea copies stream through the TransferEngine (chunked
+            # copy_file_range, atomic commit, ledger admission) instead
+            # of a Python copyfileobj loop; follow_symlinks is honored
+            # outward and rejected into the mount, never silently
+            # dereferenced
+            shutil.copyfile = self._two_path_fn(shutil.copyfile, fs.copyfile)
         return self
 
     def __exit__(self, *exc) -> None:

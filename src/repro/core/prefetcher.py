@@ -1,0 +1,416 @@
+"""Prefetcher — access-pattern-driven predictive readahead.
+
+PRs 1–4 made Sea's metadata and data planes fast, but staging stayed
+*reactive*: a file reaches a cache tier only through a static
+``.sea_prefetchlist`` glob or an explicit ``stage_to_cache`` call, so any
+workload not hand-annotated reads cold from the base tier forever. The
+HSM follow-up work (Hayot-Sasson & Glatard, arXiv:2404.11556) shows that
+*automatic, access-driven* staging is what makes tiering pay off for
+unmodified pipelines, and the openPMD/ADIOS2 streaming results
+(arXiv:2107.06108) show the wall-clock win lives in overlapping staging
+with compute. This module is that layer:
+
+* **Online access-pattern predictor.** Every ``SeaFS.open(..., "r")``
+  under the mount reports its key (a lock-free deque append — the open
+  hot path never blocks on the predictor). A background thread digests
+  the stream with two models:
+
+  - *Numeric-sequence runs.* Keys are split around their last digit run
+    (``shard_00007.npy`` → ``("shard_", 7, ".npy")``). Two consecutive
+    accesses with the same non-zero stride establish a run; confidence
+    grows as ``1 - 1/run_length``, and once it clears
+    ``readahead_min_confidence`` the next ``depth`` keys of the run are
+    predicted (``shard_00008 .. shard_0000{7+depth}``).
+  - *First-order successor graph.* For non-numeric orders a bounded
+    ``key -> {next_key: count}`` graph predicts the most likely
+    successor once its empirical probability clears the confidence bar.
+
+* **Asynchronous speculative staging.** Predictions are staged
+  base→cache through the existing :class:`TransferEngine` worker pool
+  via ``SeaFS.stage_to_cache`` — key-locked, ledger-admitted before
+  bytes move, atomically committed — so a speculative copy can never
+  over-commit a capped tier or expose a partial file.
+
+* **Cooperative cancellation.** Every prediction carries a cancel
+  event, checked before admission and between chunks. A direction
+  change cancels the whole run's outstanding predictions; accesses
+  overtaking an unconsumed prediction cancel it as stale.
+
+* **Accuracy feedback.** A predicted key that is subsequently opened is
+  a *hit* and widens that run's readahead depth (up to
+  ``readahead_depth``); an expired or cancelled prediction is *waste*
+  and narrows it (down to 1). Hit/staged/wasted bytes land in telemetry
+  (``readahead_*`` counters) so the speculation budget is observable.
+
+* **Eviction shielding.** Keys with an in-flight or recently-consumed
+  prediction report :meth:`is_hot`; the flusher's evict step and the
+  LRU room-maker deprioritise them so speculative work is not thrown
+  away before the application arrives (bounded by ``hot_ttl_s``).
+
+``SeaConfig(readahead=True)`` enables the whole layer; it is off by
+default (beyond-paper behaviour).
+"""
+
+from __future__ import annotations
+
+import re
+import threading
+import time
+from collections import OrderedDict, deque
+
+#: last run of digits in a key, e.g. "a/shard_00042.npy" -> ("a/shard_",
+#: "00042", ".npy"); the suffix may not contain further digits
+_NUM_RE = re.compile(r"^(.*?)(\d+)(\D*)$")
+
+#: model bounds — pathological key churn must not grow memory forever
+_MAX_RUNS = 64
+_MAX_SUCC_KEYS = 512
+_MAX_SUCC_PER_KEY = 8
+_MAX_RECENT = 4096
+
+
+class _Run:
+    """State of one numeric key sequence ``(prefix, suffix, width)``."""
+
+    __slots__ = ("last", "stride", "length", "depth", "last_ts")
+
+    def __init__(self, n: int, now: float):
+        self.last = n  # last observed sequence number
+        self.stride = 0  # confirmed stride (0 = not yet established)
+        self.length = 1  # consecutive accesses confirming the stride
+        self.depth = 1  # adaptive readahead depth, 1..max_depth
+        self.last_ts = now
+
+    def confidence(self) -> float:
+        """Empirical confidence that the next access continues the run."""
+        if self.stride == 0:
+            return 0.0
+        return 1.0 - 1.0 / self.length
+
+
+class _Prediction:
+    """One speculative key: its cancel event and staging outcome."""
+
+    __slots__ = ("key", "ts", "nbytes", "cancel", "seq", "num", "outcome",
+                 "counted")
+
+    def __init__(self, key: str, ts: float, seq, num: int | None):
+        self.key = key
+        self.ts = ts
+        self.nbytes = 0  # bytes actually staged (0 until the copy commits)
+        self.cancel = threading.Event()
+        self.seq = seq  # run id for depth feedback (None = successor graph)
+        self.num = num  # sequence number (None = successor graph)
+        self.outcome = None  # None (pending) | "hit" | "waste"
+        self.counted = 0  # bytes already attributed to the outcome ledger
+        # (a stage commit racing the settlement records only the rest)
+
+
+class Prefetcher:
+    """Per-process predictive readahead engine bound to one ``SeaFS``.
+
+    ``observe`` is the only hot-path entry point and is O(1) lock-free
+    (deque append + event set); everything else runs on one background
+    thread plus the transfer engine's bounded worker pool.
+    """
+
+    def __init__(self, fs, *, hot_ttl_s: float = 30.0):
+        self.fs = fs
+        cfg = fs.config
+        self.enabled = bool(getattr(cfg, "readahead", False))
+        self.max_depth = max(1, int(getattr(cfg, "readahead_depth", 4)))
+        self.min_confidence = float(
+            getattr(cfg, "readahead_min_confidence", 0.5)
+        )
+        self.hot_ttl_s = float(hot_ttl_s)
+        self.telemetry = fs.telemetry
+        self._events: deque[str] = deque()  # lock-free producer side
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._lock = threading.Lock()  # guards the model + pending below
+        self._runs: "OrderedDict[tuple, _Run]" = OrderedDict()
+        self._succ: "OrderedDict[str, OrderedDict[str, int]]" = OrderedDict()
+        self._last_key: str | None = None
+        self._pending: dict[str, _Prediction] = {}
+        self._recent: dict[str, float] = {}  # consumed predictions (hot TTL)
+        self._thread: threading.Thread | None = None
+        self._thread_lock = threading.Lock()
+        # staging jobs submitted but not yet finished: a cap on how much
+        # of the (shared) transfer pool speculation may occupy. Combined
+        # with the non-blocking try_submit below, the digestion thread
+        # can never stall — expiry/cancellation keep running exactly
+        # when the devices are saturated
+        self._inflight = 0
+        self._max_inflight = max(2, fs.transfer.n_workers * 2)
+
+    # -- hot path -----------------------------------------------------------
+    def observe(self, key: str) -> None:
+        """Report one read-open of ``key``. Called from ``SeaFS.open`` —
+        must never block: an unbounded deque append plus (at most) one
+        event set; the model update happens on the background thread."""
+        if not self.enabled or self._stop.is_set():
+            return
+        if len(self._events) > 4096:
+            return  # digestion far behind: shed observations, not memory
+        self._events.append(key)
+        if not self._wake.is_set():
+            self._wake.set()
+        if self._thread is None:
+            self._ensure_thread()
+
+    def is_hot(self, key: str) -> bool:
+        """True while ``key`` has an in-flight prediction or was consumed
+        as a prediction hit within the hot TTL — eviction paths
+        deprioritise such keys so speculative staging is not thrown away
+        just before the application arrives."""
+        if not self.enabled:
+            return False
+        if key in self._pending:  # GIL-atomic read; advisory only
+            return True
+        ts = self._recent.get(key)
+        return ts is not None and time.monotonic() - ts < self.hot_ttl_s
+
+    # -- lifecycle ----------------------------------------------------------
+    def _ensure_thread(self) -> None:
+        with self._thread_lock:
+            if self._thread is None or not self._thread.is_alive():
+                self._stop.clear()
+                self._thread = threading.Thread(
+                    target=self._run, name="sea-readahead", daemon=True
+                )
+                self._thread.start()
+
+    def stop(self) -> None:
+        """Stop the predictor and settle accounting: every still-pending
+        prediction is cancelled and (if staged) counted as waste."""
+        self._stop.set()
+        self._wake.set()
+        t = self._thread
+        if t is not None and t.is_alive():
+            t.join(timeout=10)
+        self.finalize()
+
+    def finalize(self) -> None:
+        """Expire every outstanding prediction now (cancel + count
+        waste). Used at shutdown and by benchmarks that want final
+        hit/waste accounting."""
+        self._cancel_where(lambda _p: True)
+
+    # -- background digestion ------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            self._wake.wait(timeout=0.1)
+            self._wake.clear()
+            while True:
+                try:
+                    key = self._events.popleft()
+                except IndexError:
+                    break
+                try:
+                    self._observe_one(key)
+                except Exception:  # the predictor must never kill reads
+                    pass
+            self._expire(time.monotonic())
+
+    def _observe_one(self, key: str) -> None:
+        now = time.monotonic()
+        hit = None
+        with self._lock:
+            hit = self._pending.pop(key, None)
+            if hit is not None:
+                hit.outcome = "hit"
+                hit_amount = hit.counted = hit.nbytes
+                if len(self._recent) >= _MAX_RECENT:
+                    self._recent.clear()
+                self._recent[key] = now
+        if hit is not None:
+            hit.cancel.set()  # no longer worth staging if still queued
+            self.telemetry.record_readahead_hit(hit_amount)
+            self._adjust_depth(hit.seq, +1)
+        predictions = self._update_numeric(key, now)
+        if not predictions:
+            predictions = self._update_successor(key)
+        else:
+            self._update_successor(key, predict=False)
+        for pk, seq, num in predictions:
+            self._maybe_stage(pk, seq, num, now)
+
+    # -- model: numeric runs -------------------------------------------------
+    def _update_numeric(self, key: str, now: float) -> list:
+        m = _NUM_RE.match(key)
+        if m is None:
+            return []
+        prefix, digits, suffix = m.groups()
+        seq = (prefix, suffix, len(digits))
+        n = int(digits)
+        run = self._runs.get(seq)
+        if run is None:
+            if len(self._runs) >= _MAX_RUNS:
+                self._runs.popitem(last=False)
+            self._runs[seq] = _Run(n, now)
+            return []
+        self._runs.move_to_end(seq)
+        delta = n - run.last
+        if delta == 0:
+            return []  # re-read of the same file: no sequence evidence
+        if delta == run.stride:
+            run.length += 1
+        else:
+            # direction/stride change: outstanding predictions of this
+            # run are stale — cancel them before re-establishing
+            self._cancel_run(seq)
+            run.stride = delta
+            run.length = 1
+        run.last = n
+        run.last_ts = now
+        if run.confidence() < self.min_confidence:
+            return []
+        self._cancel_overtaken(seq, n, run.stride)
+        width = len(digits)
+        out = []
+        for j in range(1, run.depth + 1):
+            nn = n + j * run.stride
+            if nn < 0:
+                break
+            out.append((f"{prefix}{nn:0{width}d}{suffix}", seq, nn))
+        return out
+
+    # -- model: successor graph ----------------------------------------------
+    def _update_successor(self, key: str, *, predict: bool = True) -> list:
+        prev, self._last_key = self._last_key, key
+        if prev is not None and prev != key:
+            succs = self._succ.get(prev)
+            if succs is None:
+                if len(self._succ) >= _MAX_SUCC_KEYS:
+                    self._succ.popitem(last=False)
+                succs = self._succ[prev] = OrderedDict()
+            else:
+                self._succ.move_to_end(prev)
+            succs[key] = succs.get(key, 0) + 1
+            if len(succs) > _MAX_SUCC_PER_KEY:
+                # drop the weakest edge, not the oldest
+                weakest = min(succs, key=succs.get)
+                del succs[weakest]
+        if not predict:
+            return []
+        succs = self._succ.get(key)
+        if not succs:
+            return []
+        total = sum(succs.values())
+        best_key = max(succs, key=succs.get)
+        best = succs[best_key]
+        if total < 2 or best / total < self.min_confidence:
+            return []
+        return [(best_key, None, None)]
+
+    # -- staging --------------------------------------------------------------
+    def _maybe_stage(self, key: str, seq, num, now: float) -> None:
+        with self._lock:
+            if key in self._pending:
+                return
+            ts = self._recent.get(key)
+            if ts is not None and now - ts < self.hot_ttl_s:
+                return  # just consumed: staging again buys nothing
+            if self._inflight >= self._max_inflight:
+                # our own speculation is saturated: drop the prediction
+                # rather than pile further onto the pool — the key can
+                # be re-predicted on the next observation.
+                return
+            self._inflight += 1
+            pred = _Prediction(key, now, seq, num)
+            self._pending[key] = pred
+        self.telemetry.record_readahead_prediction()
+        # NEVER block: the transfer queue is shared with other producers
+        # (flusher prefetch/flush), and blocking this thread would freeze
+        # expiry/cancellation exactly when stale speculation is most
+        # expensive. A full queue drops the speculative job instead.
+        if self.fs.transfer.try_submit(self._stage_one, pred) is None:
+            with self._lock:
+                self._pending.pop(key, None)
+                self._inflight -= 1
+
+    def _stage_one(self, pred: _Prediction) -> int:
+        """Runs on a transfer worker: the actual speculative copy."""
+        try:
+            if pred.cancel.is_set() or self._stop.is_set():
+                return 0
+            try:
+                nbytes = self.fs.stage_to_cache(pred.key, cancel=pred.cancel)
+            except OSError:
+                nbytes = 0
+            late = 0
+            with self._lock:
+                pred.nbytes = nbytes
+                outcome = pred.outcome
+                if outcome is not None:
+                    # the prediction was settled while this copy was past
+                    # its last cancel checkpoint: attribute the committed
+                    # bytes the settlement (which saw nbytes=0) missed,
+                    # so staged == hit + wasted stays an invariant
+                    late = nbytes - pred.counted
+                    pred.counted = nbytes
+            if nbytes:
+                self.telemetry.record_readahead_staged(nbytes)
+            if late > 0:
+                if outcome == "waste":
+                    self.telemetry.record_readahead_waste(late)
+                else:
+                    self.telemetry.record_readahead_hit(late, count=False)
+            return nbytes
+        finally:
+            with self._lock:
+                self._inflight -= 1
+
+    # -- feedback / cancellation ----------------------------------------------
+    def _adjust_depth(self, seq, direction: int) -> None:
+        if seq is None:
+            return
+        run = self._runs.get(seq)
+        if run is None:
+            return
+        if direction > 0:
+            run.depth = min(run.depth + 1, self.max_depth)
+        else:
+            run.depth = max(run.depth - 1, 1)
+
+    def _cancel_where(self, predicate) -> None:
+        """One settlement protocol for every way a prediction dies
+        unconsumed: drop it from pending under the lock, fire its cancel
+        event, account its staged bytes (if the copy committed) as
+        waste, and narrow the owning run's depth. A copy that commits
+        AFTER this settlement records its own bytes (``_stage_one``
+        checks ``outcome``), so staged bytes can never escape both
+        ledgers or be counted twice."""
+        settled = []
+        with self._lock:
+            stale = [p for p in self._pending.values() if predicate(p)]
+            for p in stale:
+                del self._pending[p.key]
+                p.outcome = "waste"
+                amount = p.counted = p.nbytes
+                settled.append((p, amount))
+        for p, amount in settled:
+            p.cancel.set()
+            self.telemetry.record_readahead_waste(amount)
+            self._adjust_depth(p.seq, -1)
+
+    def _cancel_run(self, seq) -> None:
+        """Cancel every outstanding prediction of one numeric run."""
+        self._cancel_where(lambda p: p.seq == seq)
+
+    def _cancel_overtaken(self, seq, n: int, stride: int) -> None:
+        """Cancel predictions of this run the access stream has already
+        passed without consuming (the application skipped them)."""
+        direction = 1 if stride > 0 else -1
+        self._cancel_where(
+            lambda p: p.seq == seq
+            and p.num is not None
+            and (p.num - n) * direction <= 0
+        )
+
+    def _expire(self, now: float) -> None:
+        self._cancel_where(lambda p: now - p.ts > self.hot_ttl_s)
+
+    # -- introspection ---------------------------------------------------------
+    def pending_count(self) -> int:
+        return len(self._pending)

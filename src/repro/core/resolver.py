@@ -234,6 +234,25 @@ class Resolver:
         self._store(key, i, gen0, found)
         return found
 
+    def resolve_fast(self, key: str) -> tuple[Tier, str] | None:
+        """Lock-free trust-window hit, or None for *anything* else — the
+        ``open`` fast path. A single GIL-atomic dict read: no shard lock,
+        no telemetry, no verify ``lstat``, no fallback scan. Only a
+        positive entry whose last verify is inside the trust window is
+        served; the caller's own ``io.open`` doubles as the verify (its
+        ENOENT sends the caller to the full slow path, which heals). With
+        ``verify_window_s == 0`` (strict verify-on-hit) this never hits,
+        so the fast path composes with the strict discipline."""
+        if not self.enabled or self.verify_window_s <= 0.0:
+            return None
+        e = self._shards[self._shard_index(key)].get(key)
+        if (
+            type(e) is _Entry
+            and time.monotonic() - e.verified_at <= self.verify_window_s
+        ):
+            return e.tier, e.real
+        return None
+
     def refresh(self, key: str) -> tuple[Tier, str] | None:
         """A caller's own operation hit ENOENT on a resolved path (the
         operation doubled as the verify and failed): drop the entry,

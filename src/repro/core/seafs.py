@@ -13,6 +13,7 @@ from __future__ import annotations
 import errno
 import io
 import os
+import shutil as _shutil
 import stat as stat_mod
 import threading
 import time
@@ -22,6 +23,7 @@ from .config import SeaConfig
 from .ledger import LEDGER_DIRNAME, TMP_SUFFIX
 from .lists import CompiledRules, Mode
 from .placement import PlacementPolicy
+from .prefetcher import Prefetcher
 from .resolver import Resolver
 from .telemetry import Stopwatch, Telemetry
 from .tiers import Hierarchy, Tier
@@ -53,6 +55,7 @@ class _SeaFile:
         writing: bool,
         real: str,
         reservation=None,
+        fast: bool = False,
     ):
         self._fs = fs
         self._key = key
@@ -61,8 +64,15 @@ class _SeaFile:
         self._writing = writing
         self._real = real
         self._reservation = reservation
+        self._fast = fast
         self._t0 = time.perf_counter()
         self._closed = False
+
+    @property
+    def sea_tier(self) -> str:
+        """Name of the tier this handle was opened against (benchmarks
+        and tools use this to see where a read was actually served)."""
+        return self._tier.name
 
     def __getattr__(self, name):
         return getattr(self._raw, name)
@@ -96,6 +106,7 @@ class _SeaFile:
                 dt,
                 self._real,
                 self._reservation,
+                self._fast,
             )
 
     @property
@@ -134,16 +145,52 @@ class SeaFS:
         self.transfer = TransferEngine(config, self.telemetry, self.policy)
         self.mount = config.mount
         os.makedirs(self.mount, exist_ok=True)
+        self._mount_prefix = self.mount + os.sep
         self._open_counts: dict[str, int] = defaultdict(int)
+        self._open_writers: dict[str, int] = {}  # keys open for write
         self._lock = threading.RLock()
         self._key_locks: dict[str, threading.RLock] = {}
         self._close_listeners: list = []  # flusher subscribes here
         self._access_clock: dict[str, float] = {}  # LRU bookkeeping (opt-in)
+        self._fast_open = bool(getattr(config, "open_fast_path", True))
+        self._readahead = bool(getattr(config, "readahead", False))
+        # predictive readahead (observes read opens, stages speculatively
+        # through the transfer pool); inert unless config.readahead
+        self.prefetcher = Prefetcher(self)
 
     # -- path plumbing -------------------------------------------------------
     def is_sea_path(self, path: str) -> bool:
         ap = os.path.abspath(path)
-        return ap == self.mount or ap.startswith(self.mount + os.sep)
+        return ap == self.mount or ap.startswith(self._mount_prefix)
+
+    def fast_path_class(self, path) -> bool | None:
+        """One-``startswith`` mount classification for already-normalized
+        absolute strings: True = definitively under the mount, False =
+        definitively outside, None = undecided (relative, non-``str``,
+        or containing ``//``/dot components that normalization could
+        collapse — run the ``abspath`` probe). The single source of this
+        heuristic: ``SeaFS.open``'s fast path and the ``SeaMount``
+        wrappers both classify through here, so they can never drift."""
+        if (
+            path.__class__ is not str
+            or not path.startswith(os.sep)
+            or "/." in path
+            or "//" in path
+            or path.endswith(os.sep)
+        ):
+            return None
+        if path.startswith(self._mount_prefix) or path == self.mount:
+            return True
+        return False
+
+    def _fast_key(self, path) -> str | None:
+        """Mount-relative key when ``path`` is an already-normalized
+        absolute string strictly under the mount; None = undecided or
+        not a plain key (the caller takes the abspath-based slow path,
+        so a miss here is a de-opt, never a misroute)."""
+        if self.fast_path_class(path) is True and path != self.mount:
+            return path[len(self._mount_prefix) :]
+        return None
 
     def key_of(self, path: str) -> str:
         """Mount-relative key of a path under the mountpoint."""
@@ -235,16 +282,27 @@ class SeaFS:
 
     # -- file operations ------------------------------------------------------
     def open(self, path: str, mode: str = "r", **kw):
+        writing = _is_write_mode(mode)
+        if not writing:
+            f = self._open_read_fast(path, mode, kw)
+            if f is not None:
+                return f
         if not self.is_sea_path(path):
             self.telemetry.record_redirect(False)
             return io.open(path, mode, **kw)
         self.telemetry.record_redirect(True)
         key = self.key_of(path)
-        writing = _is_write_mode(mode)
+        if self._readahead and not writing:
+            self.prefetcher.observe(key)
         with self.key_lock(key):
             reservation = None
             if writing:
                 tier, real, reservation = self._resolve_write(key, reserve=True)
+                # register the writer BEFORE the (truncating) io.open so
+                # read fast paths divert to the key-locked slow path for
+                # the whole write, not just after the open returns
+                with self._lock:
+                    self._open_writers[key] = self._open_writers.get(key, 0) + 1
             else:
                 found = self.resolve_read(key)
                 if found is None:
@@ -262,6 +320,7 @@ class SeaFS:
                 if reservation is not None:
                     self.policy.release_write(tier, reservation)
                 if writing:
+                    self._drop_writer(key)
                     raise
                 # the open doubled as the verify and failed (the file
                 # moved between resolution and open): heal and retry once
@@ -278,11 +337,66 @@ class SeaFS:
             except Exception:
                 if reservation is not None:
                     self.policy.release_write(tier, reservation)
+                if writing:
+                    self._drop_writer(key)
                 raise
             with self._lock:
                 self._open_counts[key] += 1
                 self._access_clock[key] = time.monotonic()
         return _SeaFile(self, key, raw, tier, writing, real, reservation)
+
+    def _drop_writer(self, key: str) -> None:
+        with self._lock:
+            n = self._open_writers.get(key, 0) - 1
+            if n <= 0:
+                self._open_writers.pop(key, None)
+            else:
+                self._open_writers[key] = n
+
+    def _open_read_fast(self, path, mode: str, kw):
+        """Read-hit fast path: a single lock-free resolver lookup, the
+        ``io.open`` itself, and one counts update — no key lock, no
+        telemetry mutex (per-thread batched counters), no ``abspath``.
+
+        Correctness: served only for (a) normalized absolute paths under
+        the mount, (b) keys with **no registered writer** (writers
+        register before their truncating open, re-checked after ours),
+        and (c) resolver entries inside the verify trust window. The
+        ``io.open`` doubles as the verify — any failure returns None and
+        the caller re-runs the full key-locked slow path, which heals
+        moved files and settles races. A fast hit therefore observes
+        either a complete committed file or nothing (the atomic-commit
+        invariant of the data plane); it can never see a mid-flush move
+        as a partial file or a spurious miss."""
+        if not self._fast_open:
+            return None
+        key = self._fast_key(path)
+        if not key:
+            return None
+        if self._open_writers.get(key):
+            return None
+        found = self.resolver.resolve_fast(key)
+        if found is None:
+            return None
+        tier, real = found
+        try:
+            raw = io.open(real, mode, **kw)
+        except OSError:
+            return None  # the open doubled as the verify: slow path heals
+        if self._open_writers.get(key):
+            # a writer registered between the check and the open: drop
+            # the handle and serialize through the key-locked slow path
+            raw.close()
+            return None
+        with self._lock:
+            self._open_counts[key] += 1
+            self._access_clock[key] = time.monotonic()
+        lc = self.telemetry.local()
+        lc.redirect_hits += 1
+        lc.fastpath_opens += 1
+        if self._readahead:
+            self.prefetcher.observe(key)
+        return _SeaFile(self, key, raw, tier, False, real, fast=True)
 
     def _open_base_miss(self, key: str, mode: str, **kw):
         """The canonical miss: open against the persistent location so the
@@ -301,6 +415,7 @@ class SeaFS:
         dt: float,
         real: str | None = None,
         reservation=None,
+        fast: bool = False,
     ):
         if writing:
             if real is not None:
@@ -319,9 +434,15 @@ class SeaFS:
                     self.policy.release_write(tier, reservation)
                 self.resolver.note_location(key, tier, real)
             self.telemetry.record_io(tier.name, written=max(nbytes, 0), seconds=dt)
+        elif fast:
+            # fast-path reads batch their I/O counters per thread — no
+            # telemetry mutex on the hot close either
+            self.telemetry.local().record_read(tier.name, max(nbytes, 0), dt)
         else:
             self.telemetry.record_io(tier.name, read=max(nbytes, 0), seconds=dt)
         with self._lock:
+            if writing:
+                self._drop_writer(key)  # self._lock is reentrant
             self._open_counts[key] -= 1
             if self._open_counts[key] <= 0:
                 del self._open_counts[key]
@@ -510,15 +631,21 @@ class SeaFS:
         seen.discard(LEDGER_DIRNAME)
         return sorted(n for n in seen if not n.endswith(_TMP_SUFFIX))
 
-    def makedirs(self, path: str, exist_ok: bool = False) -> None:
+    def makedirs(
+        self, path: str, mode: int = 0o777, exist_ok: bool = False
+    ) -> None:
         """Directories are created lazily per tier on write; creating them
-        on the base tier gives tools a POSIX-visible directory."""
+        on the base tier gives tools a POSIX-visible directory. Mirrors
+        ``os.makedirs`` — including the positional ``mode`` argument,
+        which the intercept layer forwards verbatim."""
         if not self.is_sea_path(path):
-            os.makedirs(path, exist_ok=exist_ok)
+            os.makedirs(path, mode, exist_ok=exist_ok)
             return
         key = self.key_of(path)
         os.makedirs(
-            os.path.join(self.hierarchy.base.roots[0], key), exist_ok=exist_ok
+            os.path.join(self.hierarchy.base.roots[0], key),
+            mode,
+            exist_ok=exist_ok,
         )
 
     def _drop_replicas(
@@ -574,7 +701,13 @@ class SeaFS:
             return
         if s_in and d_in:
             skey, dkey = self.key_of(src), self.key_of(dst)
-            with self.key_lock(skey), self.key_lock(dkey):
+            # sorted-by-key acquisition, matching copyfile: two-key
+            # operations must share one global lock order or a rename
+            # and a copy of the same pair can ABBA-deadlock
+            locks = [self.key_lock(k) for k in sorted({skey, dkey})]
+            for lk in locks:
+                lk.acquire()
+            try:
                 found = self.resolver.resolve(skey, check_faster=True)
                 if found is None:
                     raise FileNotFoundError(src)
@@ -603,6 +736,9 @@ class SeaFS:
                         pass
                 else:
                     self.resolver.invalidate(dkey)
+            finally:
+                for lk in reversed(locks):
+                    lk.release()
             return
         # crossing the mount boundary (exactly one side is inside): copy
         # semantics, routed through the transfer engine — the destination
@@ -651,12 +787,118 @@ class SeaFS:
                 self.transfer.copy(rsrc, dst, src_tier=stier, dst_tier=None)
             self.remove(src)
 
+    def copyfile(self, src: str, dst: str, *, follow_symlinks: bool = True) -> str:
+        """``shutil.copyfile`` semantics over the hierarchy, with the
+        bytes moved through the transfer engine: chunked zero-copy
+        streaming, atomic ``.sea_tmp`` + ``os.replace`` commit, and
+        ledger admission held against the destination root before bytes
+        move (the seed's intercepted ``copyfileobj`` loop had none of
+        these, and readers could observe a partial destination).
+
+        ``follow_symlinks`` is handled explicitly instead of being
+        silently dereferenced: a symlink source is re-created with
+        ``os.symlink`` when the destination is outside the mount, and
+        **rejected** when it is inside (the hierarchy stores regular
+        files — a symlink cannot be placed, flushed, or staged)."""
+        s_in, d_in = self.is_sea_path(src), self.is_sea_path(dst)
+        if not s_in and not d_in:
+            return _shutil.copyfile(src, dst, follow_symlinks=follow_symlinks)
+        skey = self.key_of(src) if s_in else None
+        if s_in and d_in and skey == self.key_of(dst):
+            # shutil parity: copying a file onto itself raises and is a
+            # no-op — checked by KEY (two spellings of one mount path
+            # must not reach the replica-dropping overwrite below)
+            raise _shutil.SameFileError(f"{src!r} and {dst!r} are the same file")
+        if not follow_symlinks:
+            sprobe = src
+            if s_in:
+                located = self.resolver.resolve(skey, ignore_negative=True)
+                sprobe = located[1] if located is not None else None
+            if sprobe is not None and os.path.islink(sprobe):
+                if d_in:
+                    raise NotImplementedError(
+                        "copyfile(follow_symlinks=False): symlink copies "
+                        "into a Sea mount are not supported"
+                    )
+                os.symlink(os.readlink(sprobe), dst)
+                return dst
+        if d_in:
+            dkey = self.key_of(dst)
+            # deterministic (sorted-by-key) acquisition order: concurrent
+            # opposite-direction copies of the same pair must not ABBA
+            keys = sorted({skey, dkey} if s_in else {dkey})
+            locks = [self.key_lock(k) for k in keys]
+            for lk in locks:
+                lk.acquire()
+            try:
+                if s_in:
+                    located = self.resolver.resolve(skey, ignore_negative=True)
+                    if located is None:
+                        raise FileNotFoundError(
+                            errno.ENOENT, os.strerror(errno.ENOENT), src
+                        )
+                    stier, rsrc = located
+                else:
+                    stier, rsrc = None, src
+                dtier, rdst, res = self._resolve_write(dkey, reserve=True)
+                if os.path.abspath(rdst) == os.path.abspath(rsrc):
+                    self.policy.release_write(dtier, res)
+                    raise _shutil.SameFileError(
+                        f"{src!r} and {dst!r} are the same file"
+                    )
+                # preserve_stat=False: shutil.copyfile copies DATA only —
+                # destination permissions come from the umask and the
+                # mtime is fresh (copy2 is the stat-preserving variant)
+                self.transfer.copy(
+                    rsrc,
+                    rdst,
+                    src_tier=stier,
+                    dst_tier=dtier,
+                    dst_root=dtier.root_of(rdst),
+                    key=dkey,
+                    reservation=res,
+                    preserve_stat=False,
+                )
+                # the overwrite landed on the fastest copy: stale slower
+                # replicas must not resurface after an eviction
+                self._drop_replicas(dkey, keep=rdst)
+                self.resolver.invalidate(dkey)
+                self.resolver.note_location(dkey, dtier, rdst)
+            finally:
+                for lk in reversed(locks):
+                    lk.release()
+            # the destination is a committed write: the flusher must
+            # learn about it exactly as it learns about a closed write
+            # handle (the replaced intercept path flushed via that close
+            # event; without this, a flushlist destination would sit
+            # cache-only until drain)
+            if self.open_count(dkey) == 0:
+                for fn in self._close_listeners:
+                    fn(dkey, True)
+            return dst
+        # src inside the mount, dst external
+        with self.key_lock(skey):
+            located = self.resolver.resolve(skey, ignore_negative=True)
+            if located is None:
+                raise FileNotFoundError(
+                    errno.ENOENT, os.strerror(errno.ENOENT), src
+                )
+            stier, rsrc = located
+            if os.path.exists(dst) and os.path.samefile(rsrc, dst):
+                raise _shutil.SameFileError(
+                    f"{src!r} and {dst!r} are the same file"
+                )
+            self.transfer.copy(
+                rsrc, dst, src_tier=stier, dst_tier=None, preserve_stat=False
+            )
+        return dst
+
     # -- LRU room-making (beyond-paper, opt-in) --------------------------------
     def _lru_make_room(self) -> bool:
         """Evict least-recently-used closed files from cache tiers until a
         cache root becomes eligible again. Only files whose mode is KEEP or
         REMOVE (i.e. not awaiting flush) are candidates."""
-        candidates: list = []  # (atime, key, real, tier, root)
+        candidates: list = []  # (hot, atime, key, real, tier, root)
         for tier in self.hierarchy.cache_tiers:
             for root in tier.roots:
                 for dirpath, dirnames, files in os.walk(root):
@@ -676,10 +918,15 @@ class SeaFS:
                         mode = self.rules.mode(key)
                         if mode in (Mode.KEEP, Mode.REMOVE):
                             at = self._access_clock.get(key, 0.0)
-                            candidates.append((at, key, real, tier, root))
-        candidates.sort(key=lambda c: (c[0], c[1], c[2]))
+                            # predicted-hot keys (speculatively staged,
+                            # application expected imminently) are
+                            # evicted LAST — room-making must not throw
+                            # readahead work away moments before it pays
+                            hot = self.prefetcher.is_hot(key)
+                            candidates.append((hot, at, key, real, tier, root))
+        candidates.sort(key=lambda c: (c[0], c[1], c[2], c[3]))
         freed_any = False
-        for _at, key, real, vtier, vroot in candidates:
+        for _hot, _at, key, real, vtier, vroot in candidates:
             with self.key_lock(key):
                 if self.open_count(key):
                     continue
@@ -697,16 +944,20 @@ class SeaFS:
                     return True
         return freed_any
 
-    def stage_to_cache(self, key: str) -> int:
+    def stage_to_cache(self, key: str, *, cancel=None) -> int:
         """Stage one base-tier file into the fastest cache root with room
-        (the prefetch/staging primitive shared by ``Flusher.prefetch``
-        and the data pipeline): under the key lock — a racing
-        evict/flusher move can't pull the source out from under the copy
-        — with ledger admission reserved before bytes move and the
-        staging tmp cleaned up on failure. Best-effort: returns the bytes
-        staged, or 0 when the key is gone, already cached, out of room,
-        or the transfer failed (callers fall back to the base copy)."""
+        (the prefetch/staging primitive shared by ``Flusher.prefetch``,
+        the readahead predictor, and the data pipeline): under the key
+        lock — a racing evict/flusher move can't pull the source out
+        from under the copy — with ledger admission reserved before
+        bytes move and the staging tmp cleaned up on failure. ``cancel``
+        (speculative staging) aborts cooperatively before admission and
+        between chunks. Best-effort: returns the bytes staged, or 0 when
+        the key is gone, already cached, out of room, cancelled, or the
+        transfer failed (callers fall back to the base copy)."""
         with self.key_lock(key):
+            if cancel is not None and cancel.is_set():
+                return 0  # stale prediction: don't even resolve
             located = self.resolver.resolve(key, ignore_negative=True)
             if located is None or not located[0].persistent:
                 return 0  # gone, or already cached
@@ -729,11 +980,13 @@ class SeaFS:
                     dst_root=croot,
                     key=key,
                     admit="require",
+                    cancel=cancel,
                 )
             except OSError:
-                # admission lost to a racing writer, or an I/O error
-                # (engine errors preserve their POSIX class): staging is
-                # best-effort — the file simply stays on the base tier
+                # admission lost to a racing writer, a cancellation, or
+                # an I/O error (engine errors preserve their POSIX
+                # class): staging is best-effort — the file simply stays
+                # on the base tier
                 return 0
             # staging created a faster replica: point the index straight
             # at it

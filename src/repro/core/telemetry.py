@@ -40,6 +40,34 @@ class TransferCounters:
     retries: int = 0
 
 
+class ThreadCounters:
+    """Per-thread counter block for the open fast path: plain int/float
+    increments with **no lock at all** (each block is written by exactly
+    one thread; CPython attribute stores are GIL-atomic). ``snapshot``
+    folds the live blocks in non-destructively — counters only grow, so
+    summing base + per-thread values is always an under-by-at-most-one
+    -in-flight-increment view and exact once threads quiesce. Blocks of
+    dead threads are folded into the base counters and dropped, so
+    thread churn cannot grow the registry without bound."""
+
+    __slots__ = ("owner", "redirect_hits", "fastpath_opens", "io_read")
+
+    def __init__(self):
+        self.owner = threading.current_thread()
+        self.redirect_hits = 0
+        self.fastpath_opens = 0
+        #: tier -> [bytes_read, files_read, read_seconds]
+        self.io_read: dict[str, list] = {}
+
+    def record_read(self, tier: str, nbytes: int, seconds: float) -> None:
+        c = self.io_read.get(tier)
+        if c is None:
+            c = self.io_read[tier] = [0, 0, 0.0]
+        c[0] += nbytes
+        c[1] += 1
+        c[2] += seconds
+
+
 @dataclass
 class Telemetry:
     per_tier: dict[str, TierCounters] = field(
@@ -66,7 +94,19 @@ class Telemetry:
     resolver_invalidations: int = 0  # entries dropped by mutation paths
     dir_index_hits: int = 0         # listdir unions served by the child index
     dir_index_misses: int = 0       # listdir unions that re-walked the roots
+    readahead_predictions: int = 0  # speculative keys the predictor emitted
+    readahead_staged_files: int = 0  # predictions whose staging copy committed
+    readahead_staged_bytes: int = 0  # bytes speculatively staged base->cache
+    readahead_hits: int = 0         # predicted keys subsequently opened
+    readahead_hit_bytes: int = 0    # staged bytes that were then read hot
+    readahead_wasted_bytes: int = 0  # staged bytes expired/cancelled unread
+    fastpath_opens: int = 0         # read opens served by the lock-free
+                                    # fast path (base: folded dead threads)
+    fastpath_redirect_hits: int = 0  # redirects taken on the fast path
+                                     # (base: folded dead threads)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    _tls: threading.local = field(default_factory=threading.local, repr=False)
+    _locals: list = field(default_factory=list, repr=False)
 
     def record_io(
         self, tier: str, *, read: int = 0, written: int = 0, seconds: float = 0.0
@@ -163,9 +203,66 @@ class Telemetry:
             else:
                 self.dir_index_misses += 1
 
+    # -- readahead (predictive prefetch) ------------------------------------
+    def record_readahead_prediction(self) -> None:
+        with self._lock:
+            self.readahead_predictions += 1
+
+    def record_readahead_staged(self, nbytes: int) -> None:
+        with self._lock:
+            self.readahead_staged_files += 1
+            self.readahead_staged_bytes += nbytes
+
+    def record_readahead_hit(self, nbytes: int, *, count: bool = True) -> None:
+        """``count=False`` back-fills bytes for a hit already counted
+        (the staging copy committed after the predicted open)."""
+        with self._lock:
+            if count:
+                self.readahead_hits += 1
+            self.readahead_hit_bytes += nbytes
+
+    def record_readahead_waste(self, nbytes: int) -> None:
+        with self._lock:
+            self.readahead_wasted_bytes += nbytes
+
+    # -- thread-batched fast-path counters ----------------------------------
+    def local(self) -> ThreadCounters:
+        """This thread's lock-free counter block (created and registered
+        on first use). The open fast path writes here — one attribute
+        store per event instead of a mutex round-trip."""
+        lc = getattr(self._tls, "counters", None)
+        if lc is None:
+            lc = self._tls.counters = ThreadCounters()
+            with self._lock:
+                self._fold_dead_locked()
+                self._locals.append(lc)
+        return lc
+
+    def _fold_dead_locked(self) -> None:
+        """Fold counter blocks of dead threads into the base counters and
+        drop them (caller holds ``self._lock``). Safe: a dead thread can
+        no longer write its block."""
+        if all(lc.owner.is_alive() for lc in self._locals):
+            return
+        live = []
+        for lc in self._locals:
+            if lc.owner.is_alive():
+                live.append(lc)
+                continue
+            self.redirect_hits += lc.redirect_hits
+            self.fastpath_redirect_hits += lc.redirect_hits
+            self.fastpath_opens += lc.fastpath_opens
+            for tier, (nbytes, files, seconds) in lc.io_read.items():
+                c = self.per_tier[tier]
+                c.bytes_read += nbytes
+                c.files_read += files
+                c.read_seconds += seconds
+        self._locals = live
+
     def snapshot(self) -> dict:
         with self._lock:
-            return {
+            self._fold_dead_locked()
+            snap = {
                 "tiers": {
                     k: vars(v).copy() for k, v in sorted(self.per_tier.items())
                 },
@@ -190,7 +287,43 @@ class Telemetry:
                 "resolver_invalidations": self.resolver_invalidations,
                 "dir_index_hits": self.dir_index_hits,
                 "dir_index_misses": self.dir_index_misses,
+                "readahead_predictions": self.readahead_predictions,
+                "readahead_staged_files": self.readahead_staged_files,
+                "readahead_staged_bytes": self.readahead_staged_bytes,
+                "readahead_hits": self.readahead_hits,
+                "readahead_hit_bytes": self.readahead_hit_bytes,
+                "readahead_wasted_bytes": self.readahead_wasted_bytes,
+                "fastpath_opens": self.fastpath_opens,
+                "fastpath_redirect_hits": self.fastpath_redirect_hits,
             }
+            locals_ = list(self._locals)
+        # fold the LIVE per-thread fast-path blocks in (non-destructive
+        # sums: the blocks only grow and are never reset, so no event is
+        # ever double-counted or lost once its thread quiesces; dead
+        # threads' blocks were folded into the base counters above)
+        live_redirects = 0
+        for lc in locals_:
+            snap["fastpath_opens"] += lc.fastpath_opens
+            snap["fastpath_redirect_hits"] += lc.redirect_hits
+            live_redirects += lc.redirect_hits
+            for tier in tuple(lc.io_read):
+                nbytes, files, seconds = lc.io_read[tier]
+                c = snap["tiers"].setdefault(
+                    tier,
+                    {
+                        "bytes_written": 0,
+                        "bytes_read": 0,
+                        "files_written": 0,
+                        "files_read": 0,
+                        "read_seconds": 0.0,
+                        "write_seconds": 0.0,
+                    },
+                )
+                c["bytes_read"] += nbytes
+                c["files_read"] += files
+                c["read_seconds"] += seconds
+        snap["redirect_hits"] += live_redirects
+        return snap
 
     def export(self, path: str) -> str:
         """Write this process's snapshot (plus pid/timestamp) as JSON —

@@ -280,6 +280,20 @@ class TransferEngine:
         self._q.put((fn, args, kwargs, fut))
         return fut
 
+    def try_submit(self, fn, /, *args, **kwargs) -> _Future | None:
+        """Non-blocking :meth:`submit`: returns None when the bounded
+        queue is full instead of blocking the caller. For producers that
+        must never stall behind other producers sharing the pool (the
+        readahead predictor's digestion thread drops the speculative job
+        instead)."""
+        self._ensure_pool()
+        fut = _Future()
+        try:
+            self._q.put_nowait((fn, args, kwargs, fut))
+        except queue.Full:
+            return None
+        return fut
+
     def submit_copy(self, src: str, dst: str, /, **kwargs) -> _Future:
         """``submit`` specialised to :meth:`copy`, wiring the future's
         cancel event into the chunk loop."""
@@ -379,6 +393,13 @@ class TransferEngine:
         pair = f"{self._tier_name(src_tier)}->{self._tier_name(dst_tier)}"
         accounted = isinstance(dst_tier, Tier) and dst_root is not None
         res = reservation
+        if cancel is not None and cancel.is_set():
+            # a stale speculative transfer must not even take admission
+            # or touch the source — but a caller-held reservation still
+            # must not leak
+            if res is not None and isinstance(dst_tier, Tier):
+                dst_tier.release_write(res)
+            raise TransferCancelled(f"transfer {src} -> {dst} cancelled")
         try:
             # the source must be readable before any admission or staging
             # — and its error propagates untranslated (callers rely on

@@ -25,6 +25,7 @@ import json
 import os
 import queue
 import threading
+from collections import deque
 from dataclasses import dataclass
 
 import numpy as np
@@ -111,7 +112,7 @@ class DataPipeline:
         # work-stealing queue of shard indices (strided start for locality)
         ids = list(range(start_shard, self.meta["n_shards"]))
         self._queue: "queue.Queue[int]" = queue.Queue()
-        for sid in ids[worker_id::n_workers] + ids[:0]:
+        for sid in ids[worker_id::n_workers]:
             self._queue.put(sid)
         self._staged: "queue.Queue[tuple[int, np.ndarray]]" = queue.Queue(
             maxsize=prefetch_shards
@@ -145,7 +146,7 @@ class DataPipeline:
         where = self.fs.where(path)
         if where is not None and where != self.fs.hierarchy.base.name:
             self.stats.cache_hits += 1
-        else:
+        elif not getattr(self.fs.config, "readahead", False):
             self.stats.cache_misses += 1
             # stage through the shared engine-backed primitive (same code
             # path as Flusher.prefetch): key-locked against racing
@@ -153,6 +154,13 @@ class DataPipeline:
             # staging tmp cleaned up on failure. Best-effort — on any
             # transfer error the shard is read from its persistent copy.
             self.fs.stage_to_cache(key)
+        else:
+            # with predictive readahead enabled the bespoke staging is
+            # redundant: the predictor observes the sequential shard
+            # opens below and stages upcoming shards through the same
+            # engine — with adaptive depth, cancellation, and waste
+            # accounting this loop never had
+            self.stats.cache_misses += 1
         with self.fs.open(path, "rb") as f:
             arr = np.load(f, allow_pickle=False)
         self._staged.put((sid, arr))
@@ -182,32 +190,66 @@ class DataPipeline:
 
     # -- iteration --------------------------------------------------------------
     def __iter__(self):
+        """Fixed-shape batches assembled from a list of staged chunks
+        with an offset cursor — O(batch) per batch. (The previous
+        implementation re-concatenated the whole remaining buffer on
+        every shard arrival: O(total²) bytes copied over an epoch.)"""
         need = self.batch_size * (self.seq_len + 1)
-        buf = np.empty((0,), np.int32)
+        chunks: deque = deque()  # staged shard arrays, consumed in order
+        offset = 0  # consumed prefix of chunks[0]
+        have = 0  # unconsumed tokens across all chunks
         while True:
-            while buf.size < need:
+            while have < need:
+                if self._stop.is_set():
+                    # closed: the staging thread is (being) joined and
+                    # may never post another item — a blocking get here
+                    # would hang forever
+                    return
                 sid, arr = self._staged.get()
                 if sid == -2:
                     raise RuntimeError("data staging failed") from arr
                 if arr is None:
-                    if buf.size >= need:
-                        break
-                    return
-                buf = np.concatenate([buf, arr])
+                    return  # staging exhausted; tail < one batch is dropped
+                if arr.size:
+                    chunks.append(arr)
+                    have += arr.size
                 self.stats.shards_consumed += 1
                 if self.evict_consumed:
                     self._evict(sid)
-            take, buf = buf[:need], buf[need:]
-            chunk = take.reshape(self.batch_size, self.seq_len + 1)
+            parts = []
+            got = 0
+            while got < need:
+                head = chunks[0]
+                take = min(head.size - offset, need - got)
+                parts.append(head[offset : offset + take])
+                got += take
+                offset += take
+                if offset == head.size:
+                    chunks.popleft()
+                    offset = 0
+            have -= need
+            chunk = np.concatenate(parts) if len(parts) > 1 else parts[0]
+            chunk = chunk.reshape(self.batch_size, self.seq_len + 1)
             yield {
                 "tokens": chunk[:, :-1].copy(),
                 "labels": chunk[:, 1:].copy(),
             }
 
     def close(self) -> None:
+        """Stop and JOIN the staging thread (it may be blocked putting
+        into the bounded staged queue: drain until it exits, so no
+        daemon thread keeps reading shards after close returns)."""
         self._stop.set()
+        while self._thread.is_alive():
+            try:
+                while True:
+                    self._staged.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.05)
+        # a consumer that raced the drain may already sit in a blocking
+        # get(): hand it the end-of-data sentinel its __iter__ expects
         try:
-            while True:
-                self._staged.get_nowait()
-        except queue.Empty:
+            self._staged.put_nowait((-1, None))
+        except queue.Full:
             pass

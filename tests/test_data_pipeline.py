@@ -81,3 +81,70 @@ def test_work_stealing_partition(sea):
     assert n0 == n1 > 0
     assert p0.stats.shards_consumed + p1.stats.shards_consumed == 6
     p0.close(); p1.close()
+
+
+def test_close_joins_staging_thread(sea):
+    """close() must stop AND join the staging thread — even when it is
+    blocked putting into the bounded staged queue — so no daemon thread
+    keeps reading shards after close returns."""
+    write_dataset(sea, "c", n_shards=6, tokens_per_shard=2048, vocab_size=50)
+    pipe = DataPipeline(sea, "c", batch_size=2, seq_len=32, prefetch_shards=1)
+    # do not consume: the staging thread fills the queue and blocks
+    pipe.close()
+    assert not pipe._thread.is_alive()
+
+
+def test_mid_iteration_close_joins(sea):
+    write_dataset(sea, "c", n_shards=4, tokens_per_shard=2048, vocab_size=50)
+    pipe = DataPipeline(sea, "c", batch_size=2, seq_len=32)
+    it = iter(pipe)
+    next(it)
+    pipe.close()
+    assert not pipe._thread.is_alive()
+
+
+def test_resume_after_close_returns_instead_of_hanging(sea):
+    """Pulling the iterator again after close() must terminate, not
+    block forever on the drained staged queue."""
+    import threading
+
+    write_dataset(sea, "c", n_shards=3, tokens_per_shard=2048, vocab_size=50)
+    pipe = DataPipeline(sea, "c", batch_size=2, seq_len=32)
+    it = iter(pipe)
+    next(it)
+    pipe.close()
+    done = threading.Event()
+
+    def drain():
+        list(it)
+        done.set()
+
+    threading.Thread(target=drain, daemon=True).start()
+    assert done.wait(10)
+
+
+def test_batches_identical_across_batch_sizes(sea):
+    """The chunk-cursor assembly must yield the exact token stream the
+    old whole-buffer concatenation produced: same data, any batch shape."""
+    import numpy as np
+
+    write_dataset(sea, "c", n_shards=3, tokens_per_shard=4096, vocab_size=211)
+    stream_a = np.concatenate(
+        [
+            np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1).ravel()
+            for b in DataPipeline(
+                sea, "c", batch_size=1, seq_len=64, evict_consumed=False
+            )
+        ]
+    )
+    stream_b = np.concatenate(
+        [
+            np.concatenate([b["tokens"], b["labels"][:, -1:]], axis=1).ravel()
+            for b in DataPipeline(
+                sea, "c", batch_size=4, seq_len=16, evict_consumed=False
+            )
+        ]
+    )
+    n = min(stream_a.size, stream_b.size)
+    assert n > 0
+    assert np.array_equal(stream_a[:n], stream_b[:n])

@@ -1,0 +1,228 @@
+"""Intercept-layer satellites of ISSUE 5: the ``os.makedirs`` wrapper
+must forward the positional ``mode`` argument (the seed's lambda routed
+``*a`` nowhere), and intercepted ``shutil.copyfile`` for sea↔sea paths
+streams through the TransferEngine with ``follow_symlinks`` handled
+explicitly."""
+
+import os
+import shutil
+import stat
+import time
+
+import pytest
+
+from repro.core import SeaConfig, SeaFS, SeaMount, TierSpec
+
+
+def make_config(tmp_path, **kw):
+    defaults = dict(
+        mount=str(tmp_path / "mount"),
+        tiers=[
+            TierSpec(name="tmpfs", roots=(str(tmp_path / "t0"),)),
+            TierSpec(name="pfs", roots=(str(tmp_path / "pfs"),), persistent=True),
+        ],
+        max_file_size=1 << 16,
+        n_procs=1,
+    )
+    defaults.update(kw)
+    return SeaConfig(**defaults)
+
+
+# --------------------------------------------------------------- makedirs
+def test_makedirs_forwards_positional_mode(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    with SeaMount(fs):
+        p = os.path.join(fs.mount, "modedir")
+        os.makedirs(p, 0o700)
+        real = os.path.join(fs.hierarchy.base.roots[0], "modedir")
+        assert stat.S_IMODE(os.stat(real).st_mode) == 0o700
+        # positional exist_ok must route as well
+        os.makedirs(p, 0o700, True)
+        with pytest.raises(FileExistsError):
+            os.makedirs(p, 0o700)
+
+
+def test_makedirs_keyword_args_still_work(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    with SeaMount(fs):
+        p = os.path.join(fs.mount, "kwdir")
+        os.makedirs(p, exist_ok=True)
+        os.makedirs(p, mode=0o750, exist_ok=True)
+        assert os.path.isdir(p)
+
+
+# --------------------------------------------------------------- copyfile
+def test_copyfile_sea_to_sea_through_engine(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    data = os.urandom(8192)
+    src = os.path.join(fs.mount, "a/src.bin")
+    dst = os.path.join(fs.mount, "b/dst.bin")
+    fs.write_bytes(src, data)
+    with SeaMount(fs):
+        assert shutil.copyfile(src, dst) == dst
+    assert fs.read_bytes(dst) == data
+    assert fs.read_bytes(src) == data  # source untouched
+    # the bytes moved through the engine: per-pair transfer counters
+    transfers = fs.telemetry.snapshot()["transfers"]
+    assert sum(c["files"] for c in transfers.values()) >= 1
+    # destination accounting is ledger-consistent
+    got, want = fs.hierarchy.ledger.verify(fs.hierarchy.tiers[0].roots[0])
+    assert got == want
+
+
+def test_copyfile_overwrite_drops_stale_replicas(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    src = os.path.join(fs.mount, "src.bin")
+    dst = os.path.join(fs.mount, "dst.bin")
+    fs.write_bytes(dst, b"old" * 100)
+    fs.persist(dst)  # a second (base-tier) replica of dst
+    fs.write_bytes(src, b"new" * 200)
+    with SeaMount(fs):
+        shutil.copyfile(src, dst)
+    # every remaining replica of dst holds the new content
+    for _tier, real in fs.hierarchy.locate_all("dst.bin"):
+        with open(real, "rb") as f:
+            assert f.read() == b"new" * 200
+
+
+def test_copyfile_external_to_sea(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    ext = str(tmp_path / "outside.bin")
+    with open(ext, "wb") as f:
+        f.write(b"e" * 4096)
+    dst = os.path.join(fs.mount, "in.bin")
+    with SeaMount(fs):
+        shutil.copyfile(ext, dst)
+    assert fs.read_bytes(dst) == b"e" * 4096
+    assert fs.where(dst) == "tmpfs"
+
+
+def test_copyfile_sea_to_external(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    src = os.path.join(fs.mount, "out.bin")
+    fs.write_bytes(src, b"s" * 4096)
+    ext = str(tmp_path / "exported.bin")
+    with SeaMount(fs):
+        shutil.copyfile(src, ext)
+    with open(ext, "rb") as f:
+        assert f.read() == b"s" * 4096
+
+
+def test_copyfile_missing_source_raises_enoent(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    with SeaMount(fs):
+        with pytest.raises(FileNotFoundError):
+            shutil.copyfile(
+                os.path.join(fs.mount, "nope.bin"),
+                str(tmp_path / "never.bin"),
+            )
+
+
+def test_copyfile_same_file_raises(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    p = os.path.join(fs.mount, "same.bin")
+    fs.write_bytes(p, b"x" * 64)
+    with SeaMount(fs):
+        with pytest.raises(shutil.SameFileError):
+            shutil.copyfile(p, p)
+
+
+def test_copyfile_symlink_into_mount_rejected(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    target = str(tmp_path / "target.bin")
+    with open(target, "wb") as f:
+        f.write(b"t" * 64)
+    link = str(tmp_path / "link.bin")
+    os.symlink(target, link)
+    with SeaMount(fs):
+        with pytest.raises(NotImplementedError):
+            shutil.copyfile(
+                link, os.path.join(fs.mount, "in.bin"), follow_symlinks=False
+            )
+        # dereferencing remains explicit and allowed
+        shutil.copyfile(link, os.path.join(fs.mount, "deref.bin"))
+    assert fs.read_bytes(os.path.join(fs.mount, "deref.bin")) == b"t" * 64
+
+
+def test_copyfile_symlink_honored_outward(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    # an externally-created symlink inside a tier root (Sea never makes
+    # them, but copyfile must honor follow_symlinks=False when asked)
+    target = str(tmp_path / "real_target.bin")
+    with open(target, "wb") as f:
+        f.write(b"r" * 32)
+    root = fs.hierarchy.base.roots[0]
+    os.makedirs(root, exist_ok=True)
+    os.symlink(target, os.path.join(root, "ln.bin"))
+    dst = str(tmp_path / "copied_link.bin")
+    with SeaMount(fs):
+        shutil.copyfile(
+            os.path.join(fs.mount, "ln.bin"), dst, follow_symlinks=False
+        )
+    assert os.path.islink(dst)
+    assert os.readlink(dst) == target
+
+
+def test_copyfile_does_not_copy_permissions_or_mtime(tmp_path):
+    """shutil.copyfile copies DATA only: destination permissions come
+    from the umask and the mtime is fresh (copy2 preserves stats —
+    copyfile must not)."""
+    fs = SeaFS(make_config(tmp_path))
+    src = os.path.join(fs.mount, "locked.bin")
+    fs.write_bytes(src, b"l" * 128)
+    sreal = fs.resolve(src)
+    os.chmod(sreal, 0o400)
+    old = time.time() - 3600
+    os.utime(sreal, (old, old))
+    ext = str(tmp_path / "copy_out.bin")
+    dst = os.path.join(fs.mount, "copy_in.bin")
+    with SeaMount(fs):
+        shutil.copyfile(src, ext)
+        shutil.copyfile(src, dst)
+    for p in (ext, fs.resolve(dst)):
+        st = os.stat(p)
+        assert stat.S_IMODE(st.st_mode) & 0o200  # writable per umask
+        assert st.st_mtime > old + 1800  # fresh, not the source's
+
+
+def test_copyfile_destination_reaches_flusher(tmp_path):
+    """A copyfile destination is a committed write: the flusher must
+    pick it up like a closed write handle (COPY-mode flush to base
+    without waiting for drain)."""
+    from repro.core import Sea
+
+    cfg = make_config(tmp_path, flushlist=("flushed/*",))
+    with Sea(cfg) as sea:
+        fs = sea.fs
+        src = os.path.join(fs.mount, "src.bin")
+        dst = os.path.join(fs.mount, "flushed/out.bin")
+        fs.write_bytes(src, b"f" * 512)
+        with SeaMount(fs):
+            shutil.copyfile(src, dst)
+        base = os.path.join(fs.hierarchy.base.roots[0], "flushed/out.bin")
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline and not os.path.exists(base):
+            time.sleep(0.01)
+        assert os.path.exists(base)  # flushed by the daemon, not drain
+
+
+def test_copyfile_same_key_different_spelling_raises(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    p = os.path.join(fs.mount, "same.bin")
+    fs.write_bytes(p, b"x" * 64)
+    dotted = os.path.join(fs.mount, ".", "same.bin")
+    with SeaMount(fs):
+        with pytest.raises(shutil.SameFileError):
+            shutil.copyfile(p, dotted)
+    assert fs.read_bytes(p) == b"x" * 64
+
+
+def test_copyfile_outside_mount_untouched(tmp_path):
+    fs = SeaFS(make_config(tmp_path))
+    a, b = str(tmp_path / "plain_a.bin"), str(tmp_path / "plain_b.bin")
+    with open(a, "wb") as f:
+        f.write(b"p" * 128)
+    with SeaMount(fs):
+        shutil.copyfile(a, b)
+    with open(b, "rb") as f:
+        assert f.read() == b"p" * 128
