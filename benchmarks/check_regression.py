@@ -1,11 +1,11 @@
 """CI perf-regression gate for the placement/multiproc/resolve/transfer/
-readahead benchmarks.
+readahead/extent benchmarks.
 
-Compares a freshly produced ``BENCH_pr5.json`` (written by
+Compares a freshly produced ``BENCH_pr6.json`` (written by
 ``placement_bench --json`` + ``multiproc_bench --json`` +
 ``resolve_bench --json`` + ``transfer_bench --json`` +
-``readahead_bench --json``, merged by the CI workflow) against the
-committed ``benchmarks/BENCH_baseline.json``.
+``readahead_bench --json`` + ``extent_bench --json``, merged by the CI
+workflow) against the committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
@@ -25,6 +25,12 @@ The structural gates are machine-independent and strict:
     wasted-prefetch bytes < MAX_WASTED_RATIO of staged bytes on a
     random-access permutation, and the read-hit open fast path cuts
     per-call overhead >= MIN_FASTPATH_REDUCTION vs the PR-4 open path.
+  * extent plane: cold time-to-first-cached-byte on a large file
+    >= MIN_TTFB_SPEEDUP x faster with the extent map than whole-file
+    staging (both paced by the same token-bucket cap: deterministic),
+    and a scan of a file 4x the cache tier stays bit-exact, never
+    over-commits the ledger, actually punches cold extents, and keeps
+    >= MIN_HOT_CHUNK_RATIO of chunks served from staged extents.
 
 Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
@@ -53,6 +59,8 @@ MIN_OVERLAP_SPEEDUP = 1.5   # pooled staging vs serial copies (latency-bound)
 MIN_SEQ_SPEEDUP = 2.0       # cold sequential reads: readahead on vs off
 MAX_WASTED_RATIO = 0.20     # wasted / staged speculative bytes, random access
 MIN_FASTPATH_REDUCTION = 0.30  # read-hit open overhead cut vs PR-4 path
+MIN_TTFB_SPEEDUP = 5.0      # cold TTFB: one-extent fault vs whole-file stage
+MIN_HOT_CHUNK_RATIO = 0.5   # bigger-than-tier scan chunks served hot
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -161,6 +169,35 @@ def check(current: dict, baseline: dict | None) -> list[str]:
                 f"< required {MIN_FASTPATH_REDUCTION}"
             )
 
+    extent = current.get("extent")
+    if extent is None:
+        failures.append("extent section missing (extent_bench not run)")
+    else:
+        ttfb = extent["ttfb_speedup"]
+        if ttfb < MIN_TTFB_SPEEDUP:
+            failures.append(
+                f"extent cold-TTFB speedup {ttfb}x "
+                f"< required {MIN_TTFB_SPEEDUP}x"
+            )
+        if not extent["scan_bitexact"]:
+            failures.append(
+                "bigger-than-tier extent scan returned corrupted bytes"
+            )
+        if extent["scan_overcommitted"]:
+            failures.append(
+                "bigger-than-tier extent scan over-committed the cache tier"
+            )
+        if extent["scan_extents_punched"] <= 0:
+            failures.append(
+                "bigger-than-tier extent scan never punched a cold extent"
+            )
+        hot = extent["scan_hot_chunk_ratio"]
+        if hot < MIN_HOT_CHUNK_RATIO:
+            failures.append(
+                f"bigger-than-tier scan hot-chunk ratio {hot} "
+                f"< required {MIN_HOT_CHUNK_RATIO}"
+            )
+
     if baseline is not None:
         base_rows = baseline["placement"]["rows"]
         for r in rows:
@@ -189,7 +226,7 @@ def check(current: dict, baseline: dict | None) -> list[str]:
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: check_regression.py BENCH_pr5.json [baseline.json]")
+        print("usage: check_regression.py BENCH_pr6.json [baseline.json]")
         raise SystemExit(2)
     with open(argv[0]) as f:
         current = json.load(f)

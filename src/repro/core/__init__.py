@@ -10,11 +10,13 @@ Public surface:
     SharedCapacityLedger      cross-process ledger (n_procs instances per node)
     Mode / CompiledRules      copy / remove / move / keep (Table 1)
     TransferEngine            data plane: chunked, atomic tier-to-tier copies
+    ExtentStore / ExtentMap   block-granular partial replicas (extent plane)
     perf model                ``repro.core.model`` (Eqs. 1–11)
     simulator                 ``repro.core.simulator`` (paper-scale experiments)
 """
 
 from .config import SeaConfig, default_local_config
+from .extents import PART_SUFFIX, ExtentMap, ExtentStore
 from .flusher import Flusher, Sea
 from .intercept import SeaMount
 from .ledger import CapacityLedger, Reservation
@@ -37,6 +39,9 @@ from .transfer import (
 __all__ = [
     "SeaConfig",
     "default_local_config",
+    "ExtentMap",
+    "ExtentStore",
+    "PART_SUFFIX",
     "Flusher",
     "Sea",
     "SeaMount",

@@ -82,6 +82,17 @@ class SeaConfig:
                                         # take batched per-thread telemetry
                                         # (False = PR-4 open path, benchmark
                                         # baseline)
+    #: extent-granular data plane (block-level placement on cache tiers)
+    extent_map: bool = False            # True = key -> extent map on cache
+                                        # tiers: sparse partial replicas,
+                                        # streaming reads through partially
+                                        # staged files, per-extent eviction
+                                        # (False = whole-file plane, the
+                                        # PR-5 behaviour)
+    extent_bytes: int = 32 << 20        # fixed extent (block) size of the
+                                        # extent map; staging, admission,
+                                        # readahead and eviction all operate
+                                        # at this granularity
     #: beyond-paper options (all default OFF for paper faithfulness)
     stripe_chunk_bytes: int = 0         # >0 enables striping across same-level roots
     lru_evict: bool = False             # auto-evict LRU when a tier is full
@@ -123,6 +134,10 @@ class SeaConfig:
             raise ValueError("readahead_depth must be positive")
         if not 0.0 <= self.readahead_min_confidence <= 1.0:
             raise ValueError("readahead_min_confidence must be in [0, 1]")
+        if self.extent_bytes <= 0:
+            raise ValueError("extent_bytes must be positive")
+        if self.extent_map and not self.transfer_engine:
+            raise ValueError("extent_map requires transfer_engine=True")
         if self.shared_ledger and not self.capacity_ledger:
             raise ValueError("shared_ledger requires capacity_ledger=True")
 
@@ -237,6 +252,8 @@ class SeaConfig:
                 "readahead_min_confidence", 0.5
             ),
             open_fast_path=sea.getboolean("open_fast_path", True),
+            extent_map=sea.getboolean("extent_map", False),
+            extent_bytes=sea.getint("extent_bytes", 32 << 20),
             flushlist=_read_list(FLUSHLIST_NAME),
             evictlist=_read_list(EVICTLIST_NAME),
             prefetchlist=_read_list(PREFETCHLIST_NAME),
@@ -262,6 +279,8 @@ class SeaConfig:
             resolver_cache=env.get("SEA_RESOLVER_CACHE", "1")
             not in ("0", "", "false"),
             readahead=env.get("SEA_READAHEAD", "0") not in ("0", "", "false"),
+            extent_map=env.get("SEA_EXTENT_MAP", "0") not in ("0", "", "false"),
+            extent_bytes=int(env.get("SEA_EXTENT_BYTES", 32 << 20)),
         )
 
 

@@ -1,0 +1,387 @@
+"""Extent maps — block-granular placement state for partial cache replicas.
+
+PRs 1–5 encode one central invariant: *a key lives wholly on one tier*.
+That invariant makes a 100 GB volume inadmissible to a small NVMe tier
+and forces a reader to wait for the entire base→cache stage. This module
+breaks the invariant at the data-plane level, following the sub-file heat
+management of the authors' user-space HSM follow-up (arXiv:2404.11556)
+and the streaming granularity of the openPMD/ADIOS2 work
+(arXiv:2107.06108): a key may additionally have a **partial replica** on
+a cache tier — a sparse file holding any subset of fixed-size extents
+(``SeaConfig.extent_bytes``) — tracked by an :class:`ExtentMap` and made
+crash-durable by a per-key validity journal under the root's ledger dir.
+
+Layout on a cache root::
+
+    <root>/<key>.sea_part                      sparse data file, st_size =
+                                               logical size, holes where
+                                               extents are not yet staged
+    <root>/.sea_ledger/extents/<quoted>.json   validity journal: which
+                                               extents hold committed bytes
+
+The ``.sea_part`` suffix keeps partial replicas invisible to every
+whole-file code path (``Hierarchy.locate`` probes ``<root>/<key>``), so
+no reader can ever mistake a hole for data. The journal is written with
+the ledger's tmp+``os.replace`` discipline and **only after** the
+extent's bytes are durably in the part file — a crash at any point
+leaves the extent unmarked, never torn-but-valid. When the last extent
+lands, the part file is promoted (``os.replace``) to the plain replica
+path and the journal removed: a fully-staged key degenerates to exactly
+the whole-file plane's state.
+
+Capacity accounting uses *disk usage*, not logical size: a sparse part
+file occupies only its staged blocks, and ``min(st_size, st_blocks*512)``
+(see :func:`repro.core.ledger.file_disk_usage`) is what both the ledger
+notifications and the reconcile walk record — so a file bigger than the
+tier is admitted extent by extent without ever double-counting holes.
+"""
+
+from __future__ import annotations
+
+import ctypes
+import json
+import os
+import threading
+import time
+import urllib.parse
+
+from .ledger import LEDGER_DIRNAME, file_disk_usage
+
+#: suffix of sparse partial replicas on cache tiers — invisible to
+#: whole-file resolution (locate probes the exact key), skipped by the
+#: flusher scan, listdir unions, and the LRU whole-file walk
+PART_SUFFIX = ".sea_part"
+
+#: journal directory under each root's ledger dir
+EXTENT_DIRNAME = "extents"
+
+#: separator inside extent prediction tokens. NUL cannot appear in a
+#: path, so a token never collides with a real key; the trailing "x"
+#: keeps the numeric tail out of the prefetcher's stride regex for the
+#: surrounding key while the zero-padded index itself still matches it.
+EXTENT_TOKEN_SEP = "\x00x"
+
+
+def extent_token(key: str, idx: int) -> str:
+    """Prediction-stream token for extent ``idx`` of ``key`` — lets the
+    prefetcher's existing numeric stride detector run at block
+    granularity *within* one file."""
+    return f"{key}{EXTENT_TOKEN_SEP}{idx:08d}"
+
+
+def split_extent_token(token: str) -> tuple[str, int] | None:
+    """Inverse of :func:`extent_token`; None for plain whole-file keys."""
+    key, sep, tail = token.rpartition(EXTENT_TOKEN_SEP)
+    if not sep:
+        return None
+    try:
+        return key, int(tail)
+    except ValueError:
+        return None
+
+
+_FALLOC_FL_KEEP_SIZE = 0x01
+_FALLOC_FL_PUNCH_HOLE = 0x02
+
+try:  # Linux-only; CPython exposes no fallocate(2) flags, so go via libc
+    _libc = ctypes.CDLL(None, use_errno=True)
+    _fallocate = _libc.fallocate
+    _fallocate.argtypes = [
+        ctypes.c_int,
+        ctypes.c_int,
+        ctypes.c_longlong,
+        ctypes.c_longlong,
+    ]
+    _fallocate.restype = ctypes.c_int
+except (OSError, AttributeError):  # pragma: no cover - non-Linux fallback
+    _fallocate = None
+
+
+def punch_hole(fd: int, offset: int, length: int) -> bool:
+    """Deallocate ``[offset, offset+length)`` of an open file, keeping its
+    logical size (``FALLOC_FL_PUNCH_HOLE | FALLOC_FL_KEEP_SIZE``). Returns
+    False where unsupported (non-Linux, or a filesystem without hole
+    support) — the caller falls back to dropping the whole replica."""
+    if _fallocate is None:
+        return False
+    return _fallocate(
+        fd, _FALLOC_FL_PUNCH_HOLE | _FALLOC_FL_KEEP_SIZE, offset, length
+    ) == 0
+
+
+def part_path(root: str, key: str) -> str:
+    return os.path.join(root, key + PART_SUFFIX)
+
+
+def journal_path(root: str, key: str) -> str:
+    return os.path.join(
+        root,
+        LEDGER_DIRNAME,
+        EXTENT_DIRNAME,
+        urllib.parse.quote(key, safe="") + ".json",
+    )
+
+
+class ExtentMap:
+    """Live state of one key's partial replica on one cache root.
+
+    The ``valid`` set is only ever mutated under the owning
+    :class:`ExtentStore`'s per-map lock; readers may probe it lock-free
+    (set membership is GIL-atomic) — a stale answer costs one journal
+    round-trip or one redundant stage, never a wrong byte."""
+
+    __slots__ = (
+        "key",
+        "tier",
+        "root",
+        "size",
+        "extent_bytes",
+        "valid",
+        "atime",
+        "verified_at",
+        "dead",
+        "lock",
+    )
+
+    def __init__(self, key: str, tier, root: str, size: int, extent_bytes: int):
+        self.key = key
+        self.tier = tier
+        self.root = root
+        self.size = int(size)
+        self.extent_bytes = int(extent_bytes)
+        self.valid: set[int] = set()
+        self.atime: dict[int, float] = {}  # per-extent last read (monotonic)
+        self.verified_at = 0.0  # last lstat verify of the part file
+        self.dead = False       # discarded/promoted: no further staging
+        self.lock = threading.Lock()
+
+    @property
+    def part_real(self) -> str:
+        return part_path(self.root, self.key)
+
+    @property
+    def part_rel(self) -> str:
+        """Ledger-relative name of the part file (what a reconcile walk
+        of the root records it under)."""
+        return self.key + PART_SUFFIX
+
+    @property
+    def n_extents(self) -> int:
+        return max(1, -(-self.size // self.extent_bytes))
+
+    def index_of(self, offset: int) -> int:
+        return min(max(offset, 0) // self.extent_bytes, self.n_extents - 1)
+
+    def extent_range(self, idx: int) -> tuple[int, int]:
+        """(start, length) of extent ``idx``; the last extent is short."""
+        start = idx * self.extent_bytes
+        return start, min(self.extent_bytes, self.size - start)
+
+    def is_valid(self, idx: int) -> bool:
+        return idx in self.valid
+
+    @property
+    def complete(self) -> bool:
+        return len(self.valid) >= self.n_extents
+
+    def valid_bytes(self) -> int:
+        return sum(self.extent_range(i)[1] for i in self.valid)
+
+    def touch(self, idx: int) -> None:
+        self.atime[idx] = time.monotonic()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (
+            f"ExtentMap({self.key!r}, {len(self.valid)}/{self.n_extents} "
+            f"extents, root={self.root!r})"
+        )
+
+
+class ExtentStore:
+    """Registry of partial replicas (at most one per key) plus their
+    crash-durable validity journals. The store owns journal I/O and the
+    part files' lifecycle; admission, byte movement, and ledger deltas
+    stay with the caller (:class:`~repro.core.seafs.SeaFS`), which holds
+    the key lock around every mutation."""
+
+    def __init__(self, extent_bytes: int, telemetry=None):
+        self.extent_bytes = int(extent_bytes)
+        self.telemetry = telemetry
+        self._maps: dict[str, ExtentMap] = {}
+        self._lock = threading.Lock()
+
+    # -- lookup ---------------------------------------------------------------
+    def get(self, key: str) -> ExtentMap | None:
+        """The live map for ``key``, or None when no partial replica is
+        known in-process (use :meth:`load` to also probe journals left by
+        a previous process)."""
+        em = self._maps.get(key)  # GIL-atomic read on the hot path
+        if em is not None and em.dead:
+            return None
+        return em
+
+    def maps(self) -> list[ExtentMap]:
+        """Snapshot of every live map (eviction scans iterate this while
+        stagers mutate the registry)."""
+        with self._lock:
+            return list(self._maps.values())
+
+    def load(self, key: str, cache_tiers) -> ExtentMap | None:
+        """``get``, falling back to the on-disk journals of every cache
+        root — how a fresh process (or one that crashed mid-stage)
+        re-adopts a partial replica. A journal whose part file is missing,
+        resized, or written with a different extent size is stale and is
+        dropped."""
+        em = self.get(key)
+        if em is not None:
+            return em
+        for tier in cache_tiers:
+            for root in tier.roots:
+                em = self._load_one(key, tier, root)
+                if em is not None:
+                    with self._lock:
+                        return self._maps.setdefault(key, em)
+        return None
+
+    def _load_one(self, key: str, tier, root: str) -> ExtentMap | None:
+        jp = journal_path(root, key)
+        try:
+            with open(jp) as f:
+                rec = json.load(f)
+        except (OSError, ValueError):
+            return None
+        part = part_path(root, key)
+        try:
+            st = os.stat(part)
+        except OSError:
+            self._drop_files(root, key)
+            return None
+        size = int(rec.get("size", -1))
+        ebytes = int(rec.get("extent_bytes", 0))
+        if st.st_size != size or ebytes != self.extent_bytes:
+            self._drop_files(root, key)
+            return None
+        em = ExtentMap(key, tier, root, size, self.extent_bytes)
+        n = em.n_extents
+        em.valid = {int(i) for i in rec.get("valid", ()) if 0 <= int(i) < n}
+        em.verified_at = time.monotonic()
+        return em
+
+    # -- lifecycle ------------------------------------------------------------
+    def create(self, key: str, tier, root: str, size: int) -> ExtentMap:
+        """Materialize an empty partial replica: a sparse part file of the
+        full logical size (zero blocks allocated) plus an empty journal.
+        Caller holds the key lock and accounts the (≈0) disk usage."""
+        em = ExtentMap(key, tier, root, size, self.extent_bytes)
+        real = em.part_real
+        os.makedirs(os.path.dirname(real), exist_ok=True)
+        with open(real, "wb") as f:
+            f.truncate(size)
+        self._write_journal(em)
+        em.verified_at = time.monotonic()
+        with self._lock:
+            self._maps[key] = em
+        return em
+
+    def mark_valid(self, em: ExtentMap, idx: int) -> None:
+        """Extent ``idx``'s bytes are durably in the part file: record it
+        — memory first, then the journal (write-after-bytes ordering is
+        what makes a SIGKILL at any point leave the extent unmarked,
+        never torn-but-valid)."""
+        with em.lock:
+            em.valid.add(idx)
+            self._write_journal(em)
+        em.touch(idx)
+
+    def punch(self, em: ExtentMap, idx: int) -> int:
+        """Evict one staged extent: journal first (an extent must never be
+        marked valid while its bytes are being deallocated), then punch
+        the hole. Returns the bytes freed, or 0 when ``idx`` held nothing
+        or the filesystem cannot punch (caller discards the replica)."""
+        with em.lock:
+            if idx not in em.valid:
+                return 0
+            em.valid.discard(idx)
+            self._write_journal(em)
+        em.atime.pop(idx, None)
+        start, length = em.extent_range(idx)
+        try:
+            fd = os.open(em.part_real, os.O_RDWR)
+        except OSError:
+            return 0
+        try:
+            if not punch_hole(fd, start, length):
+                return 0
+        finally:
+            os.close(fd)
+        return length
+
+    def discard(self, key: str) -> ExtentMap | None:
+        """Drop the partial replica entirely (key overwritten, removed,
+        truncated, or the replica evicted): part file + journal + map.
+        Returns the dropped map so the caller can settle the ledger."""
+        with self._lock:
+            em = self._maps.pop(key, None)
+        if em is not None:
+            em.dead = True
+            self._drop_files(em.root, key)
+        return em
+
+    def promote(self, em: ExtentMap) -> str:
+        """Every extent is valid: rename the part file over the plain
+        replica path (atomic — readers see either the partial plane or a
+        complete whole-file replica) and retire the journal/map. Returns
+        the final real path; the caller re-points resolver + ledger."""
+        final = os.path.join(em.root, em.key)
+        os.replace(em.part_real, final)
+        em.dead = True
+        with self._lock:
+            if self._maps.get(em.key) is em:
+                del self._maps[em.key]
+        try:
+            os.unlink(journal_path(em.root, em.key))
+        except OSError:
+            pass
+        if self.telemetry is not None:
+            self.telemetry.record_extent_promoted()
+        return final
+
+    def clear(self) -> None:
+        """Forget every in-memory map (``wipe``; on-disk state went with
+        the roots)."""
+        with self._lock:
+            for em in self._maps.values():
+                em.dead = True
+            self._maps.clear()
+
+    # -- journal I/O ----------------------------------------------------------
+    def _write_journal(self, em: ExtentMap) -> None:
+        jp = journal_path(em.root, em.key)
+        os.makedirs(os.path.dirname(jp), exist_ok=True)
+        rec = {
+            "size": em.size,
+            "extent_bytes": em.extent_bytes,
+            "valid": sorted(em.valid),
+        }
+        tmp = f"{jp}.{os.getpid()}.tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, jp)  # atomic: a crash never leaves a torn journal
+
+    def _drop_files(self, root: str, key: str) -> None:
+        for p in (part_path(root, key), journal_path(root, key)):
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+
+    # -- accounting helper ----------------------------------------------------
+    @staticmethod
+    def disk_usage(em: ExtentMap) -> int:
+        """Current on-disk usage of the part file — what the ledger must
+        carry for it (holes cost nothing; matches the reconcile walk's
+        sparse-aware :func:`~repro.core.ledger.file_disk_usage`)."""
+        try:
+            return file_disk_usage(em.part_real)
+        except OSError:
+            return 0

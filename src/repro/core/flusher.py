@@ -40,6 +40,7 @@ import time
 import traceback
 from urllib.parse import quote, unquote
 
+from .extents import PART_SUFFIX
 from .ledger import LEDGER_DIRNAME, TMP_SUFFIX
 from .lists import Mode
 from .seafs import SeaFS
@@ -383,6 +384,10 @@ class Flusher:
                                 os.path.join(dirpath, fn)
                             )
                             continue
+                        if fn.endswith(PART_SUFFIX):
+                            # partial extent replicas are never flush
+                            # candidates: their base copy already exists
+                            continue
                         key = os.path.relpath(os.path.join(dirpath, fn), root)
                         if self.fs.rules.mode(key) is not Mode.KEEP:
                             self.submit(key)
@@ -589,6 +594,8 @@ class Flusher:
                         # keys; reclaim provably-dead ones
                         self.fs.transfer.maybe_reap_orphan(real)
                         continue
+                    if fn.endswith(PART_SUFFIX):
+                        continue  # extent plane bookkeeping, not a key
                     key = os.path.relpath(real, root)
                     if key not in seen and self.fs.rules.prefetch_match(key):
                         seen.add(key)

@@ -133,6 +133,8 @@ class SeaMount:
                 "os.path.isfile": os.path.isfile,
                 "os.path.isdir": os.path.isdir,
                 "shutil.copyfile": shutil.copyfile,
+                "os.truncate": os.truncate,
+                "os.ftruncate": os.ftruncate,
             }
             builtins.open = self._wrap_open(builtins.open)
             os.stat = self._path_fn(os.stat, fs.stat)
@@ -160,6 +162,26 @@ class SeaMount:
             # outward and rejected into the mount, never silently
             # dereferenced
             shutil.copyfile = self._two_path_fn(shutil.copyfile, fs.copyfile)
+            # a truncate that bypasses Sea would drift the capacity
+            # ledger and leave partial extent replicas serving dead data
+            wrapped_truncate = self._path_fn(os.truncate, fs.truncate)
+
+            def sea_truncate(path, length):
+                # os.truncate also accepts an int fd: route those through
+                # the same fd-index settlement as os.ftruncate
+                if isinstance(path, int):
+                    return fs.ftruncate(path, length)
+                return wrapped_truncate(path, length)
+
+            os.truncate = sea_truncate
+            orig_ftruncate = os.ftruncate
+
+            def sea_ftruncate(fd, length):
+                if isinstance(fd, int):
+                    return fs.ftruncate(fd, length)
+                return orig_ftruncate(fd, length)
+
+            os.ftruncate = sea_ftruncate
         return self
 
     def __exit__(self, *exc) -> None:
@@ -177,4 +199,6 @@ class SeaMount:
             os.path.isfile = self._saved["os.path.isfile"]
             os.path.isdir = self._saved["os.path.isdir"]
             shutil.copyfile = self._saved["shutil.copyfile"]
+            os.truncate = self._saved["os.truncate"]
+            os.ftruncate = self._saved["os.ftruncate"]
             _ACTIVE.clear()

@@ -79,9 +79,23 @@ class _RootAccount:
 TMP_SUFFIX = ".sea_tmp"
 
 
+def file_disk_usage(path: str) -> int:
+    """Bytes a file actually occupies on its device: ``st_blocks * 512``
+    capped at the logical size. For dense files this is exactly
+    ``st_size`` (allocation rounds *up* to the block size, and the cap
+    keeps byte-exact accounting for them); for the sparse ``.sea_part``
+    partial replicas of the extent plane it counts only the staged
+    blocks — a 100 GB part file with one 32 MiB extent staged occupies
+    32 MiB, not 100 GB. Raises OSError like ``os.path.getsize``."""
+    st = os.stat(path)
+    return min(st.st_size, st.st_blocks * 512)
+
+
 def scan_root(root: str) -> dict[str, int]:
-    """Walk one root and return {relpath: size}. This is the seed's O(n)
-    scan, demoted from the per-call hot path to the reconcile path."""
+    """Walk one root and return {relpath: disk usage}. This is the seed's
+    O(n) scan, demoted from the per-call hot path to the reconcile path.
+    Sparse-aware: partial extent replicas count their staged blocks, not
+    their (hole-dominated) logical size."""
     files: dict[str, int] = {}
     for dirpath, dirnames, filenames in os.walk(root):
         if LEDGER_DIRNAME in dirnames:
@@ -91,7 +105,7 @@ def scan_root(root: str) -> dict[str, int]:
                 continue
             p = os.path.join(dirpath, fn)
             try:
-                files[os.path.relpath(p, root)] = os.path.getsize(p)
+                files[os.path.relpath(p, root)] = file_disk_usage(p)
             except OSError:
                 pass
     return files

@@ -58,6 +58,8 @@ import threading
 import time
 from collections import OrderedDict, deque
 
+from .extents import extent_token, split_extent_token
+
 #: last run of digits in a key, e.g. "a/shard_00042.npy" -> ("a/shard_",
 #: "00042", ".npy"); the suffix may not contain further digits
 _NUM_RE = re.compile(r"^(.*?)(\d+)(\D*)$")
@@ -118,6 +120,9 @@ class Prefetcher:
         self.fs = fs
         cfg = fs.config
         self.enabled = bool(getattr(cfg, "readahead", False))
+        # the extent plane reuses this predictor at block granularity
+        # (within-file readahead) even when whole-file readahead is off
+        self.extent_enabled = bool(getattr(cfg, "extent_map", False))
         self.max_depth = max(1, int(getattr(cfg, "readahead_depth", 4)))
         self.min_confidence = float(
             getattr(cfg, "readahead_min_confidence", 0.5)
@@ -150,6 +155,21 @@ class Prefetcher:
         event set; the model update happens on the background thread."""
         if not self.enabled or self._stop.is_set():
             return
+        self._enqueue(key)
+
+    def observe_extent(self, key: str, idx: int) -> None:
+        """Report the read stream entering extent ``idx`` of ``key``
+        (called from the extent read object on each block boundary).
+        The block index rides the SAME numeric-run predictor as shard
+        file names — an :func:`~repro.core.extents.extent_token` is just
+        a synthetic key whose digit run is the extent index — so a
+        sequential or strided scan *within* one file predicts and stages
+        the next ``depth`` extents ahead of the reader."""
+        if not (self.enabled or self.extent_enabled) or self._stop.is_set():
+            return
+        self._enqueue(extent_token(key, idx))
+
+    def _enqueue(self, key: str) -> None:
         if len(self._events) > 4096:
             return  # digestion far behind: shed observations, not memory
         self._events.append(key)
@@ -163,7 +183,7 @@ class Prefetcher:
         as a prediction hit within the hot TTL — eviction paths
         deprioritise such keys so speculative staging is not thrown away
         just before the application arrives."""
-        if not self.enabled:
+        if not (self.enabled or self.extent_enabled):
             return False
         if key in self._pending:  # GIL-atomic read; advisory only
             return True
@@ -334,8 +354,16 @@ class Prefetcher:
         try:
             if pred.cancel.is_set() or self._stop.is_set():
                 return 0
+            tok = split_extent_token(pred.key)
             try:
-                nbytes = self.fs.stage_to_cache(pred.key, cancel=pred.cancel)
+                if tok is not None:
+                    nbytes = self.fs.stage_extent(
+                        tok[0], tok[1], cancel=pred.cancel
+                    )
+                else:
+                    nbytes = self.fs.stage_to_cache(
+                        pred.key, cancel=pred.cancel
+                    )
             except OSError:
                 nbytes = 0
             late = 0

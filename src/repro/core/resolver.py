@@ -127,6 +127,11 @@ class Resolver:
         self._dirs: dict[str, _DirEntry] = {}
         self._dir_lock = threading.Lock()
 
+        #: bound by SeaFS when the extent plane is enabled — the extent
+        #: maps are placement state (like the tiers themselves), not a
+        #: cache, so resolve_extent serves even with ``enabled=False``
+        self.extent_store = None
+
         # don't cache a directory whose mtime is this close to "now": a
         # same-mtime-tick mutation on a coarse-granularity filesystem
         # would otherwise be invisible to the signature check forever
@@ -252,6 +257,40 @@ class Resolver:
         ):
             return e.tier, e.real
         return None
+
+    def resolve_extent(
+        self, key: str, offset: int, *, trust_window: bool = True
+    ) -> tuple[Tier, str] | None:
+        """Locate the tier holding byte ``offset`` of ``key`` at extent
+        granularity: the cache tier's sparse part file when the covering
+        extent is staged-and-valid, else None (the byte is served from
+        whatever :meth:`resolve` returns — the whole-file plane).
+
+        Same verify-on-hit discipline as :meth:`resolve`: a hit inside
+        the verify trust window is a pure in-memory lookup; past it, one
+        ``lstat`` of the part file re-verifies (an externally evicted
+        part file drops the whole map — per-extent validity without its
+        backing file is meaningless)."""
+        store = self.extent_store
+        if store is None:
+            return None
+        em = store.get(key)
+        if em is None:
+            return None
+        if not em.is_valid(em.index_of(offset)):
+            return None
+        now = time.monotonic()
+        if not (
+            trust_window and now - em.verified_at <= self.verify_window_s
+        ):
+            try:
+                os.lstat(em.part_real)
+            except OSError:
+                store.discard(key)
+                self._record("record_resolve", hit=False, verify_failed=True)
+                return None
+            em.verified_at = now
+        return em.tier, em.part_real
 
     def refresh(self, key: str) -> tuple[Tier, str] | None:
         """A caller's own operation hit ENOENT on a resolved path (the

@@ -20,7 +20,8 @@ import time
 from collections import defaultdict
 
 from .config import SeaConfig
-from .ledger import LEDGER_DIRNAME, TMP_SUFFIX
+from .extents import PART_SUFFIX, ExtentStore, extent_token, punch_hole
+from .ledger import LEDGER_DIRNAME, TMP_SUFFIX, file_disk_usage
 from .lists import CompiledRules, Mode
 from .placement import PlacementPolicy
 from .prefetcher import Prefetcher
@@ -32,6 +33,12 @@ from .transfer import TransferEngine
 _WRITE_CHARS = ("w", "a", "x", "+")
 _STRIPE_MANIFEST_SUFFIX = ".sea_stripe.json"
 _TMP_SUFFIX = TMP_SUFFIX  # atomic-commit staging (one canonical suffix)
+
+# bound at import time: SeaFS's own truncate paths must reach the real
+# syscalls even while a SeaMount context has os.truncate/os.ftruncate
+# patched (the wrappers route mount paths back here — recursion otherwise)
+_os_truncate = os.truncate
+_os_ftruncate = os.ftruncate
 
 
 def _is_write_mode(mode: str) -> bool:
@@ -67,6 +74,16 @@ class _SeaFile:
         self._fast = fast
         self._t0 = time.perf_counter()
         self._closed = False
+        self._fd = None
+        if writing:
+            # register the fd so an os.ftruncate against this handle can
+            # be routed back through SeaFS for ledger/extent settlement
+            try:
+                self._fd = raw.fileno()
+            except (OSError, ValueError, AttributeError):
+                self._fd = None
+            if self._fd is not None:
+                fs._fd_index[self._fd] = (key, tier, real)
 
     @property
     def sea_tier(self) -> str:
@@ -90,6 +107,8 @@ class _SeaFile:
         if self._closed:
             return
         self._closed = True
+        if self._fd is not None:
+            self._fs._fd_index.pop(self._fd, None)
         try:
             try:
                 pos = self._raw.tell()
@@ -115,6 +134,110 @@ class _SeaFile:
 
     def __repr__(self):  # pragma: no cover
         return f"<SeaFile key={self._key!r} tier={self._tier.name}>"
+
+
+class _ExtentRaw(io.RawIOBase):
+    """Raw composite reader of the extent plane (``SeaFS.open`` wraps it
+    in a :class:`io.BufferedReader`): staged extents are served with a
+    ``pread`` of the sparse cache part file; a missing extent is faulted
+    synchronously through the transfer engine on first touch (O(1 extent)
+    time-to-first-byte) and served from cache; when staging is refused
+    (no room, I/O error) the bytes stream straight from the base replica
+    — the reader never waits on more than one extent and never fails
+    because the cache is full. Every first touch of a new extent also
+    feeds the within-file readahead predictor, so sequential scans find
+    the next extents already staged.
+
+    Hit reads take the map's lock around the validity check + ``pread``
+    pair, which excludes the punch-hole eviction path — a reader can see
+    an extent either fully staged or invalid, never a half-punched hole.
+    Concurrent-overwrite semantics match POSIX reads of a file being
+    rewritten: torn, but never blocking."""
+
+    def __init__(self, fs: "SeaFS", key: str, em, base_real: str, base_tier):
+        super().__init__()
+        self._fs = fs
+        self._key = key
+        self._em = em
+        self._base_real = base_real
+        self._base_tier = base_tier
+        self._size = em.size
+        self._pos = 0
+        self._part_fd = os.open(em.part_real, os.O_RDONLY)
+        self._base_fd = -1  # lazy: an all-hit stream never opens the base
+        self._last_idx = -1
+
+    def readable(self) -> bool:
+        return True
+
+    def seekable(self) -> bool:
+        return True
+
+    def seek(self, offset: int, whence: int = os.SEEK_SET) -> int:
+        if whence == os.SEEK_SET:
+            pos = offset
+        elif whence == os.SEEK_CUR:
+            pos = self._pos + offset
+        elif whence == os.SEEK_END:
+            pos = self._size + offset
+        else:
+            raise ValueError(f"invalid whence: {whence}")
+        if pos < 0:
+            raise OSError(errno.EINVAL, "negative seek position")
+        self._pos = pos
+        return pos
+
+    def tell(self) -> int:
+        return self._pos
+
+    def _base(self) -> int:
+        if self._base_fd < 0:
+            self._base_fd = os.open(self._base_real, os.O_RDONLY)
+        return self._base_fd
+
+    def readinto(self, b) -> int:
+        if self._pos >= self._size:
+            return 0
+        fs, em = self._fs, self._em
+        idx = em.index_of(self._pos)
+        start, length = em.extent_range(idx)
+        # serve within one extent per call (RawIOBase short reads are the
+        # contract; BufferedReader re-calls across the boundary)
+        want = min(len(b), start + length - self._pos)
+        if want <= 0:  # zero-length destination buffer
+            return 0
+        if idx != self._last_idx:
+            self._last_idx = idx
+            fs.prefetcher.observe_extent(self._key, idx)
+        data = None
+        hit = False
+        with em.lock:
+            if em.is_valid(idx):
+                data = os.pread(self._part_fd, want, self._pos)
+                hit = True
+        if not hit:
+            if fs._fault_extent(em, idx):
+                with em.lock:
+                    if em.is_valid(idx):
+                        data = os.pread(self._part_fd, want, self._pos)
+            if data is None:
+                data = os.pread(self._base(), want, self._pos)
+        n = len(data)
+        b[:n] = data
+        self._pos += n
+        em.touch(idx)
+        fs.telemetry.record_extent_read(hit=hit, nbytes=n)
+        return n
+
+    def close(self) -> None:
+        if not self.closed:
+            try:
+                os.close(self._part_fd)
+                if self._base_fd >= 0:
+                    os.close(self._base_fd)
+            except OSError:
+                pass
+        super().close()
 
 
 class SeaFS:
@@ -154,6 +277,17 @@ class SeaFS:
         self._access_clock: dict[str, float] = {}  # LRU bookkeeping (opt-in)
         self._fast_open = bool(getattr(config, "open_fast_path", True))
         self._readahead = bool(getattr(config, "readahead", False))
+        # extent-granular data plane (opt-in): partial sparse replicas on
+        # cache tiers, per-extent staging/eviction, streaming reads
+        self.extents: ExtentStore | None = (
+            ExtentStore(config.extent_bytes, self.telemetry)
+            if getattr(config, "extent_map", False)
+            else None
+        )
+        self.resolver.extent_store = self.extents
+        #: fd -> (key, tier, real) of open Sea write handles, so the
+        #: ftruncate intercept can settle accounting for fd-only calls
+        self._fd_index: dict[int, tuple[str, Tier, str]] = {}
         # predictive readahead (observes read opens, stages speculatively
         # through the transfer pool); inert unless config.readahead
         self.prefetcher = Prefetcher(self)
@@ -303,6 +437,9 @@ class SeaFS:
                 # the whole write, not just after the open returns
                 with self._lock:
                     self._open_writers[key] = self._open_writers.get(key, 0) + 1
+                # a partial extent replica of the old content is stale the
+                # moment a writer opens the key
+                self._discard_extents(key)
             else:
                 found = self.resolve_read(key)
                 if found is None:
@@ -314,6 +451,15 @@ class SeaFS:
                 if found is None:
                     return self._open_base_miss(key, mode, **kw)
                 tier, real = found
+                if (
+                    self.extents is not None
+                    and tier.persistent
+                    and "b" in mode
+                    and not kw
+                ):
+                    f = self._open_extent_read(key, tier, real)
+                    if f is not None:
+                        return f
             try:
                 raw = io.open(real, mode, **kw)
             except FileNotFoundError:
@@ -379,6 +525,11 @@ class SeaFS:
         if found is None:
             return None
         tier, real = found
+        if self.extents is not None and tier.persistent:
+            # a base-resolved read may belong to the extent plane (partial
+            # replica, streaming fault-in): always route through the
+            # key-locked slow path, which owns that decision
+            return None
         try:
             raw = io.open(real, mode, **kw)
         except OSError:
@@ -585,6 +736,11 @@ class SeaFS:
         return self.resolver.locate_dir(self.key_of(path)) is not None
 
     def stat(self, path: str):
+        """``os.stat`` over the hierarchy. A partially-staged key reports
+        its full LOGICAL size either way: resolution only ever sees whole
+        replicas (part files carry :data:`PART_SUFFIX`), and the sparse
+        part file's ``st_size`` equals the logical size by construction —
+        staging state is a placement detail, never visible in metadata."""
         if not self.is_sea_path(path):
             return os.stat(path)
         key = self.key_of(path)
@@ -629,7 +785,11 @@ class SeaFS:
         # living inside each root, not application data — and an in-flight
         # flush's .sea_tmp staging file must never leak into the union
         seen.discard(LEDGER_DIRNAME)
-        return sorted(n for n in seen if not n.endswith(_TMP_SUFFIX))
+        return sorted(
+            n
+            for n in seen
+            if not n.endswith(_TMP_SUFFIX) and not n.endswith(PART_SUFFIX)
+        )
 
     def makedirs(
         self, path: str, mode: int = 0o777, exist_ok: bool = False
@@ -692,6 +852,7 @@ class SeaFS:
                     errno.ENOENT, os.strerror(errno.ENOENT), path
                 )
             self._drop_replicas(key, replicas=replicas)
+            self._discard_extents(key)
             self.resolver.invalidate(key)
 
     def rename(self, src: str, dst: str) -> None:
@@ -720,6 +881,8 @@ class SeaFS:
                 os.makedirs(os.path.dirname(dreal), exist_ok=True)
                 # drop stale copies of dst on other tiers/roots first
                 self._drop_replicas(dkey, keep=dreal)
+                self._discard_extents(skey)
+                self._discard_extents(dkey)
                 os.replace(real, dreal)
                 self.resolver.invalidate(skey)
                 sroot = tier.root_of(real)
@@ -767,6 +930,7 @@ class SeaFS:
                 # fastest copy, and an old slower replica must not
                 # resurface after an eviction
                 self._drop_replicas(dkey, keep=rdst)
+                self._discard_extents(dkey)
                 self.resolver.invalidate(dkey)
                 self.resolver.note_location(dkey, dtier, rdst)
             os.remove(src)
@@ -862,6 +1026,7 @@ class SeaFS:
                 # the overwrite landed on the fastest copy: stale slower
                 # replicas must not resurface after an eviction
                 self._drop_replicas(dkey, keep=rdst)
+                self._discard_extents(dkey)
                 self.resolver.invalidate(dkey)
                 self.resolver.note_location(dkey, dtier, rdst)
             finally:
@@ -912,6 +1077,10 @@ class SeaFS:
                             # are reclaimed on the spot
                             self.transfer.maybe_reap_orphan(real)
                             continue
+                        if fn.endswith(PART_SUFFIX):
+                            # partial extent replicas are evicted block-
+                            # wise (punch pass below), never whole-file
+                            continue
                         key = os.path.relpath(real, root)
                         if self.open_count(key):
                             continue
@@ -942,6 +1111,15 @@ class SeaFS:
             for tier in self.hierarchy.cache_tiers:
                 if self.policy.eligible_roots(tier):
                     return True
+        if self.extents is not None:
+            # whole files alone didn't make a root eligible: punch cold
+            # staged extents too (block-granular room-making)
+            for tier in self.hierarchy.cache_tiers:
+                for root in tier.roots:
+                    if self._extent_make_room(root, self.policy.required_bytes):
+                        freed_any = True
+                    if self.policy.eligible_roots(tier):
+                        return True
         return freed_any
 
     def stage_to_cache(self, key: str, *, cancel=None) -> int:
@@ -958,6 +1136,10 @@ class SeaFS:
         with self.key_lock(key):
             if cancel is not None and cancel.is_set():
                 return 0  # stale prediction: don't even resolve
+            if self.extents is not None and self.extents.get(key) is not None:
+                # the key streams through a partial replica: staging is
+                # per-extent (stage_extent), not whole-file
+                return 0
             located = self.resolver.resolve(key, ignore_negative=True)
             if located is None or not located[0].persistent:
                 return 0  # gone, or already cached
@@ -993,6 +1175,258 @@ class SeaFS:
             self.resolver.note_location(key, ctier, dst)
             self.telemetry.record_prefetch(result.nbytes)
             return result.nbytes
+
+    # -- extent plane (block-granular staging; opt-in via extent_map) ----------
+    def _discard_extents(self, key: str) -> None:
+        """Drop a key's partial replica (overwrite/remove/rename/truncate
+        make per-extent state stale) and settle its ledger entry."""
+        if self.extents is None:
+            return
+        em = self.extents.discard(key)
+        if em is not None:
+            em.tier.note_removed(em.root, em.part_rel)
+
+    def _open_extent_read(self, key: str, tier: Tier, real: str):
+        """Route one binary read open through the extent plane (caller
+        holds the key lock; ``real`` resolved on the persistent base).
+        Returns None to fall back to the whole-file path: size
+        unreadable, file fits in one extent, or no cache root has room
+        for even one extent."""
+        try:
+            size = os.path.getsize(real)
+        except OSError:
+            return None
+        if size <= self.extents.extent_bytes:
+            return None  # single extent: whole-file staging is equivalent
+        em = self.extents.load(key, self.hierarchy.cache_tiers)
+        if em is not None and (em.size != size or em.dead):
+            self._discard_extents(key)  # base rewritten: journal is stale
+            em = None
+        if em is None:
+            slot = self._select_extent_root(self.extents.extent_bytes)
+            if slot is None:
+                return None  # no room for one extent: stream from base
+            ctier, croot = slot
+            em = self.extents.create(key, ctier, croot, size)
+        em.tier.note_written(
+            em.root, em.part_rel, ExtentStore.disk_usage(em)
+        )
+        try:
+            raw = _ExtentRaw(self, key, em, real, tier)
+        except OSError:
+            self._discard_extents(key)
+            return None
+        with self._lock:
+            self._open_counts[key] += 1
+            self._access_clock[key] = time.monotonic()
+        return _SeaFile(
+            self, key, io.BufferedReader(raw), em.tier, False, em.part_real
+        )
+
+    def _fault_extent(self, em, idx: int) -> bool:
+        """Synchronous read-fault of one extent — the reader blocks for
+        O(1 extent), never O(file). Best-effort: False streams the read
+        from the base replica instead."""
+        if em.dead:
+            return False
+        with self.key_lock(em.key):
+            if em.dead:
+                return False
+            if em.is_valid(idx):
+                return True
+            return self._stage_extent_locked(em, idx) > 0
+
+    def stage_extent(self, key: str, idx: int, *, cancel=None) -> int:
+        """Stage one extent of ``key``'s partial replica — the per-extent
+        analogue of :meth:`stage_to_cache`, driven by the within-file
+        readahead predictor. Returns the bytes staged (0 = gone, already
+        staged, out of room, cancelled, or failed)."""
+        if self.extents is None:
+            return 0
+        with self.key_lock(key):
+            if cancel is not None and cancel.is_set():
+                return 0
+            em = self.extents.get(key)
+            if (
+                em is None
+                or em.dead
+                or idx >= em.n_extents
+                or em.is_valid(idx)
+            ):
+                return 0
+            return self._stage_extent_locked(em, idx, cancel=cancel)
+
+    def _stage_extent_locked(self, em, idx: int, *, cancel=None) -> int:
+        """The staging step (caller holds the key lock): admission at
+        EXTENT granularity — ``required`` is one extent, not the paper's
+        whole-file headroom, which is what admits files bigger than the
+        tier — then a ranged copy committed by the validity journal."""
+        start, length = em.extent_range(idx)
+        located = self.resolver.resolve(em.key, ignore_negative=True)
+        if located is None or not located[0].persistent:
+            return 0  # base replica gone, or a full cache replica exists
+        admitted, res = self._admit_extent(em.tier, em.root, length)
+        if not admitted and self.config.lru_evict:
+            if self._extent_make_room(em.root, length):
+                admitted, res = self._admit_extent(em.tier, em.root, length)
+        if not admitted:
+            return 0
+        try:
+            self.transfer.copy_range(
+                located[1],
+                em.part_real,
+                start,
+                length,
+                src_tier=located[0],
+                dst_tier=em.tier,
+                cancel=cancel,
+            )
+        except OSError:
+            # cancelled, or an I/O error (engine errors keep their POSIX
+            # class): per-extent staging is best-effort — the reader
+            # falls back to the base replica. The failed attempt may have
+            # committed chunks into the sparse file: punch them back out
+            # (best-effort) and re-note the REAL disk usage, or the walk
+            # and the ledger would disagree by the torn chunks.
+            em.tier.release_write(res)
+            try:
+                fd = os.open(em.part_real, os.O_RDWR)
+                try:
+                    punch_hole(fd, start, length)
+                finally:
+                    os.close(fd)
+            except OSError:
+                pass
+            em.tier.note_written(
+                em.root, em.part_rel, ExtentStore.disk_usage(em)
+            )
+            return 0
+        self.extents.mark_valid(em, idx)
+        em.tier.commit_write(
+            res, em.root, em.part_rel, ExtentStore.disk_usage(em)
+        )
+        self.telemetry.record_extent_staged(length)
+        if em.complete:
+            self._promote_extents(em)
+        return length
+
+    def _promote_extents(self, em) -> None:
+        """Every extent landed: the partial replica becomes a plain
+        whole-file replica (atomic rename) and the ledger swaps the part
+        entry for the final file — a fully-staged key degenerates to
+        exactly the whole-file plane's state."""
+        try:
+            final = self.extents.promote(em)
+        except OSError:
+            return
+        em.tier.note_removed(em.root, em.part_rel)
+        try:
+            em.tier.note_written(em.root, em.key, file_disk_usage(final))
+        except OSError:
+            pass
+        self.resolver.note_location(em.key, em.tier, final)
+
+    def _admit_extent(self, tier: Tier, root: str, nbytes: int):
+        """Atomic per-extent admission. Returns (admitted, reservation)."""
+        if tier.spec.capacity is None or tier.ledger is None:
+            if not tier.admissible(root, required=nbytes, nbytes=nbytes):
+                return False, None
+            return True, tier.reserve_write(root, nbytes)
+        res = tier.ledger.try_reserve(
+            root, nbytes, capacity=tier.spec.capacity, required=nbytes
+        )
+        return res is not None, res
+
+    def _select_extent_root(self, nbytes: int) -> tuple[Tier, str] | None:
+        """Fastest cache root with room for ONE extent. (The whole-file
+        planes demand the ``n_procs * max_file_size`` headroom; the
+        extent plane admits block by block, so a tier smaller than the
+        largest file still qualifies.)"""
+        for tier in self.hierarchy.cache_tiers:
+            roots = list(tier.roots)
+            self.policy.rng.shuffle(roots)
+            for r in roots:
+                if tier.free_bytes(r) >= nbytes:
+                    return tier, r
+        return None
+
+    def _extent_make_room(self, root: str, need: int) -> bool:
+        """Punch the least-recently-read staged extents under ``root``
+        until ``need`` bytes are deallocated — extent-granular eviction:
+        cold blocks of hot (even currently-open) files go first, with
+        predicted-hot extents shielded the way whole files are."""
+        if self.extents is None:
+            return False
+        cands: list = []
+        for em in self.extents.maps():
+            if em.dead or em.root != root:
+                continue
+            for idx in sorted(em.valid):
+                hot = self.prefetcher.is_hot(extent_token(em.key, idx))
+                cands.append((hot, em.atime.get(idx, 0.0), em.key, idx, em))
+        cands.sort(key=lambda c: (c[0], c[1], c[2], c[3]))
+        freed = 0
+        for _hot, _at, _key, idx, em in cands:
+            n = self.extents.punch(em, idx)
+            if n <= 0:
+                continue
+            self.telemetry.record_extent_punched(n)
+            em.tier.note_written(
+                em.root, em.part_rel, ExtentStore.disk_usage(em)
+            )
+            freed += n
+            if freed >= need:
+                return True
+        return freed >= need
+
+    # -- truncate (ledger-settled; bypassing it drifts used-bytes) -------------
+    def truncate(self, path: str, length: int) -> None:
+        """``os.truncate`` over the hierarchy: applied to the fastest
+        replica, stale slower replicas dropped, the ledger re-noted with
+        the new size, and resolver/extent state invalidated — a truncate
+        that bypasses Sea otherwise drifts used-bytes until the next
+        reconcile and leaves partial extent replicas serving dead data."""
+        if not self.is_sea_path(path):
+            _os_truncate(path, length)
+            return
+        key = self.key_of(path)
+        with self.key_lock(key):
+            found = self.resolver.resolve(
+                key, check_faster=True, ignore_negative=True
+            )
+            if found is None:
+                raise FileNotFoundError(
+                    errno.ENOENT, os.strerror(errno.ENOENT), path
+                )
+            tier, real = found
+            _os_truncate(real, length)
+            self._drop_replicas(key, keep=real)
+            self._discard_extents(key)
+            root = tier.root_of(real)
+            if root is not None:
+                try:
+                    tier.note_written(root, key, file_disk_usage(real))
+                except OSError:
+                    pass
+            self.resolver.invalidate(key)
+            self.resolver.note_location(key, tier, real)
+
+    def ftruncate(self, fd: int, length: int) -> None:
+        """``os.ftruncate`` for fds opened through SeaFS: the syscall,
+        then the same ledger/extent settlement as :meth:`truncate`.
+        Foreign fds get the plain syscall and no bookkeeping."""
+        _os_ftruncate(fd, length)
+        info = self._fd_index.get(fd)
+        if info is None:
+            return
+        key, tier, real = info
+        self._discard_extents(key)
+        root = tier.root_of(real)
+        if root is not None:
+            try:
+                tier.note_written(root, key, file_disk_usage(real))
+            except OSError:
+                pass
 
     def persist(self, path: str) -> str:
         """Ensure a durable copy exists on the base (persistent) tier,
@@ -1036,6 +1470,8 @@ class SeaFS:
         return found[0].name if found else None
 
     def wipe(self) -> None:
+        if self.extents is not None:
+            self.extents.clear()  # on-disk parts/journals go with the roots
         for tier in self.hierarchy:
             tier.wipe()
         self.resolver.invalidate_all()

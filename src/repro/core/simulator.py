@@ -110,6 +110,10 @@ class SimResult:
     readahead_hits: int = 0       # cold block inputs served from cache by
                                   # the predictive-staging overlap
     readahead_staged: int = 0     # background speculative staging flows
+    ttfb_s: float = 0.0           # time until the FIRST worker has its first
+                                  # cold input byte (whole-file: after all of
+                                  # F; extent plane: after one extent)
+    extents_staged: int = 0       # extent-granular staging flows modelled
 
 
 class _Node:
@@ -159,6 +163,12 @@ class Simulator:
                                              # is staged Lustre->cache in the
                                              # background, so the app-side
                                              # read is a memory read
+        extent_map: bool = False,            # extent-granular data plane: a
+                                             # cold input's first byte waits
+                                             # for ONE extent, not the file
+        extent_bytes: float = 0.0,           # modelled extent size (bytes);
+                                             # <=0 or >=F degenerates to the
+                                             # whole-file plane
     ):
         assert system in ("lustre", "sea", "sea-flushall")
         self.cl = cluster
@@ -217,6 +227,15 @@ class Simulator:
         self.readahead = bool(readahead)
         self.readahead_hits = 0
         self.readahead_staged = 0
+        # Extent-plane model: the cold read is split at extent granularity
+        # — the worker blocks only for the first extent (its TTFB), then
+        # the remainder streams through the same Lustre path while the
+        # application consumes (total bytes moved are unchanged).
+        self.extent_map = bool(extent_map)
+        self.extent_bytes = float(extent_bytes)
+        self.extents_staged = 0
+        self.ttfb_s: float | None = None
+        self.now = 0.0
         self.nodes = [_Node(i, cluster) for i in range(cluster.c)]
         self.caps = self._build_resources()
         self.bytes_by_tier: dict[str, float] = defaultdict(float)
@@ -341,9 +360,7 @@ class Simulator:
                         # sequence and stages the next one ahead (none
                         # left = nothing to speculate on)
                         nd.readahead_q.append("lustre")
-                yield ReadOp(
-                    self.lustre_read_path(nd.idx), w.F, cap=self.cl.L_stream_r
-                )
+                yield from self._cold_input_read(nd)
             last_tier = None
             for i in range(1, w.n + 1):
                 if self.compute_s:
@@ -375,6 +392,30 @@ class Simulator:
                 final = i == w.n
                 if self.system == "sea-flushall" or (self.system == "sea" and final):
                     nd.flush_q.append(tier)
+
+    def _cold_input_read(self, nd: _Node):
+        """The cold Lustre input read. Whole-file plane: one flow — the
+        worker's first byte waits for ALL of F. Extent plane: the worker
+        faults the first extent synchronously (TTFB = one extent over the
+        same path) and the remainder streams while it computes; total
+        bytes moved are identical, only the blocking prefix shrinks."""
+        F = self.w.F
+        path = self.lustre_read_path(nd.idx)
+        cap = self.cl.L_stream_r
+        if (
+            self.system != "lustre"
+            and self.extent_map
+            and 0.0 < self.extent_bytes < F
+        ):
+            self.extents_staged += int(-(-F // self.extent_bytes))
+            yield ReadOp(path, self.extent_bytes, cap=cap)
+            if self.ttfb_s is None:
+                self.ttfb_s = self.now
+            yield ReadOp(path, F - self.extent_bytes, cap=cap)
+        else:
+            yield ReadOp(path, F, cap=cap)
+            if self.ttfb_s is None:
+                self.ttfb_s = self.now
 
     def _lustre_app_write(self, nd: _Node) -> tuple[str, tuple[str, ...]]:
         """Writeback model: the first ``dirty_cap`` bytes per node are
@@ -511,6 +552,7 @@ class Simulator:
                 break
             dt = max(dt, 0.0)
             t += dt
+            self.now = t  # generators resumed below read the event time
             for a in workers + flushers:
                 a.advance(t, dt)
         makespan = t
@@ -523,6 +565,8 @@ class Simulator:
             resolver_misses=self.resolver_misses,
             readahead_hits=self.readahead_hits,
             readahead_staged=self.readahead_staged,
+            ttfb_s=self.ttfb_s if self.ttfb_s is not None else makespan,
+            extents_staged=self.extents_staged,
         )
 
     def _has_flush_work(self) -> bool:

@@ -100,6 +100,15 @@ class Telemetry:
     readahead_hits: int = 0         # predicted keys subsequently opened
     readahead_hit_bytes: int = 0    # staged bytes that were then read hot
     readahead_wasted_bytes: int = 0  # staged bytes expired/cancelled unread
+    extent_hits: int = 0            # reads served from a staged extent
+    extent_hit_bytes: int = 0       # bytes those reads served from cache
+    extent_misses: int = 0          # reads that found the extent unstaged
+    extent_miss_bytes: int = 0      # bytes served from the base fallback
+    extents_staged: int = 0         # extents whose staging copy committed
+    extent_staged_bytes: int = 0    # bytes staged base->cache per-extent
+    extents_punched: int = 0        # staged extents evicted by punch-hole
+    extent_punched_bytes: int = 0   # bytes those punches deallocated
+    extent_promotions: int = 0      # part files completed -> whole replicas
     fastpath_opens: int = 0         # read opens served by the lock-free
                                     # fast path (base: folded dead threads)
     fastpath_redirect_hits: int = 0  # redirects taken on the fast path
@@ -225,6 +234,30 @@ class Telemetry:
         with self._lock:
             self.readahead_wasted_bytes += nbytes
 
+    # -- extent plane (block-granular staging) -------------------------------
+    def record_extent_read(self, *, hit: bool, nbytes: int = 0) -> None:
+        with self._lock:
+            if hit:
+                self.extent_hits += 1
+                self.extent_hit_bytes += nbytes
+            else:
+                self.extent_misses += 1
+                self.extent_miss_bytes += nbytes
+
+    def record_extent_staged(self, nbytes: int) -> None:
+        with self._lock:
+            self.extents_staged += 1
+            self.extent_staged_bytes += nbytes
+
+    def record_extent_punched(self, nbytes: int) -> None:
+        with self._lock:
+            self.extents_punched += 1
+            self.extent_punched_bytes += nbytes
+
+    def record_extent_promoted(self) -> None:
+        with self._lock:
+            self.extent_promotions += 1
+
     # -- thread-batched fast-path counters ----------------------------------
     def local(self) -> ThreadCounters:
         """This thread's lock-free counter block (created and registered
@@ -293,6 +326,15 @@ class Telemetry:
                 "readahead_hits": self.readahead_hits,
                 "readahead_hit_bytes": self.readahead_hit_bytes,
                 "readahead_wasted_bytes": self.readahead_wasted_bytes,
+                "extent_hits": self.extent_hits,
+                "extent_hit_bytes": self.extent_hit_bytes,
+                "extent_misses": self.extent_misses,
+                "extent_miss_bytes": self.extent_miss_bytes,
+                "extents_staged": self.extents_staged,
+                "extent_staged_bytes": self.extent_staged_bytes,
+                "extents_punched": self.extents_punched,
+                "extent_punched_bytes": self.extent_punched_bytes,
+                "extent_promotions": self.extent_promotions,
                 "fastpath_opens": self.fastpath_opens,
                 "fastpath_redirect_hits": self.fastpath_redirect_hits,
             }

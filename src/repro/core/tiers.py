@@ -15,7 +15,13 @@ import os
 import shutil
 from dataclasses import dataclass, field
 
-from .ledger import LEDGER_DIRNAME, TMP_SUFFIX, CapacityLedger, Reservation
+from .ledger import (
+    LEDGER_DIRNAME,
+    TMP_SUFFIX,
+    CapacityLedger,
+    Reservation,
+    file_disk_usage,
+)
 from .shared_ledger import SharedCapacityLedger
 
 
@@ -82,7 +88,9 @@ class Tier:
         behaviour; now the reconcile/baseline path only). In-flight
         ``.sea_tmp`` staging files are not data: counting one that a
         failed transfer later unlinks would overstate ``used`` with bytes
-        nothing ever removes."""
+        nothing ever removes. Sizes are sparse-aware (``file_disk_usage``)
+        so a partial extent replica counts its staged blocks, not the
+        holes."""
         total = 0
         for dirpath, dirnames, filenames in os.walk(root):
             if LEDGER_DIRNAME in dirnames:
@@ -91,7 +99,7 @@ class Tier:
                 if fn.endswith(TMP_SUFFIX):
                     continue
                 try:
-                    total += os.path.getsize(os.path.join(dirpath, fn))
+                    total += file_disk_usage(os.path.join(dirpath, fn))
                 except OSError:
                     pass
         return total

@@ -435,6 +435,121 @@ class TransferEngine:
         )
         return TransferResult(nbytes, seconds, attempts, impl)
 
+    def copy_range(
+        self,
+        src: str,
+        dst: str,
+        offset: int,
+        length: int,
+        *,
+        src_tier: Tier | str | None = None,
+        dst_tier: Tier | str | None = None,
+        cancel: threading.Event | None = None,
+        on_chunk=None,
+    ) -> TransferResult:
+        """Stream ``length`` bytes of ``src`` starting at ``offset`` into
+        the same range of ``dst`` — the extent-staging primitive.
+
+        Unlike :meth:`copy` there is no staging tmp and no rename:
+        ``dst`` is a preallocated *sparse* destination (an extent plane
+        part file) and the bytes are written in place at ``offset``.
+        Atomicity is the caller's validity journal — it is updated only
+        after this method returns, so a crash at any chunk boundary
+        leaves the extent unmarked, never torn-but-valid. Ledger
+        admission likewise stays with the caller (per-extent
+        reservations, committed against the part file's disk usage).
+
+        The chunk loop shares everything else with :meth:`copy`:
+        ``copy_file_range`` with explicit offsets (buffered pread/pwrite
+        fallback), the per-tier-pair token-bucket throttle,
+        retry-with-backoff (re-copying a range is idempotent),
+        cooperative ``cancel`` between chunks, and the
+        ``chunk_hook``/``on_chunk`` fault-injection points."""
+        t0 = time.perf_counter()
+        pair = f"{self._tier_name(src_tier)}->{self._tier_name(dst_tier)}"
+        if cancel is not None and cancel.is_set():
+            raise TransferCancelled(f"range transfer {src} -> {dst} cancelled")
+        delay = self.backoff_s
+        last_exc: BaseException | None = None
+        for attempt in range(1, self.retries + 2):
+            try:
+                copied, impl = self._copy_range_once(
+                    src, dst, offset, length, pair, cancel, on_chunk
+                )
+            except TransferCancelled:
+                raise
+            except Exception as e:
+                last_exc = e
+                permanent = (
+                    isinstance(e, OSError) and e.errno in _PERMANENT_ERRNOS
+                )
+                if permanent or attempt > self.retries:
+                    break
+                if cancel is not None and cancel.is_set():
+                    raise TransferCancelled(
+                        f"range transfer to {dst} cancelled"
+                    ) from e
+                time.sleep(delay)
+                delay *= 2
+            else:
+                seconds = time.perf_counter() - t0
+                self.telemetry.record_transfer(
+                    pair, nbytes=copied, seconds=seconds, retries=attempt - 1
+                )
+                return TransferResult(copied, seconds, attempt, impl)
+        if isinstance(last_exc, OSError):
+            raise last_exc
+        raise TransferError(
+            f"range transfer {src}[{offset}:{offset + length}] -> {dst} "
+            f"failed after {self.retries + 1} attempts"
+        ) from last_exc
+
+    def _copy_range_once(
+        self, src, dst, offset, length, pair, cancel, on_chunk
+    ) -> tuple[int, str]:
+        bucket = self._bucket(pair)
+        copied = 0
+        impl = "copy_file_range" if _HAS_COPY_FILE_RANGE else "preadwrite"
+        with open(src, "rb") as fi, open(dst, "r+b") as fo:
+            ifd, ofd = fi.fileno(), fo.fileno()
+            while copied < length:
+                if cancel is not None and cancel.is_set():
+                    raise TransferCancelled(f"range transfer of {src} cancelled")
+                want = min(self.chunk_bytes, length - copied)
+                pos = offset + copied
+                if impl == "copy_file_range":
+                    try:
+                        n = os.copy_file_range(
+                            ifd, ofd, want, offset_src=pos, offset_dst=pos
+                        )
+                    except OSError as e:
+                        if e.errno in _FALLBACK_ERRNOS:
+                            impl = "preadwrite"
+                            continue
+                        raise
+                else:
+                    buf = os.pread(ifd, want, pos)
+                    n = len(buf)
+                    if n:
+                        os.pwrite(ofd, buf, pos)
+                if n == 0:
+                    break  # source shorter than the recorded extent map
+                copied += n
+                if on_chunk is not None:
+                    on_chunk(copied, length, dst)
+                if self.chunk_hook is not None:
+                    self.chunk_hook(copied, length, dst)
+                if bucket is not None:
+                    self._throttle_wait(bucket.consume(n), ofd)
+        if copied != length:
+            # the source changed size under the extent map: the caller's
+            # map is stale and must be rebuilt, not marked valid
+            raise TransferError(
+                f"range verify failed for {src}[{offset}:{offset + length}]: "
+                f"copied {copied}"
+            )
+        return copied, impl
+
     def _admit(self, tier: Tier, root: str, nbytes: int, *, mode: str):
         if mode == "reserve" or tier.ledger is None:
             return tier.reserve_write(root, nbytes)
