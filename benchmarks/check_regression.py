@@ -1,11 +1,12 @@
 """CI perf-regression gate for the placement/multiproc/resolve/transfer/
-readahead/extent benchmarks.
+readahead/extent/federation benchmarks.
 
-Compares a freshly produced ``BENCH_pr6.json`` (written by
+Compares a freshly produced ``BENCH_pr7.json`` (written by
 ``placement_bench --json`` + ``multiproc_bench --json`` +
 ``resolve_bench --json`` + ``transfer_bench --json`` +
-``readahead_bench --json`` + ``extent_bench --json``, merged by the CI
-workflow) against the committed ``benchmarks/BENCH_baseline.json``.
+``readahead_bench --json`` + ``extent_bench --json`` +
+``federation_bench --json``, merged by the CI workflow) against the
+committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
@@ -31,6 +32,15 @@ The structural gates are machine-independent and strict:
     and a scan of a file 4x the cache tier stays bit-exact, never
     over-commits the ledger, actually punches cold extents, and keeps
     >= MIN_HOT_CHUNK_RATIO of chunks served from staged extents.
+  * federation: a second node reading a sibling-staged working set is
+    >= MIN_PEER_SPEEDUP x faster than the identical cold-from-base run
+    (modelled tier bandwidths, real peer->cache token-bucket cap),
+    every warm read is a peer hit, and with peers killed mid-pull every
+    read still returns bit-exact base content with zero partial or tmp
+    files left in the puller's cache.
+
+Every failure message is prefixed with its ``[section]`` so CI logs
+name the benchmark that tripped the gate.
 
 Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
@@ -61,6 +71,7 @@ MAX_WASTED_RATIO = 0.20     # wasted / staged speculative bytes, random access
 MIN_FASTPATH_REDUCTION = 0.30  # read-hit open overhead cut vs PR-4 path
 MIN_TTFB_SPEEDUP = 5.0      # cold TTFB: one-extent fault vs whole-file stage
 MIN_HOT_CHUNK_RATIO = 0.5   # bigger-than-tier scan chunks served hot
+MIN_PEER_SPEEDUP = 2.0      # warm-peer read vs cold-from-base, same caps
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -71,6 +82,10 @@ def _row(rows: list[dict], name: str) -> dict | None:
 
 def check(current: dict, baseline: dict | None) -> list[str]:
     failures: list[str] = []
+
+    def fail(section: str, msg: str) -> None:
+        failures.append(f"[{section}] {msg}")
+
     rows = current["placement"]["rows"]
 
     sizes = sorted(
@@ -82,120 +97,172 @@ def check(current: dict, baseline: dict | None) -> list[str]:
     s_small = _row(rows, f"placement_select_ledger_{small}f")["us_per_call"]
     s_big = _row(rows, f"placement_select_ledger_{big}f")["us_per_call"]
     if s_big > FLATNESS_X * s_small:
-        failures.append(
+        fail(
+            "placement",
             f"select() not O(1)-flat: {s_big}us at {big} files vs "
-            f"{s_small}us at {small} (allowed {FLATNESS_X}x)"
+            f"{s_small}us at {small} (allowed {FLATNESS_X}x)",
         )
 
     speedup = current["placement"]["open_speedup"]
     if speedup < MIN_OPEN_SPEEDUP:
-        failures.append(
+        fail(
+            "placement",
             f"ledger open speedup {speedup}x at {big} files "
-            f"< required {MIN_OPEN_SPEEDUP}x"
+            f"< required {MIN_OPEN_SPEEDUP}x",
         )
 
     for scale in current["multiproc"]["scales"]:
         if scale["overcommitted"]:
-            failures.append(
+            fail(
+                "multiproc",
                 f"capped root over-committed at {scale['n_procs']} procs: "
-                f"{scale['cache_used_bytes']} > {scale['capacity']}"
+                f"{scale['cache_used_bytes']} > {scale['capacity']}",
             )
         if scale["files_placed"] != scale["files_written"]:
-            failures.append(
+            fail(
+                "multiproc",
                 f"lost files at {scale['n_procs']} procs: "
-                f"{scale['files_written'] - scale['files_placed']}"
+                f"{scale['files_written'] - scale['files_placed']}",
             )
     top = current["multiproc"]["scales"][-1]
     if top["scaling_vs_1proc"] < MIN_SCALING:
-        failures.append(
-            f"multiproc throughput collapsed: {top['scaling_vs_1proc']}x "
-            f"at {top['n_procs']} procs < {MIN_SCALING}x"
+        fail(
+            "multiproc",
+            f"throughput collapsed: {top['scaling_vs_1proc']}x "
+            f"at {top['n_procs']} procs < {MIN_SCALING}x",
         )
 
     resolver = current.get("resolver")
     if resolver is None:
-        failures.append("resolver section missing (resolve_bench not run)")
+        fail("resolver", "section missing (resolve_bench not run)")
     else:
         speedup = resolver["resolve_speedup"]
         if speedup < MIN_RESOLVE_SPEEDUP:
-            failures.append(
+            fail(
+                "resolver",
                 f"cached resolution speedup {speedup}x at the widest layout "
-                f"< required {MIN_RESOLVE_SPEEDUP}x"
+                f"< required {MIN_RESOLVE_SPEEDUP}x",
             )
         flatness = resolver["hit_flatness"]
         if flatness > RESOLVE_FLATNESS_X:
-            failures.append(
-                f"resolver hit path not flat across root counts: "
-                f"{flatness}x (allowed {RESOLVE_FLATNESS_X}x)"
+            fail(
+                "resolver",
+                f"hit path not flat across root counts: "
+                f"{flatness}x (allowed {RESOLVE_FLATNESS_X}x)",
             )
 
     transfer = current.get("transfer")
     if transfer is None:
-        failures.append("transfer section missing (transfer_bench not run)")
+        fail("transfer", "section missing (transfer_bench not run)")
     else:
         ratio = transfer["large_ratio"]
         if ratio < MIN_TRANSFER_RATIO:
-            failures.append(
-                f"transfer engine large-file throughput {ratio}x of shutil "
-                f"< required {MIN_TRANSFER_RATIO}x parity"
+            fail(
+                "transfer",
+                f"engine large-file throughput {ratio}x of shutil "
+                f"< required {MIN_TRANSFER_RATIO}x parity",
             )
         overlap = transfer["overlap_speedup"]
         if overlap <= MIN_OVERLAP_SPEEDUP:
-            failures.append(
+            fail(
+                "transfer",
                 f"concurrent-prefetch overlap {overlap}x <= required "
-                f"{MIN_OVERLAP_SPEEDUP}x over serial staging"
+                f"{MIN_OVERLAP_SPEEDUP}x over serial staging",
             )
 
     readahead = current.get("readahead")
     if readahead is None:
-        failures.append("readahead section missing (readahead_bench not run)")
+        fail("readahead", "section missing (readahead_bench not run)")
     else:
         seq = readahead["cold_seq_speedup"]
         if seq < MIN_SEQ_SPEEDUP:
-            failures.append(
+            fail(
+                "readahead",
                 f"cold sequential readahead speedup {seq}x "
-                f"< required {MIN_SEQ_SPEEDUP}x"
+                f"< required {MIN_SEQ_SPEEDUP}x",
             )
         wasted = readahead["wasted_ratio"]
         if wasted >= MAX_WASTED_RATIO:
-            failures.append(
+            fail(
+                "readahead",
                 f"wasted-prefetch ratio {wasted} on random access "
-                f">= allowed {MAX_WASTED_RATIO}"
+                f">= allowed {MAX_WASTED_RATIO}",
             )
         cut = readahead["fastpath_overhead_reduction"]
         if cut < MIN_FASTPATH_REDUCTION:
-            failures.append(
+            fail(
+                "readahead",
                 f"open fast-path overhead reduction {cut} "
-                f"< required {MIN_FASTPATH_REDUCTION}"
+                f"< required {MIN_FASTPATH_REDUCTION}",
             )
 
     extent = current.get("extent")
     if extent is None:
-        failures.append("extent section missing (extent_bench not run)")
+        fail("extent", "section missing (extent_bench not run)")
     else:
         ttfb = extent["ttfb_speedup"]
         if ttfb < MIN_TTFB_SPEEDUP:
-            failures.append(
-                f"extent cold-TTFB speedup {ttfb}x "
-                f"< required {MIN_TTFB_SPEEDUP}x"
+            fail(
+                "extent",
+                f"cold-TTFB speedup {ttfb}x < required {MIN_TTFB_SPEEDUP}x",
             )
         if not extent["scan_bitexact"]:
-            failures.append(
-                "bigger-than-tier extent scan returned corrupted bytes"
+            fail(
+                "extent", "bigger-than-tier extent scan returned corrupted bytes"
             )
         if extent["scan_overcommitted"]:
-            failures.append(
-                "bigger-than-tier extent scan over-committed the cache tier"
+            fail(
+                "extent",
+                "bigger-than-tier extent scan over-committed the cache tier",
             )
         if extent["scan_extents_punched"] <= 0:
-            failures.append(
-                "bigger-than-tier extent scan never punched a cold extent"
+            fail(
+                "extent",
+                "bigger-than-tier extent scan never punched a cold extent",
             )
         hot = extent["scan_hot_chunk_ratio"]
         if hot < MIN_HOT_CHUNK_RATIO:
-            failures.append(
+            fail(
+                "extent",
                 f"bigger-than-tier scan hot-chunk ratio {hot} "
-                f"< required {MIN_HOT_CHUNK_RATIO}"
+                f"< required {MIN_HOT_CHUNK_RATIO}",
+            )
+
+    federation = current.get("federation")
+    if federation is None:
+        fail("federation", "section missing (federation_bench not run)")
+    else:
+        peer = federation["peer_speedup"]
+        if peer < MIN_PEER_SPEEDUP:
+            fail(
+                "federation",
+                f"warm-peer read speedup {peer}x over cold base "
+                f"< required {MIN_PEER_SPEEDUP}x",
+            )
+        hits = federation["peer_hits"]
+        if federation.get("warm_torn_reads", 0) or hits <= 0:
+            fail(
+                "federation",
+                f"warm run not served from peers: hits={hits} "
+                f"torn={federation.get('warm_torn_reads', 0)}",
+            )
+        if federation["fault_torn_reads"]:
+            fail(
+                "federation",
+                f"peer death mid-pull returned corrupted reads: "
+                f"{federation['fault_torn_reads']} files",
+            )
+        if federation["fault_cache_residue"]:
+            fail(
+                "federation",
+                f"peer death mid-pull leaked partial/tmp files: "
+                f"{federation['fault_cache_residue']}",
+            )
+        if federation["fault_fallbacks"] <= 0:
+            fail(
+                "federation",
+                "fault run recorded no peer_fallbacks "
+                "(injection did not reach the pull path)",
             )
 
     if baseline is not None:
@@ -205,9 +272,10 @@ def check(current: dict, baseline: dict | None) -> list[str]:
                 continue  # walk timings are the baseline being beaten
             b = _row(base_rows, r["name"])
             if b and r["us_per_call"] > ABS_TOLERANCE_X * b["us_per_call"]:
-                failures.append(
+                fail(
+                    "placement",
                     f"{r['name']}: {r['us_per_call']}us > "
-                    f"{ABS_TOLERANCE_X}x baseline {b['us_per_call']}us"
+                    f"{ABS_TOLERANCE_X}x baseline {b['us_per_call']}us",
                 )
         base_resolver = baseline.get("resolver")
         if resolver is not None and base_resolver is not None:
@@ -216,9 +284,10 @@ def check(current: dict, baseline: dict | None) -> list[str]:
                     continue  # seed timings are the baseline being beaten
                 b = _row(base_resolver["rows"], r["name"])
                 if b and r["us_per_call"] > ABS_TOLERANCE_X * b["us_per_call"]:
-                    failures.append(
+                    fail(
+                        "resolver",
                         f"{r['name']}: {r['us_per_call']}us > "
-                        f"{ABS_TOLERANCE_X}x baseline {b['us_per_call']}us"
+                        f"{ABS_TOLERANCE_X}x baseline {b['us_per_call']}us",
                     )
     return failures
 
@@ -226,7 +295,7 @@ def check(current: dict, baseline: dict | None) -> list[str]:
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: check_regression.py BENCH_pr6.json [baseline.json]")
+        print("usage: check_regression.py BENCH_pr7.json [baseline.json]")
         raise SystemExit(2)
     with open(argv[0]) as f:
         current = json.load(f)

@@ -1,0 +1,273 @@
+"""Cluster-federation benchmark: two "nodes", one shared base tier.
+
+The acceptance scenario of the federation PR: node A (a real forked
+process with its own ``SeaFS``) stages a working set into its node-local
+cache and publishes the locations in the shared registry; node B then
+reads the same working set. With federation on, B's opens resolve the
+keys to A's cache and pull them peer-to-peer instead of re-reading the
+cold base tier.
+
+Storage speeds are *modelled* so the measurement is
+hardware-independent and deterministic (same scheme as
+``readahead_bench``): an application read pays ``bytes / BW`` of its
+serving tier (slow PFS vs fast node-local cache), while peer pulls are
+paced by the engine's real token-bucket throttle via the ``peer->*``
+bandwidth-cap pair. Three gates:
+
+* **Warm-peer speedup** — B reading the A-staged working set must be
+  >= 2x faster than the identical cold-from-base run (same config, same
+  caps, empty registry).
+* **Fault tolerance** — with every peer pull killed mid-transfer
+  (``TransferEngine.chunk_hook`` raising ``EIO``), every read must
+  still return bit-exact content from the base tier, with zero partial
+  or ``.sea_tmp`` files left in the puller's cache.
+* **Accounting** — the warm run serves every file from a peer
+  (``peer_hits == N``), the fault run records a fallback per failed
+  candidate (``peer_fallbacks >= N``).
+
+``PYTHONPATH=src python -m benchmarks.federation_bench [--json PATH]``
+prints the same ``name,value,derived`` CSV as the other benches;
+``--json`` dumps rows + derived ratios for ``benchmarks.check_regression``.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import multiprocessing as mp
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+from repro.core import SeaConfig, SeaFS, TierSpec
+from repro.core.ledger import LEDGER_DIRNAME
+
+_N_FILES = 24
+_FILE_BYTES = 1 << 20        # working-set file size
+_APP_CHUNK = 256 << 10       # application read granularity
+_BW_PFS = 16e6               # modelled cold base-tier app-read bandwidth
+_BW_CACHE = 512e6            # modelled node-local cache app-read bandwidth
+_BW_PEER = 256e6             # peer-pull stream cap (token-bucket, real)
+_MIN_PEER_SPEEDUP = 2.0
+
+_ctx = mp.get_context("fork")
+
+
+def _key(i: int) -> str:
+    return f"ws_{i:05d}.bin"
+
+
+def _config(workdir: str, node: str, cache_dir: str) -> SeaConfig:
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(name="cache", roots=(os.path.join(workdir, cache_dir),)),
+            TierSpec(
+                name="pfs", roots=(os.path.join(workdir, "pfs"),), persistent=True
+            ),
+        ],
+        max_file_size=2 * _FILE_BYTES,
+        readahead=False,
+        shared_ledger=True,
+        ledger_reconcile_interval_s=1e9,
+        federation=True,
+        federation_node=node,
+        federation_heartbeat_s=1.0,
+        federation_node_ttl_s=120.0,  # nodes here are processes, not hosts
+        transfer_retries=0,           # a killed pull fails over, not retries
+        transfer_bandwidth_caps={"peer->*": _BW_PEER},
+    )
+
+
+def _seed_working_set(workdir: str) -> dict[str, str]:
+    root = os.path.join(workdir, "pfs")
+    os.makedirs(root, exist_ok=True)
+    digests: dict[str, str] = {}
+    for i in range(_N_FILES):
+        blob = os.urandom(_FILE_BYTES)
+        with open(os.path.join(root, _key(i)), "wb") as f:
+            f.write(blob)
+        digests[_key(i)] = hashlib.sha256(blob).hexdigest()
+    return digests
+
+
+def _sibling_node(workdir: str, staged_ev, done_ev) -> None:
+    """Node A: stage + publish the working set, then stay alive (the
+    registry's same-host liveness probe is the pid) until released."""
+    fs = SeaFS(_config(workdir, "node-a", "cacheA"))
+    try:
+        for i in range(_N_FILES):
+            fs.stage_to_cache(_key(i))
+        staged_ev.set()
+        done_ev.wait(timeout=600)
+    finally:
+        fs.transfer.close()
+
+
+def _paced_read_all(fs: SeaFS) -> tuple[float, dict[str, str]]:
+    """Read the whole working set at _APP_CHUNK granularity, sleeping
+    out the modelled bandwidth of each file's serving tier."""
+    digests: dict[str, str] = {}
+    t0 = time.perf_counter()
+    for i in range(_N_FILES):
+        p = os.path.join(fs.mount, _key(i))
+        with fs.open(p, "rb") as f:
+            bw = _BW_PFS if f.sea_tier == "pfs" else _BW_CACHE
+            h = hashlib.sha256()
+            while True:
+                chunk = f.read(_APP_CHUNK)
+                if not chunk:
+                    break
+                h.update(chunk)
+                time.sleep(len(chunk) / bw)
+            digests[_key(i)] = h.hexdigest()
+    return time.perf_counter() - t0, digests
+
+
+def _cache_residue(workdir: str, cache_dir: str) -> list[str]:
+    """Any file at all under a fault-injected puller's cache root is a
+    leak: either a torn committed copy or an orphaned staging tmp."""
+    residue: list[str] = []
+    root = os.path.join(workdir, cache_dir)
+    for dirpath, dirnames, files in os.walk(root):
+        if LEDGER_DIRNAME in dirnames:
+            dirnames.remove(LEDGER_DIRNAME)
+        residue.extend(os.path.join(dirpath, fn) for fn in files)
+    return residue
+
+
+def bench_federation(workdir: str) -> tuple[list[dict], dict]:
+    expected = _seed_working_set(workdir)
+
+    # -- cold: fresh node, empty registry, reads paced at base bandwidth
+    fs_cold = SeaFS(_config(workdir, "node-b-cold", "cacheCold"))
+    cold_s, cold_digests = _paced_read_all(fs_cold)
+    fs_cold.transfer.close()
+    if cold_digests != expected:
+        raise RuntimeError("cold run returned corrupt data")
+
+    # -- node A stages + publishes, then idles as a live peer
+    staged_ev = _ctx.Event()
+    done_ev = _ctx.Event()
+    sibling = _ctx.Process(
+        target=_sibling_node, args=(workdir, staged_ev, done_ev)
+    )
+    sibling.start()
+    try:
+        if not staged_ev.wait(timeout=300):
+            raise RuntimeError("sibling node failed to stage working set")
+
+        # -- warm: same config/caps; opens should pull from node A
+        fs_warm = SeaFS(_config(workdir, "node-b-warm", "cacheWarm"))
+        warm_s, warm_digests = _paced_read_all(fs_warm)
+        warm_snap = fs_warm.telemetry.snapshot()
+        fs_warm.transfer.close()
+
+        # -- fault: every peer pull dies mid-transfer; reads must fall
+        #    back to base, bit-exact, leaving no partials behind
+        fs_fault = SeaFS(_config(workdir, "node-b-fault", "cacheFault"))
+
+        def _kill_pull(copied: int, total: int, dst: str) -> None:
+            raise OSError(5, "injected peer death", dst)
+
+        fs_fault.transfer.chunk_hook = _kill_pull
+        _fault_s, fault_digests = _paced_read_all(fs_fault)
+        fault_snap = fs_fault.telemetry.snapshot()
+        fs_fault.transfer.close()
+    finally:
+        done_ev.set()
+        sibling.join(timeout=60)
+        if sibling.is_alive():
+            sibling.terminate()
+    if sibling.exitcode != 0:
+        raise RuntimeError("sibling node crashed")
+
+    residue = _cache_residue(workdir, "cacheFault")
+    derived = {
+        "cold_s": round(cold_s, 3),
+        "warm_s": round(warm_s, 3),
+        "peer_speedup": round(cold_s / warm_s, 2),
+        "peer_hits": warm_snap["peer_hits"],
+        "peer_pull_bytes": warm_snap["peer_pull_bytes"],
+        "warm_torn_reads": sum(
+            1 for k, d in warm_digests.items() if expected[k] != d
+        ),
+        "fault_fallbacks": fault_snap["peer_fallbacks"],
+        "fault_torn_reads": sum(
+            1 for k, d in fault_digests.items() if expected[k] != d
+        ),
+        "fault_cache_residue": len(residue),
+    }
+    rows = [
+        {
+            "name": f"fed_cold_base_{_N_FILES}x{_FILE_BYTES >> 20}MiB",
+            "value": round(cold_s * 1e6 / _N_FILES, 2),
+            "derived": "us_per_file federation-cold",
+        },
+        {
+            "name": f"fed_warm_peer_{_N_FILES}x{_FILE_BYTES >> 20}MiB",
+            "value": round(warm_s * 1e6 / _N_FILES, 2),
+            "derived": (
+                f"us_per_file peer_hits={derived['peer_hits']}"
+                f" speedup={derived['peer_speedup']}x"
+            ),
+        },
+        {
+            "name": "fed_fault_peer_death",
+            "value": derived["fault_fallbacks"],
+            "derived": (
+                f"fallbacks torn={derived['fault_torn_reads']}"
+                f" residue={derived['fault_cache_residue']}"
+            ),
+        },
+    ]
+    return rows, derived
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        if argv.index("--json") + 1 >= len(argv):
+            print("usage: federation_bench [--json PATH]")
+            raise SystemExit(2)
+        json_path = argv[argv.index("--json") + 1]
+
+    workdir = tempfile.mkdtemp(prefix="sea_federation_bench_")
+    try:
+        print("name,value,derived")
+        rows, derived = bench_federation(workdir)
+        for row in rows:
+            print(f"{row['name']},{row['value']},{row['derived']}")
+        print(
+            f"acceptance_peer_speedup,{derived['peer_speedup']},"
+            f">={_MIN_PEER_SPEEDUP}x_required"
+        )
+        print(
+            f"acceptance_peer_hits,{derived['peer_hits']},=={_N_FILES}_required"
+        )
+        print(
+            f"acceptance_fault_clean,"
+            f"{derived['fault_torn_reads'] + derived['fault_cache_residue']},"
+            f"==0_required"
+        )
+        ok = (
+            derived["peer_speedup"] >= _MIN_PEER_SPEEDUP
+            and derived["peer_hits"] == _N_FILES
+            and derived["warm_torn_reads"] == 0
+            and derived["fault_torn_reads"] == 0
+            and derived["fault_cache_residue"] == 0
+            and derived["fault_fallbacks"] >= _N_FILES
+        )
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump({"rows": rows, **derived}, f, indent=2)
+        raise SystemExit(0 if ok else 1)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

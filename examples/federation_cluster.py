@@ -1,0 +1,94 @@
+"""Two Sea "nodes" federating their caches over one shared base tier.
+
+Demonstrates `SeaConfig(federation=True)`: each node (a real forked
+process here, standing in for a cluster node) has its *own* cache root
+but shares the base tier. Node A writes a working set and publishes the
+cache locations in the shared registry
+(`<base>/.sea_ledger/federation/`); node B's reads then resolve to A's
+cache and pull peer-to-peer — throttled under the `"peer->*"` bandwidth
+cap — instead of hitting the base filesystem. The registry is advisory:
+kill node A and B's reads silently fall back to the base tier.
+
+    PYTHONPATH=src python examples/federation_cluster.py
+"""
+
+import multiprocessing as mp
+import os
+import shutil
+import tempfile
+
+from repro.core import SeaConfig, SeaFS, TierSpec
+
+N_FILES = 8
+F = 1 << 18  # 256 KiB working-set files
+
+_ctx = mp.get_context("fork")
+
+
+def make_config(workdir: str, node: str) -> SeaConfig:
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            # per-node cache: every node gets its own root...
+            TierSpec(
+                name="cache",
+                roots=(os.path.join(workdir, f"cache_{node}"),),
+            ),
+            # ...but the persistent base tier is shared cluster-wide
+            TierSpec(
+                name="pfs", roots=(os.path.join(workdir, "pfs"),), persistent=True
+            ),
+        ],
+        max_file_size=F,
+        shared_ledger=True,          # the registry extends its machinery
+        federation=True,
+        federation_node=node,
+        transfer_bandwidth_caps={"peer->*": 512e6},
+    )
+
+
+def node_a(workdir: str, staged_ev, done_ev) -> None:
+    fs = SeaFS(make_config(workdir, "node-a"))
+    for i in range(N_FILES):
+        p = os.path.join(fs.mount, f"shard_{i:03d}.npy")
+        with fs.open(p, "wb") as f:
+            f.write(os.urandom(F))  # committed to cache_A + published
+    print(f"node-a (pid {os.getpid()}): staged {N_FILES} shards, "
+          f"holders={sorted(fs.federation.holders('shard_000.npy'))}")
+    staged_ev.set()
+    done_ev.wait(timeout=60)  # stay alive: liveness = heartbeat + pid
+    fs.transfer.close()
+
+
+def node_b(workdir: str) -> None:
+    fs = SeaFS(make_config(workdir, "node-b"))
+    for i in range(N_FILES):
+        p = os.path.join(fs.mount, f"shard_{i:03d}.npy")
+        with fs.open(p, "rb") as f:
+            assert len(f.read()) == F
+    snap = fs.telemetry.snapshot()
+    print(f"node-b (pid {os.getpid()}): peer_hits={snap['peer_hits']} "
+          f"peer_pull_bytes={snap['peer_pull_bytes']} "
+          f"peer_fallbacks={snap['peer_fallbacks']}")
+    assert snap["peer_hits"] == N_FILES
+    fs.federation.retire()  # clean exit: unpublish + leave the cluster
+    fs.transfer.close()
+
+
+def main() -> None:
+    workdir = tempfile.mkdtemp(prefix="sea_federation_")
+    try:
+        staged_ev, done_ev = _ctx.Event(), _ctx.Event()
+        a = _ctx.Process(target=node_a, args=(workdir, staged_ev, done_ev))
+        a.start()
+        if not staged_ev.wait(timeout=60):
+            raise RuntimeError("node-a failed to stage")
+        node_b(workdir)  # every read arrives via a peer pull from node A
+        done_ev.set()
+        a.join(timeout=60)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,12 +11,14 @@ Public surface:
     Mode / CompiledRules      copy / remove / move / keep (Table 1)
     TransferEngine            data plane: chunked, atomic tier-to-tier copies
     ExtentStore / ExtentMap   block-granular partial replicas (extent plane)
+    FederationRegistry        cluster cache federation (peer-aware placement)
     perf model                ``repro.core.model`` (Eqs. 1–11)
     simulator                 ``repro.core.simulator`` (paper-scale experiments)
 """
 
 from .config import SeaConfig, default_local_config
 from .extents import PART_SUFFIX, ExtentMap, ExtentStore
+from .federation import FederationRegistry
 from .flusher import Flusher, Sea
 from .intercept import SeaMount
 from .ledger import CapacityLedger, Reservation
@@ -42,6 +44,7 @@ __all__ = [
     "ExtentMap",
     "ExtentStore",
     "PART_SUFFIX",
+    "FederationRegistry",
     "Flusher",
     "Sea",
     "SeaMount",

@@ -71,6 +71,20 @@ class SeaConfig:
                                         # each root + single-flusher election
     leader_heartbeat_s: float = 0.5     # flush-leader heartbeat period; follower
                                         # takeover within 2 missed heartbeats
+    #: cluster-scale cache federation (peer-aware miss resolution:
+    #: local hit -> peer hit -> base fallback; registry on the base tier)
+    federation: bool = False            # publish cache replicas to the shared
+                                        # key-location registry and pull
+                                        # peer->cache on a local miss
+                                        # (requires shared_ledger=True)
+    federation_node: str = ""           # this node's registry identity
+                                        # ("" = "<host>-<pid>")
+    federation_heartbeat_s: float = 1.0  # membership heartbeat period
+    federation_node_ttl_s: float = 10.0  # cross-host liveness window: a node
+                                         # whose heartbeat is older is dead
+                                         # and its entries expire on reconcile
+                                         # (same-host death is caught
+                                         # immediately by the PID probe)
     #: adaptive read path (predictive readahead + open fast path)
     readahead: bool = False             # access-pattern-driven speculative
                                         # staging base->cache (beyond-paper)
@@ -140,6 +154,14 @@ class SeaConfig:
             raise ValueError("extent_map requires transfer_engine=True")
         if self.shared_ledger and not self.capacity_ledger:
             raise ValueError("shared_ledger requires capacity_ledger=True")
+        if self.federation and not self.shared_ledger:
+            raise ValueError("federation requires shared_ledger=True")
+        if self.federation_heartbeat_s <= 0:
+            raise ValueError("federation_heartbeat_s must be positive")
+        if self.federation_node_ttl_s <= self.federation_heartbeat_s:
+            raise ValueError(
+                "federation_node_ttl_s must exceed federation_heartbeat_s"
+            )
 
     # -- presets (paper §3.1.1: "two main modes based on flushing spec") ----
     def in_memory(self, final_globs: tuple[str, ...]) -> "SeaConfig":
@@ -240,6 +262,10 @@ class SeaConfig:
             ),
             shared_ledger=sea.getboolean("shared_ledger", False),
             leader_heartbeat_s=sea.getfloat("leader_heartbeat_s", 0.5),
+            federation=sea.getboolean("federation", False),
+            federation_node=sea.get("federation_node", ""),
+            federation_heartbeat_s=sea.getfloat("federation_heartbeat_s", 1.0),
+            federation_node_ttl_s=sea.getfloat("federation_node_ttl_s", 10.0),
             transfer_engine=sea.getboolean("transfer_engine", True),
             transfer_workers=sea.getint("transfer_workers", 4),
             transfer_chunk_bytes=sea.getint("transfer_chunk_bytes", 32 << 20),
@@ -276,6 +302,8 @@ class SeaConfig:
             max_file_size=int(env.get("SEA_MAX_FILE_SIZE", 1 << 20)),
             n_procs=int(env.get("SEA_NPROCS", "1")),
             shared_ledger=env.get("SEA_SHARED_LEDGER", "0") not in ("0", "", "false"),
+            federation=env.get("SEA_FEDERATION", "0") not in ("0", "", "false"),
+            federation_node=env.get("SEA_FEDERATION_NODE", ""),
             resolver_cache=env.get("SEA_RESOLVER_CACHE", "1")
             not in ("0", "", "false"),
             readahead=env.get("SEA_READAHEAD", "0") not in ("0", "", "false"),

@@ -1,0 +1,591 @@
+"""Cluster-scale cache federation: node membership + key-location registry.
+
+Every Sea node's cache is an island in the paper's design: a read miss
+streams cold from the base (Lustre) tier even when a sibling node staged
+the same key seconds ago. This module federates the caches — a small
+registry on the *shared base tier* records which node holds which key, so
+a local miss can resolve cluster-wide (local hit → peer hit → base
+fallback) and pull peer→cache instead of base→cache when the peer link is
+the cheaper path.
+
+The registry extends :mod:`repro.core.shared_ledger`'s journal machinery
+host→cluster — the same patterns solve the same problems one level up:
+
+* **Append-compact location journal** (``locations``): header
+  ``SEAFED1 <generation> <reconcile_ts>`` followed by
+  ``W <size> <quoted-node> <quoted-root> <quoted-key>`` (node holds a
+  cache replica of key under root) and ``D <quoted-node> <quoted-key>``
+  records. Mutations append one record under an exclusive ``fcntl``
+  lock; readers replay only the unseen suffix (byte-offset tracked), so
+  steady-state cost is O(1) per operation. Past a few multiples of the
+  live-entry count the journal is compacted in place (generation bump —
+  peers detect it and reload). A torn trailing record is repaired by
+  truncating to the last complete line, exactly like the capacity
+  journal.
+* **Per-node heartbeat files** (``nodes/<node>.json``, written
+  tmp + ``os.replace``): the cluster analogue of the reservation
+  markers' dead-owner detection. On the same host a dead node is caught
+  immediately by the signal-0 PID probe; across hosts (where PIDs mean
+  nothing) staleness of the heartbeat timestamp is the liveness signal.
+* **Reconcile expiry**: entries of dead/departed nodes are expired on
+  :meth:`reconcile` (triggered lazily once the shared ``reconcile_ts``
+  ages past the node TTL), so a crashed node's registry residue
+  disappears within one TTL instead of forever poisoning lookups.
+
+The registry is **advisory**: correctness always comes from the base
+fallback. A stale entry (peer evicted or died mid-pull) costs one failed
+copy attempt, after which the caller expunges the entry and falls back —
+it can never produce a wrong read, a partial file, or a leaked
+reservation (the transfer engine's atomic-commit contract covers the
+pull path).
+
+Store layout (on the shared base tier)::
+
+    <base_root>/.sea_ledger/federation/locations       location journal
+    <base_root>/.sea_ledger/federation/nodes/<n>.json  per-node heartbeat
+"""
+
+from __future__ import annotations
+
+import fcntl
+import json
+import os
+import socket
+import threading
+import time
+from contextlib import contextmanager
+from urllib.parse import quote, unquote
+
+from .ledger import LEDGER_DIRNAME
+from .shared_ledger import pid_alive
+
+_MAGIC = "SEAFED1"
+_FED_DIRNAME = "federation"
+_NODES_DIRNAME = "nodes"
+_JOURNAL_NAME = "locations"
+_HB_SUFFIX = ".json"
+
+_HOST = (socket.gethostname() or "localhost").replace(".", "-") or "localhost"
+
+
+def default_node_name() -> str:
+    """Stable-for-the-process default node identity. Host + PID: every Sea
+    instance owns its own cache roots, so on a multi-process node each
+    instance is its own federation "node" (their replicas are distinct
+    resources a peer can pull)."""
+    return f"{_HOST}-{os.getpid()}"
+
+
+class _FedAccount:
+    """Per-journal, per-process replica of the registry state.
+
+    Like :class:`~repro.core.shared_ledger._SharedAccount`: POSIX fcntl
+    locks are owned per (process, inode), so accounts live in a
+    process-global registry keyed by the journal's realpath — every
+    FederationRegistry in the process shares one fd and one thread lock
+    per journal.
+    """
+
+    __slots__ = (
+        "lock",
+        "fd",
+        "loaded",
+        "entries",
+        "generation",
+        "offset",
+        "lines",
+        "reconcile_ts",
+        "synced_at",
+    )
+
+    def __init__(self):
+        self.lock = threading.Lock()
+        self.fd: int | None = None
+        self.loaded = False
+        #: key -> {node: (cache_root, size)}
+        self.entries: dict[str, dict[str, tuple[str, int]]] = {}
+        self.generation = 0
+        self.offset = 0          # bytes of journal replayed so far
+        self.lines = 0           # records since last compaction
+        self.reconcile_ts = 0.0  # shared wall-clock; 0 = never reconciled
+        self.synced_at = 0.0     # monotonic time of the last journal sync
+
+
+_FED_ACCOUNTS: dict[str, _FedAccount] = {}
+_FED_ACCOUNTS_LOCK = threading.Lock()
+
+
+def _global_account(journal_path: str) -> _FedAccount:
+    key = os.path.realpath(journal_path)
+    acct = _FED_ACCOUNTS.get(key)
+    if acct is None:
+        with _FED_ACCOUNTS_LOCK:
+            acct = _FED_ACCOUNTS.setdefault(key, _FedAccount())
+    return acct
+
+
+class FederationRegistry:
+    """Node membership + key→node location registry for one cluster
+    (= one shared base root). All public mutation/lookup methods are
+    best-effort and never raise on registry I/O errors — the registry is
+    an accelerator; the base tier remains the source of truth."""
+
+    def __init__(
+        self,
+        base_root: str,
+        node: str | None = None,
+        *,
+        heartbeat_s: float = 1.0,
+        node_ttl_s: float = 10.0,
+        telemetry=None,
+        compact_min_records: int = 512,
+        nodes_cache_s: float = 0.25,
+    ):
+        self.base_root = base_root
+        self.node = node or default_node_name()
+        self.heartbeat_s = float(heartbeat_s)
+        self.node_ttl_s = float(node_ttl_s)
+        self.telemetry = telemetry
+        self.compact_min_records = compact_min_records
+        self._dir = os.path.join(base_root, LEDGER_DIRNAME, _FED_DIRNAME)
+        self._nodes_dir = os.path.join(self._dir, _NODES_DIRNAME)
+        self._journal_path = os.path.join(self._dir, _JOURNAL_NAME)
+        self._last_hb = 0.0          # monotonic time of our last heartbeat
+        self._nodes_cache: tuple[float, dict] = (0.0, {})
+        self._nodes_cache_s = float(nodes_cache_s)
+        self._cache_lock = threading.Lock()
+        # join the cluster: the heartbeat must exist before the first
+        # publish, or a reconcile could expire our fresh entries as
+        # belonging to an unknown node
+        self.heartbeat()
+
+    # -- heartbeats (membership) --------------------------------------------
+    def _hb_path(self, node: str) -> str:
+        return os.path.join(self._nodes_dir, quote(node, safe="") + _HB_SUFFIX)
+
+    def heartbeat(self) -> None:
+        """Refresh this node's membership record (tmp + ``os.replace``,
+        the flusher-heartbeat pattern — readers never see a torn file)."""
+        os.makedirs(self._nodes_dir, exist_ok=True)
+        path = self._hb_path(self.node)
+        tmp = f"{path}.{os.getpid()}.tmp"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(
+                    {
+                        "node": self.node,
+                        "host": _HOST,
+                        "pid": os.getpid(),
+                        "ts": time.time(),
+                    },
+                    f,
+                )
+            os.replace(tmp, path)
+        except OSError:
+            return
+        self._last_hb = time.monotonic()
+
+    def maybe_heartbeat(self) -> None:
+        """Heartbeat when the last one is older than ``heartbeat_s``.
+        Called from the paths that touch the registry anyway (publish,
+        lookup) and from the flusher's coordination loop — no dedicated
+        thread needed."""
+        if time.monotonic() - self._last_hb >= self.heartbeat_s:
+            self.heartbeat()
+
+    def _read_nodes(self) -> dict[str, dict]:
+        """All heartbeat records, cached briefly (a cold-miss storm must
+        not re-read O(nodes) files per lookup)."""
+        with self._cache_lock:
+            ts, cached = self._nodes_cache
+            if time.monotonic() - ts < self._nodes_cache_s:
+                return cached
+        infos: dict[str, dict] = {}
+        try:
+            names = os.listdir(self._nodes_dir)
+        except OSError:
+            names = []
+        for fn in names:
+            if not fn.endswith(_HB_SUFFIX):
+                continue
+            try:
+                with open(os.path.join(self._nodes_dir, fn)) as f:
+                    info = json.load(f)
+            except (OSError, ValueError):
+                continue
+            if isinstance(info, dict) and "node" in info:
+                infos[str(info["node"])] = info
+        with self._cache_lock:
+            self._nodes_cache = (time.monotonic(), infos)
+        return infos
+
+    def _node_alive(self, info: dict, now: float) -> bool:
+        """Cross-host liveness: heartbeat freshness within the TTL.
+        Same-host: the signal-0 PID probe is authoritative (dead-owner
+        detection, as for reservation markers) — it both catches a crash
+        before the TTL elapses and keeps a live-but-quiet node alive."""
+        try:
+            pid = int(info.get("pid", 0))
+            ts = float(info.get("ts", 0.0))
+        except (TypeError, ValueError):
+            return False
+        if info.get("host") == _HOST:
+            return pid_alive(pid)
+        return (now - ts) <= self.node_ttl_s
+
+    def live_nodes(self) -> dict[str, dict]:
+        """Currently-live members (by heartbeat/PID evidence)."""
+        now = time.time()
+        return {
+            n: info
+            for n, info in self._read_nodes().items()
+            if self._node_alive(info, now)
+        }
+
+    # -- journal plumbing (the shared_ledger pattern, one journal) ----------
+    def _account(self) -> _FedAccount:
+        return _global_account(self._journal_path)
+
+    @contextmanager
+    def _locked(self):
+        """Thread lock + exclusive fcntl lock on the location journal,
+        with the inode recheck that survives a wipe-replaced journal."""
+        acct = self._account()
+        with acct.lock:
+            while True:
+                if acct.fd is None:
+                    os.makedirs(self._dir, exist_ok=True)
+                    acct.fd = os.open(
+                        self._journal_path, os.O_RDWR | os.O_CREAT, 0o644
+                    )
+                    acct.loaded = False
+                fcntl.lockf(acct.fd, fcntl.LOCK_EX)
+                try:
+                    ino = os.stat(self._journal_path).st_ino
+                except FileNotFoundError:
+                    ino = -1
+                if ino == os.fstat(acct.fd).st_ino:
+                    break
+                fcntl.lockf(acct.fd, fcntl.LOCK_UN)
+                os.close(acct.fd)
+                acct.fd = None
+            try:
+                yield acct
+            finally:
+                fcntl.lockf(acct.fd, fcntl.LOCK_UN)
+
+    def _sync(self, acct: _FedAccount) -> None:
+        size = os.fstat(acct.fd).st_size
+        if size == 0:
+            header = f"{_MAGIC} 1 0\n".encode()
+            os.pwrite(acct.fd, header, 0)
+            acct.loaded = True
+            acct.entries = {}
+            acct.generation = 1
+            acct.offset = len(header)
+            acct.lines = 0
+            acct.reconcile_ts = 0.0
+            acct.synced_at = time.monotonic()
+            return
+        if acct.loaded:
+            head = os.pread(acct.fd, 128, 0).split(b"\n", 1)[0]
+            if self._parse_header(head)[0] == acct.generation:
+                self._replay_from(acct, acct.offset, size)
+                acct.synced_at = time.monotonic()
+                return
+        self._reload(acct, size)
+        acct.synced_at = time.monotonic()
+
+    @staticmethod
+    def _parse_header(line: bytes) -> tuple[int, float]:
+        parts = line.decode("utf-8", "replace").split()
+        try:
+            if parts[0] != _MAGIC:
+                return -1, 0.0
+            return int(parts[1]), float(parts[2])
+        except (IndexError, ValueError):
+            return -1, 0.0
+
+    def _reload(self, acct: _FedAccount, size: int) -> None:
+        data = os.pread(acct.fd, size, 0)
+        nl = data.find(b"\n")
+        gen, ts = self._parse_header(data[:nl] if nl >= 0 else data)
+        if gen < 0:
+            # corrupt header: reset — the registry is advisory, losing it
+            # degrades to cold base reads, never to wrong data
+            os.ftruncate(acct.fd, 0)
+            self._sync(acct)
+            return
+        acct.generation = gen
+        acct.reconcile_ts = ts
+        acct.entries = {}
+        acct.lines = 0
+        acct.offset = nl + 1
+        acct.loaded = True
+        self._replay_from(acct, acct.offset, size)
+
+    def _replay_from(self, acct: _FedAccount, start: int, size: int) -> None:
+        if size <= start:
+            return
+        data = os.pread(acct.fd, size - start, start)
+        if not data.endswith(b"\n"):
+            # torn trailing record (writer died mid-append): truncate to
+            # the last complete line under the lock
+            cut = data.rfind(b"\n") + 1
+            os.ftruncate(acct.fd, start + cut)
+            data = data[:cut]
+        for line in data.decode("utf-8", "replace").splitlines():
+            self._apply(acct, line)
+            acct.lines += 1
+        acct.offset = start + len(data)
+
+    @staticmethod
+    def _apply(acct: _FedAccount, line: str) -> None:
+        if line.startswith("W "):
+            try:
+                _, sz, qnode, qroot, qkey = line.split(" ", 4)
+                nbytes = int(sz)
+            except ValueError:
+                return
+            key = unquote(qkey)
+            acct.entries.setdefault(key, {})[unquote(qnode)] = (
+                unquote(qroot),
+                nbytes,
+            )
+        elif line.startswith("D "):
+            try:
+                _, qnode, qkey = line.split(" ", 2)
+            except ValueError:
+                return
+            holders = acct.entries.get(unquote(qkey))
+            if holders is not None:
+                holders.pop(unquote(qnode), None)
+                if not holders:
+                    del acct.entries[unquote(qkey)]
+
+    def _append(self, acct: _FedAccount, line: str) -> None:
+        data = line.encode()
+        os.pwrite(acct.fd, data, acct.offset)
+        acct.offset += len(data)
+        acct.lines += 1
+        total = sum(len(h) for h in acct.entries.values())
+        if acct.lines > max(self.compact_min_records, 4 * total):
+            self._rewrite(acct)
+
+    def _rewrite(
+        self, acct: _FedAccount, reconcile_ts: float | None = None
+    ) -> None:
+        acct.generation += 1
+        if reconcile_ts is not None:
+            acct.reconcile_ts = reconcile_ts
+        buf = [f"{_MAGIC} {acct.generation} {acct.reconcile_ts}\n"]
+        for key, holders in acct.entries.items():
+            for node, (root, sz) in holders.items():
+                buf.append(
+                    f"W {sz} {quote(node, safe='')} {quote(root, safe='')} "
+                    f"{quote(key, safe='')}\n"
+                )
+        data = "".join(buf).encode()
+        os.ftruncate(acct.fd, 0)
+        os.pwrite(acct.fd, data, 0)
+        acct.offset = len(data)
+        acct.lines = 0
+
+    # -- publish / unpublish -------------------------------------------------
+    def publish(self, key: str, cache_root: str, nbytes: int) -> bool:
+        """Record that THIS node holds a cache replica of ``key`` under
+        ``cache_root`` (called on write commit / staging / peer pull)."""
+        self.maybe_heartbeat()
+        try:
+            with self._locked() as acct:
+                self._sync(acct)
+                acct.entries.setdefault(key, {})[self.node] = (
+                    cache_root,
+                    int(nbytes),
+                )
+                self._append(
+                    acct,
+                    f"W {int(nbytes)} {quote(self.node, safe='')} "
+                    f"{quote(cache_root, safe='')} {quote(key, safe='')}\n",
+                )
+            return True
+        except OSError:
+            return False
+
+    def unpublish(self, key: str) -> bool:
+        """Drop THIS node's entry for ``key`` (called on evict / remove /
+        overwrite-elsewhere). No-op when the node never published it."""
+        return self.expunge(key, self.node)
+
+    def expunge(self, key: str, node: str) -> bool:
+        """Drop ``node``'s entry for ``key``. Any member may expunge a
+        provably-stale entry (pull hit ENOENT: the replica is gone even
+        though the owner never logged the eviction — e.g. it crashed)."""
+        try:
+            with self._locked() as acct:
+                self._sync(acct)
+                holders = acct.entries.get(key)
+                if holders is None or node not in holders:
+                    return False
+                holders.pop(node, None)
+                if not holders:
+                    del acct.entries[key]
+                self._append(
+                    acct,
+                    f"D {quote(node, safe='')} {quote(key, safe='')}\n",
+                )
+            return True
+        except OSError:
+            return False
+
+    def unpublish_all(self) -> int:
+        """Drop every entry THIS node published (wipe/retire)."""
+        dropped = 0
+        try:
+            with self._locked() as acct:
+                self._sync(acct)
+                mine = [
+                    k
+                    for k, holders in acct.entries.items()
+                    if self.node in holders
+                ]
+                for key in mine:
+                    holders = acct.entries[key]
+                    holders.pop(self.node, None)
+                    if not holders:
+                        del acct.entries[key]
+                    self._append(
+                        acct,
+                        f"D {quote(self.node, safe='')} "
+                        f"{quote(key, safe='')}\n",
+                    )
+                    dropped += 1
+        except OSError:
+            pass
+        return dropped
+
+    # -- lookup (the peer resolution tier) -----------------------------------
+    def lookup(self, key: str) -> list[tuple[str, str, int]]:
+        """Live peers holding a cache replica of ``key``, as
+        ``(node, real_path, size)`` — self excluded, dead/stale nodes
+        skipped. Empty on any registry I/O error (callers fall back to
+        the base tier)."""
+        self.maybe_heartbeat()
+        self._maybe_reconcile()
+        try:
+            with self._locked() as acct:
+                self._sync(acct)
+                holders = dict(acct.entries.get(key, ()))
+        except OSError:
+            return []
+        if not holders:
+            return []
+        now = time.time()
+        infos = self._read_nodes()
+        out = []
+        for node in sorted(holders):
+            if node == self.node:
+                continue
+            info = infos.get(node)
+            if info is None or not self._node_alive(info, now):
+                continue
+            root, nbytes = holders[node]
+            out.append((node, os.path.join(root, key), nbytes))
+        return out
+
+    def holders(self, key: str) -> dict[str, tuple[str, int]]:
+        """Raw registry state for one key (tests/introspection): every
+        recorded holder, liveness NOT filtered."""
+        try:
+            with self._locked() as acct:
+                self._sync(acct)
+                return dict(acct.entries.get(key, ()))
+        except OSError:
+            return {}
+
+    # -- reconcile (dead-node expiry) ----------------------------------------
+    def _maybe_reconcile(self) -> None:
+        acct = self._account()
+        if not acct.loaded:
+            try:
+                with self._locked() as a:
+                    self._sync(a)
+            except OSError:
+                return
+        # reconcile_ts is shared through the journal header: one expiry
+        # pass by any member satisfies the bound for all of them
+        if (
+            acct.reconcile_ts
+            and (time.time() - acct.reconcile_ts) < self.node_ttl_s
+        ):
+            return
+        self.reconcile()
+
+    def reconcile(self) -> int:
+        """Expire the registry entries (and heartbeat files) of dead
+        nodes: stale heartbeat past the TTL, dead same-host PID, or no
+        heartbeat at all (a retired member). Returns entries expired."""
+        now = time.time()
+        # bypass the nodes cache: expiry decisions need fresh evidence
+        with self._cache_lock:
+            self._nodes_cache = (0.0, {})
+        infos = self._read_nodes()
+        dead = {
+            n for n, info in infos.items() if not self._node_alive(info, now)
+        }
+        expired = 0
+        try:
+            with self._locked() as acct:
+                self._sync(acct)
+                known = {
+                    node
+                    for holders in acct.entries.values()
+                    for node in holders
+                }
+                dead |= {n for n in known if n not in infos}
+                dead.discard(self.node)
+                if dead:
+                    for key in list(acct.entries):
+                        holders = acct.entries[key]
+                        for n in list(holders):
+                            if n in dead:
+                                del holders[n]
+                                expired += 1
+                        if not holders:
+                            del acct.entries[key]
+                self._rewrite(acct, reconcile_ts=now)
+        except OSError:
+            return expired
+        for n in dead:
+            try:
+                os.unlink(self._hb_path(n))
+            except OSError:
+                pass
+        return expired
+
+    def retire(self) -> None:
+        """Leave the cluster cleanly: drop every published entry and the
+        heartbeat, so peers stop considering this node immediately
+        instead of after a failed pull + TTL expiry."""
+        self.unpublish_all()
+        try:
+            os.unlink(self._hb_path(self.node))
+        except OSError:
+            pass
+
+    def snapshot(self) -> dict:
+        """Registry introspection: entry count per node + live members."""
+        per_node: dict[str, int] = {}
+        try:
+            with self._locked() as acct:
+                self._sync(acct)
+                for holders in acct.entries.values():
+                    for node in holders:
+                        per_node[node] = per_node.get(node, 0) + 1
+        except OSError:
+            pass
+        return {
+            "node": self.node,
+            "entries_by_node": per_node,
+            "live_nodes": sorted(self.live_nodes()),
+        }

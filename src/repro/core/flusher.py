@@ -200,6 +200,11 @@ class Flusher:
         take over once it goes stale (the fcntl lock is only obtainable
         after the leader process actually died, so trying early is safe)."""
         while not self._stop.wait(self._hb_interval / 2):
+            if self.fs.federation is not None:
+                # piggyback the cluster-membership heartbeat on the
+                # coordination tick (leader and follower alike: every
+                # instance is its own federation node)
+                self.fs.federation.maybe_heartbeat()
             if self.is_leader:
                 self._write_heartbeat()
                 self._drain_spool()
@@ -566,6 +571,7 @@ class Flusher:
             # one invalidation covers the move: the next resolve re-scans
             # and lands on the base copy (or nothing, for REMOVE mode)
             self.fs.resolver.invalidate(key)
+            self.fs._fed_unpublish(key)
             self.fs.telemetry.record_evict(nbytes)
         except OSError:
             pass
@@ -645,6 +651,14 @@ class Sea:
             self._started = False
             # stop the transfer pool too (it restarts lazily if reused)
             self.fs.transfer.close()
+        if self.fs.federation is not None:
+            # leave the cluster cleanly: nobody maintains our registry
+            # entries once this process exits, so drop them now instead
+            # of making peers burn a failed pull + TTL expiry on them
+            try:
+                self.fs.federation.retire()
+            except OSError:
+                pass
         if self.fs.config.shared_ledger:
             # leave this process's counters next to the shared store so the
             # workflow can aggregate telemetry across all its workers

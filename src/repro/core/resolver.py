@@ -132,6 +132,12 @@ class Resolver:
         #: cache, so resolve_extent serves even with ``enabled=False``
         self.extent_store = None
 
+        #: bound by SeaFS when cache federation is enabled — the third
+        #: resolution tier (local hit -> peer hit -> base fallback); like
+        #: extent maps, the registry is cluster state and serves even
+        #: with ``enabled=False``
+        self.federation = None
+
         # don't cache a directory whose mtime is this close to "now": a
         # same-mtime-tick mutation on a coarse-granularity filesystem
         # would otherwise be invisible to the signature check forever
@@ -291,6 +297,20 @@ class Resolver:
                 return None
             em.verified_at = now
         return em.tier, em.part_real
+
+    def resolve_peer(self, key: str) -> list[tuple[str, str, int]]:
+        """The third resolution tier (local hit -> **peer hit** -> base
+        fallback): live cluster peers holding a cache replica of ``key``,
+        as ``(node, real_path, size)`` candidates for a peer->cache pull.
+        Empty when federation is off or the registry is unreachable —
+        callers then fall through to the base tier. Peer entries are
+        advisory like everything else in the resolver: a stale candidate
+        costs one failed pull (the caller expunges it and falls back),
+        never a wrong read."""
+        fed = self.federation
+        if fed is None:
+            return []
+        return fed.lookup(key)
 
     def refresh(self, key: str) -> tuple[Tier, str] | None:
         """A caller's own operation hit ENOENT on a resolved path (the

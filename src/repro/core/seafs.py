@@ -21,6 +21,7 @@ from collections import defaultdict
 
 from .config import SeaConfig
 from .extents import PART_SUFFIX, ExtentStore, extent_token, punch_hole
+from .federation import FederationRegistry
 from .ledger import LEDGER_DIRNAME, TMP_SUFFIX, file_disk_usage
 from .lists import CompiledRules, Mode
 from .placement import PlacementPolicy
@@ -285,6 +286,21 @@ class SeaFS:
             else None
         )
         self.resolver.extent_store = self.extents
+        # cluster-scale cache federation (opt-in): publish cache replicas
+        # to the shared registry on the base tier and pull peer->cache on
+        # a local miss (third resolution tier: local -> peer -> base)
+        self.federation: FederationRegistry | None = (
+            FederationRegistry(
+                self.hierarchy.base.roots[0],
+                config.federation_node or None,
+                heartbeat_s=config.federation_heartbeat_s,
+                node_ttl_s=config.federation_node_ttl_s,
+                telemetry=self.telemetry,
+            )
+            if getattr(config, "federation", False)
+            else None
+        )
+        self.resolver.federation = self.federation
         #: fd -> (key, tier, real) of open Sea write handles, so the
         #: ftruncate intercept can settle accounting for fd-only calls
         self._fd_index: dict[int, tuple[str, Tier, str]] = {}
@@ -448,6 +464,14 @@ class SeaFS:
                     # scan before declaring the miss — open() must never
                     # spuriously fail because of the cache
                     found = self.resolver.resolve(key, ignore_negative=True)
+                if self.federation is not None and (
+                    found is None or found[0].persistent
+                ):
+                    # third resolution tier: a key staged on a live peer
+                    # is pulled peer->cache instead of read cold from base
+                    pulled = self._pull_from_peer(key)
+                    if pulled is not None:
+                        found = pulled
                 if found is None:
                     return self._open_base_miss(key, mode, **kw)
                 tier, real = found
@@ -557,6 +581,71 @@ class SeaFS:
             os.path.join(self.hierarchy.base.roots[0], key), mode, **kw
         )
 
+    # -- federation (peer-aware miss resolution) -----------------------------
+    def _fed_publish(self, key: str, root: str, nbytes: int) -> None:
+        """Advertise a cache replica to the cluster registry (no-op when
+        federation is off; best-effort — registry failures never fail the
+        data path)."""
+        if self.federation is not None:
+            self.federation.publish(key, root, nbytes)
+
+    def _fed_unpublish(self, key: str) -> None:
+        if self.federation is not None:
+            self.federation.unpublish(key)
+
+    def _fed_republish(self, key: str, tier: Tier, real: str) -> None:
+        """Re-advertise ``key`` after a mutation landed at ``real``: cache
+        destinations publish the new replica (new size), persistent ones
+        just drop this node's stale entry."""
+        if self.federation is None:
+            return
+        root = tier.root_of(real) if not tier.persistent else None
+        if root is None:
+            self.federation.unpublish(key)
+            return
+        try:
+            nbytes = os.path.getsize(real)
+        except OSError:
+            self.federation.unpublish(key)
+            return
+        self.federation.publish(key, root, nbytes)
+
+    def _pull_from_peer(self, key: str) -> tuple[Tier, str] | None:
+        """Pull a live peer's cache replica of ``key`` into a local cache
+        tier (the peer-hit resolution tier). Called under the key lock.
+        Returns ``(tier, real)`` of the new local replica, or None — the
+        caller then falls through to whatever it already had (base
+        replica, or a genuine miss).
+
+        Degradation is always toward the base tier: a candidate whose
+        pull fails (peer died or evicted mid-pull — the engine's atomic
+        commit guarantees no partial file and no leaked reservation) is
+        expunged from the registry and the next candidate tried; a full
+        local cache skips the pull entirely rather than evicting for it."""
+        fed = self.federation
+        if fed is None:
+            return None
+        for node, src, size in self.resolver.resolve_peer(key):
+            choice = self.policy.select_cache_for_prefetch(size)
+            if choice is None:
+                return None  # no cache room: serve from base
+            ctier, croot = choice
+            dst = os.path.join(croot, key)
+            try:
+                os.makedirs(os.path.dirname(dst), exist_ok=True)
+                result = self.transfer.peer_pull(
+                    src, dst, dst_tier=ctier, dst_root=croot, key=key
+                )
+            except OSError:
+                self.telemetry.record_peer_fallback()
+                fed.expunge(key, node)
+                continue
+            self.resolver.note_location(key, ctier, dst)
+            fed.publish(key, croot, result.nbytes)
+            self.telemetry.record_peer_hit(result.nbytes)
+            return ctier, dst
+        return None
+
     def _on_close(
         self,
         key: str,
@@ -584,6 +673,8 @@ class SeaFS:
                 else:
                     self.policy.release_write(tier, reservation)
                 self.resolver.note_location(key, tier, real)
+                if root is not None and not tier.persistent:
+                    self._fed_publish(key, root, actual)
             self.telemetry.record_io(tier.name, written=max(nbytes, 0), seconds=dt)
         elif fast:
             # fast-path reads batch their I/O counters per thread — no
@@ -854,6 +945,7 @@ class SeaFS:
             self._drop_replicas(key, replicas=replicas)
             self._discard_extents(key)
             self.resolver.invalidate(key)
+            self._fed_unpublish(key)
 
     def rename(self, src: str, dst: str) -> None:
         s_in, d_in = self.is_sea_path(src), self.is_sea_path(dst)
@@ -885,16 +977,19 @@ class SeaFS:
                 self._discard_extents(dkey)
                 os.replace(real, dreal)
                 self.resolver.invalidate(skey)
+                self._fed_unpublish(skey)
                 sroot = tier.root_of(real)
                 if sroot is not None:
                     tier.note_removed(sroot, skey)
                 owner = self.hierarchy.owner_of(dreal)
+                self._fed_unpublish(dkey)
                 if owner is not None:
                     self.resolver.note_location(dkey, owner[0], dreal)
                     try:
-                        owner[0].note_written(
-                            owner[1], dkey, os.path.getsize(dreal)
-                        )
+                        nbytes = os.path.getsize(dreal)
+                        owner[0].note_written(owner[1], dkey, nbytes)
+                        if not owner[0].persistent:
+                            self._fed_publish(dkey, owner[1], nbytes)
                     except OSError:
                         pass
                 else:
@@ -933,6 +1028,7 @@ class SeaFS:
                 self._discard_extents(dkey)
                 self.resolver.invalidate(dkey)
                 self.resolver.note_location(dkey, dtier, rdst)
+                self._fed_republish(dkey, dtier, rdst)
             os.remove(src)
         else:
             skey = self.key_of(src)
@@ -1029,6 +1125,7 @@ class SeaFS:
                 self._discard_extents(dkey)
                 self.resolver.invalidate(dkey)
                 self.resolver.note_location(dkey, dtier, rdst)
+                self._fed_republish(dkey, dtier, rdst)
             finally:
                 for lk in reversed(locks):
                     lk.release()
@@ -1104,6 +1201,7 @@ class SeaFS:
                     os.remove(real)
                     vtier.note_removed(vroot, key)
                     self.resolver.invalidate(key)
+                    self._fed_unpublish(key)
                     self.telemetry.record_evict(nbytes)
                     freed_any = True
                 except OSError:
@@ -1173,6 +1271,7 @@ class SeaFS:
             # staging created a faster replica: point the index straight
             # at it
             self.resolver.note_location(key, ctier, dst)
+            self._fed_publish(key, croot, result.nbytes)
             self.telemetry.record_prefetch(result.nbytes)
             return result.nbytes
 
@@ -1410,6 +1509,7 @@ class SeaFS:
                     pass
             self.resolver.invalidate(key)
             self.resolver.note_location(key, tier, real)
+            self._fed_republish(key, tier, real)
 
     def ftruncate(self, fd: int, length: int) -> None:
         """``os.ftruncate`` for fds opened through SeaFS: the syscall,
@@ -1427,6 +1527,7 @@ class SeaFS:
                 tier.note_written(root, key, file_disk_usage(real))
             except OSError:
                 pass
+        self._fed_republish(key, tier, real)
 
     def persist(self, path: str) -> str:
         """Ensure a durable copy exists on the base (persistent) tier,
@@ -1472,6 +1573,9 @@ class SeaFS:
     def wipe(self) -> None:
         if self.extents is not None:
             self.extents.clear()  # on-disk parts/journals go with the roots
+        if self.federation is not None:
+            # peers must stop pulling from roots that are about to vanish
+            self.federation.unpublish_all()
         for tier in self.hierarchy:
             tier.wipe()
         self.resolver.invalidate_all()

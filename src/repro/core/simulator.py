@@ -114,6 +114,9 @@ class SimResult:
                                   # cold input byte (whole-file: after all of
                                   # F; extent plane: after one extent)
     extents_staged: int = 0       # extent-granular staging flows modelled
+    peer_hits: int = 0            # cold inputs served from a peer node's
+                                  # cache (federation) instead of Lustre
+    peer_pull_bytes: float = 0.0  # bytes moved over peer->node pull flows
 
 
 class _Node:
@@ -128,6 +131,8 @@ class _Node:
         self.flush_q: deque = deque()
         self.n_cached = 0        # files resident on this node's cache tiers
         self.readahead_q: deque = deque()  # speculative staging work
+        self.local_inputs: set = set()  # input file ids cached on this node
+                                        # (federation / shared-input model)
         self.ra_ready = 0        # staged blocks whose bytes have ARRIVED
                                  # (a worker may only consume these: the
                                  # model never serves a hit whose Lustre
@@ -169,6 +174,19 @@ class Simulator:
         extent_bytes: float = 0.0,           # modelled extent size (bytes);
                                              # <=0 or >=F degenerates to the
                                              # whole-file plane
+        federation: bool = False,            # cluster cache federation: a cold
+                                             # input already staged on a PEER
+                                             # node is pulled peer->node over
+                                             # the node NICs instead of read
+                                             # cold from Lustre
+        shared_input_files: int = 0,         # >0: block b's input is file
+                                             # b % shared_input_files (a shared
+                                             # working set); 0 = every block
+                                             # reads a distinct input (the
+                                             # paper's incrementation workload)
+        peer_stream_bw: float = 0.0,         # per-flow cap of one peer pull
+                                             # stream (0 = NIC-limited only),
+                                             # the "peer->*" engine cap
     ):
         assert system in ("lustre", "sea", "sea-flushall")
         self.cl = cluster
@@ -234,6 +252,16 @@ class Simulator:
         self.extent_map = bool(extent_map)
         self.extent_bytes = float(extent_bytes)
         self.extents_staged = 0
+        # Federation model: the first node to fetch a shared input becomes
+        # its registry owner; any other node's later read of the same file
+        # is a peer pull over (peer mem, peer NIC out, our NIC in) instead
+        # of a Lustre read — cache capacity scales with the cluster.
+        self.federation = bool(federation)
+        self.shared_input_files = int(shared_input_files)
+        self.peer_stream_bw = float(peer_stream_bw)
+        self.input_owner: dict[int, int] = {}
+        self.peer_hits = 0
+        self.peer_pull_bytes = 0.0
         self.ttfb_s: float | None = None
         self.now = 0.0
         self.nodes = [_Node(i, cluster) for i in range(cluster.c)]
@@ -329,16 +357,58 @@ class Simulator:
         w = self.w
         while True:
             try:
-                blocks.popleft()
+                bid = blocks.popleft()
             except IndexError:
                 return
+            # Shared-input model: block b's input file (None = distinct
+            # inputs, the paper's workload). With federation, a file some
+            # OTHER node already fetched resolves peer-hit: pulled over
+            # the peer's NIC instead of read cold from Lustre.
+            fid = (
+                bid % self.shared_input_files
+                if self.shared_input_files > 0 and self.system != "lustre"
+                else None
+            )
+            local_hit = fid is not None and fid in nd.local_inputs
+            peer = None
+            if fid is not None and self.federation and not local_hit:
+                owner = self.input_owner.get(fid)
+                if owner is not None and owner != nd.idx:
+                    peer = owner
             # initial read from Lustre (cold input): a Sea resolution pays
             # the full probe cascade — the file lives on the base tier.
             # With readahead, a hit is served from cache ONLY when a
             # background staging flow has already delivered the block
             # (ra_ready credit); otherwise the worker reads cold like the
             # predictor missing would in the real engine.
-            if self.system != "lustre" and self.readahead and nd.ra_ready > 0:
+            if local_hit:
+                # this node already holds the input: a repeat cached read
+                rcost = self.resolution_cost_s(repeat=True, resident="tmpfs")
+                if rcost > 0.0:
+                    yield ComputeOp(rcost)
+                self.bytes_by_tier["local_input_hit"] += w.F
+                yield ReadOp((f"mem_r{nd.idx}",), w.F)
+                if self.ttfb_s is None:
+                    self.ttfb_s = self.now
+            elif peer is not None:
+                # peer hit: pull the replica over (peer mem read, peer NIC
+                # out, our NIC in) — Lustre untouched. The pull stages a
+                # local replica, so this node serves it locally next time.
+                rcost = self.resolution_cost_s(repeat=False, resident="lustre")
+                if rcost > 0.0:
+                    yield ComputeOp(rcost)
+                self.peer_hits += 1
+                self.peer_pull_bytes += w.F
+                self.bytes_by_tier["peer"] += w.F
+                yield ReadOp(
+                    (f"mem_r{peer}", f"net_out{peer}", f"net_in{nd.idx}"),
+                    w.F,
+                    cap=self.peer_stream_bw,
+                )
+                if self.ttfb_s is None:
+                    self.ttfb_s = self.now
+                nd.local_inputs.add(fid)
+            elif self.system != "lustre" and self.readahead and nd.ra_ready > 0:
                 nd.ra_ready -= 1
                 rcost = self.resolution_cost_s(repeat=True, resident="tmpfs")
                 if rcost > 0.0:
@@ -348,6 +418,9 @@ class Simulator:
                 if blocks:  # no phantom staging once the work runs out
                     nd.readahead_q.append("lustre")
                 yield ReadOp((f"mem_r{nd.idx}",), w.F)
+                if fid is not None:
+                    nd.local_inputs.add(fid)
+                    self.input_owner.setdefault(fid, nd.idx)
             else:
                 if self.system != "lustre":
                     rcost = self.resolution_cost_s(
@@ -361,6 +434,12 @@ class Simulator:
                         # left = nothing to speculate on)
                         nd.readahead_q.append("lustre")
                 yield from self._cold_input_read(nd)
+                if fid is not None:
+                    # the cold fetch staged the input on this node: it is
+                    # now a local hit here and a peer-pull source for the
+                    # cluster (first fetcher = registry owner)
+                    nd.local_inputs.add(fid)
+                    self.input_owner.setdefault(fid, nd.idx)
             last_tier = None
             for i in range(1, w.n + 1):
                 if self.compute_s:
@@ -567,6 +646,8 @@ class Simulator:
             readahead_staged=self.readahead_staged,
             ttfb_s=self.ttfb_s if self.ttfb_s is not None else makespan,
             extents_staged=self.extents_staged,
+            peer_hits=self.peer_hits,
+            peer_pull_bytes=self.peer_pull_bytes,
         )
 
     def _has_flush_work(self) -> bool:

@@ -109,6 +109,10 @@ class Telemetry:
     extents_punched: int = 0        # staged extents evicted by punch-hole
     extent_punched_bytes: int = 0   # bytes those punches deallocated
     extent_promotions: int = 0      # part files completed -> whole replicas
+    peer_hits: int = 0              # local misses served by a peer's cache
+    peer_pull_bytes: int = 0        # bytes pulled peer->cache
+    peer_fallbacks: int = 0         # peer pulls that failed (peer died or
+                                    # evicted mid-pull) and fell back to base
     fastpath_opens: int = 0         # read opens served by the lock-free
                                     # fast path (base: folded dead threads)
     fastpath_redirect_hits: int = 0  # redirects taken on the fast path
@@ -258,6 +262,16 @@ class Telemetry:
         with self._lock:
             self.extent_promotions += 1
 
+    # -- federation (peer-aware miss resolution) -----------------------------
+    def record_peer_hit(self, nbytes: int) -> None:
+        with self._lock:
+            self.peer_hits += 1
+            self.peer_pull_bytes += nbytes
+
+    def record_peer_fallback(self) -> None:
+        with self._lock:
+            self.peer_fallbacks += 1
+
     # -- thread-batched fast-path counters ----------------------------------
     def local(self) -> ThreadCounters:
         """This thread's lock-free counter block (created and registered
@@ -335,6 +349,9 @@ class Telemetry:
                 "extents_punched": self.extents_punched,
                 "extent_punched_bytes": self.extent_punched_bytes,
                 "extent_promotions": self.extent_promotions,
+                "peer_hits": self.peer_hits,
+                "peer_pull_bytes": self.peer_pull_bytes,
+                "peer_fallbacks": self.peer_fallbacks,
                 "fastpath_opens": self.fastpath_opens,
                 "fastpath_redirect_hits": self.fastpath_redirect_hits,
             }

@@ -98,6 +98,11 @@ _HOST = (socket.gethostname() or "localhost").replace(".", "-") or "localhost"
 #: fresh (every chunk is a write), so age is a safe cross-node signal.
 ORPHAN_GRACE_S = 300.0
 
+#: source-side tier label of a federation peer pull — the bandwidth-cap
+#: pair becomes "peer-><cache tier>" (wildcards "peer->*" / "*" apply),
+#: so cluster pulls are throttled independently of local tier moves
+PEER_TIER = "peer"
+
 
 class TransferError(OSError):
     """A transfer failed after exhausting its retries."""
@@ -434,6 +439,41 @@ class TransferEngine:
             pair, nbytes=nbytes, seconds=seconds, retries=attempts - 1
         )
         return TransferResult(nbytes, seconds, attempts, impl)
+
+    def peer_pull(
+        self,
+        src: str,
+        dst: str,
+        *,
+        dst_tier: Tier,
+        dst_root: str,
+        key: str,
+        cancel: threading.Event | None = None,
+    ) -> TransferResult:
+        """Pull a peer node's cache replica into a local cache tier —
+        :meth:`copy` specialised to the federation path.
+
+        The source tier is the symbolic :data:`PEER_TIER` (the replica
+        lives in *another node's* hierarchy, which this engine has no
+        Tier object for), so throttling uses the ``"peer-><dst>"``
+        bandwidth-cap pair — cluster pulls get their own budget.
+        Admission is ``"require"``: a full cache root skips the pull
+        rather than evicting for it (the base fallback still serves).
+        All of :meth:`copy`'s failure guarantees apply — a peer that
+        dies or evicts mid-pull leaves no partial file, no leaked
+        reservation, and ``dst`` untouched; the caller falls back to
+        the base tier and expunges the registry entry."""
+        return self.copy(
+            src,
+            dst,
+            src_tier=PEER_TIER,
+            dst_tier=dst_tier,
+            dst_root=dst_root,
+            key=key,
+            admit="require",
+            preserve_stat=True,
+            cancel=cancel,
+        )
 
     def copy_range(
         self,

@@ -1,0 +1,76 @@
+"""Doc-drift gates: the config reference must cover the dataclass.
+
+``docs/CONFIG.md`` documents every ``SeaConfig`` field; this test
+introspects the dataclass so adding a knob without documenting it
+fails CI rather than rotting silently. The architecture doc and README
+are held to the weaker (but still load-bearing) invariant that the
+files they link to exist.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+import re
+
+import pytest
+
+from repro.core import SeaConfig
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def config_md() -> str:
+    p = REPO / "docs" / "CONFIG.md"
+    assert p.exists(), "docs/CONFIG.md is missing"
+    return p.read_text()
+
+
+def test_every_seaconfig_field_documented(config_md):
+    missing = [
+        f.name
+        for f in dataclasses.fields(SeaConfig)
+        if f"`{f.name}`" not in config_md
+    ]
+    assert not missing, (
+        f"SeaConfig fields missing from docs/CONFIG.md: {missing} "
+        f"(document each as a `field` table row)"
+    )
+
+
+def test_no_ghost_fields_documented(config_md):
+    """Rows documenting fields that no longer exist are as misleading
+    as missing rows: every backticked first-column cell must be a real
+    dataclass field."""
+    real = {f.name for f in dataclasses.fields(SeaConfig)}
+    documented = re.findall(r"^\| `(\w+)` \|", config_md, flags=re.M)
+    ghosts = [name for name in documented if name not in real]
+    assert not ghosts, f"docs/CONFIG.md documents nonexistent fields: {ghosts}"
+
+
+def test_architecture_doc_exists_and_covers_layers():
+    p = REPO / "docs" / "ARCHITECTURE.md"
+    assert p.exists(), "docs/ARCHITECTURE.md is missing"
+    text = p.read_text()
+    for subsystem in (
+        "intercept",
+        "resolver",
+        "placement",
+        "ledger",
+        "transfer",
+        "extents",
+        "prefetcher",
+        "federation",
+        "flusher",
+    ):
+        assert subsystem in text, (
+            f"docs/ARCHITECTURE.md no longer mentions '{subsystem}'"
+        )
+
+
+def test_readme_links_to_docs():
+    text = (REPO / "README.md").read_text()
+    for target in ("docs/ARCHITECTURE.md", "docs/CONFIG.md"):
+        assert target in text, f"README.md does not link to {target}"
+        assert (REPO / target).exists()
