@@ -1,12 +1,12 @@
 """CI perf-regression gate for the placement/multiproc/resolve/transfer/
-readahead/extent/federation benchmarks.
+readahead/extent/federation/training benchmarks.
 
-Compares a freshly produced ``BENCH_pr7.json`` (written by
+Compares a freshly produced ``BENCH_pr8.json`` (written by
 ``placement_bench --json`` + ``multiproc_bench --json`` +
 ``resolve_bench --json`` + ``transfer_bench --json`` +
 ``readahead_bench --json`` + ``extent_bench --json`` +
-``federation_bench --json``, merged by the CI workflow) against the
-committed ``benchmarks/BENCH_baseline.json``.
+``federation_bench --json`` + ``training_bench --json``, merged by the
+CI workflow) against the committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
@@ -38,9 +38,19 @@ The structural gates are machine-independent and strict:
     every warm read is a peer hit, and with peers killed mid-pull every
     read still returns bit-exact base content with zero partial or tmp
     files left in the puller's cache.
+  * training I/O: blocking checkpoint saves (the seed path,
+    ``checkpoint_workers=1``) cost >= MIN_BLOCKING_OVERHEAD x the
+    no-checkpoint step loop while async saves of the same modelled
+    bytes stay under MAX_ASYNC_OVERHEAD x (the write disappeared behind
+    compute), the double-buffered device feed beats the unbuffered
+    put-then-compute loop >= MIN_FEED_SPEEDUP x, and a sharded save
+    writes each shard exactly once (unique manifest files, payload
+    within MAX_SHARDED_RATIO of the logical bytes, bit-exact restore).
 
 Every failure message is prefixed with its ``[section]`` so CI logs
-name the benchmark that tripped the gate.
+name the benchmark that tripped the gate, and sections reporting an
+``elapsed_s`` get their wall-clock printed so slow gates are
+attributable.
 
 Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
@@ -72,6 +82,10 @@ MIN_FASTPATH_REDUCTION = 0.30  # read-hit open overhead cut vs PR-4 path
 MIN_TTFB_SPEEDUP = 5.0      # cold TTFB: one-extent fault vs whole-file stage
 MIN_HOT_CHUNK_RATIO = 0.5   # bigger-than-tier scan chunks served hot
 MIN_PEER_SPEEDUP = 2.0      # warm-peer read vs cold-from-base, same caps
+MIN_BLOCKING_OVERHEAD = 2.0  # blocking-save step loop vs no-ckpt loop
+MAX_ASYNC_OVERHEAD = 1.15   # async-save step loop vs no-ckpt loop
+MIN_FEED_SPEEDUP = 1.5      # double-buffered device feed vs unbuffered
+MAX_SHARDED_RATIO = 1.01    # ckpt payload / logical state bytes (npy headers)
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -265,6 +279,45 @@ def check(current: dict, baseline: dict | None) -> list[str]:
                 "(injection did not reach the pull path)",
             )
 
+    training = current.get("training")
+    if training is None:
+        fail("training", "section missing (training_bench not run)")
+    else:
+        blocking = training["blocking_overhead_x"]
+        if blocking < MIN_BLOCKING_OVERHEAD:
+            fail(
+                "training",
+                f"blocking-save overhead {blocking}x vs no-ckpt loop "
+                f"< required {MIN_BLOCKING_OVERHEAD}x (the modelled "
+                f"checkpoint bytes are too cheap to gate overlap)",
+            )
+        async_x = training["async_overhead_x"]
+        if async_x > MAX_ASYNC_OVERHEAD:
+            fail(
+                "training",
+                f"async-save overhead {async_x}x vs no-ckpt loop "
+                f"> allowed {MAX_ASYNC_OVERHEAD}x (writes not hidden "
+                f"behind compute)",
+            )
+        feed = training["feed_speedup"]
+        if feed < MIN_FEED_SPEEDUP:
+            fail(
+                "training",
+                f"double-buffered device feed {feed}x over unbuffered "
+                f"< required {MIN_FEED_SPEEDUP}x",
+            )
+        if not training["sharded_unique_files"]:
+            fail("training", "sharded save wrote a shard file twice")
+        ratio = training["sharded_write_ratio"]
+        if not 1.0 <= ratio <= MAX_SHARDED_RATIO:
+            fail(
+                "training",
+                f"sharded save payload/logical ratio {ratio} outside "
+                f"[1.0, {MAX_SHARDED_RATIO}] (shards duplicated or lost)",
+            )
+        if not training["sharded_roundtrip_ok"]:
+            fail("training", "sharded checkpoint did not restore bit-exact")
+
     if baseline is not None:
         base_rows = baseline["placement"]["rows"]
         for r in rows:
@@ -295,7 +348,7 @@ def check(current: dict, baseline: dict | None) -> list[str]:
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: check_regression.py BENCH_pr7.json [baseline.json]")
+        print("usage: check_regression.py BENCH_pr8.json [baseline.json]")
         raise SystemExit(2)
     with open(argv[0]) as f:
         current = json.load(f)
@@ -306,6 +359,13 @@ def main(argv: list[str] | None = None) -> None:
             baseline = json.load(f)
     else:
         print(f"note: no baseline at {baseline_path}; structural gates only")
+    timed = [
+        (name, section["elapsed_s"])
+        for name, section in current.items()
+        if isinstance(section, dict) and "elapsed_s" in section
+    ]
+    for name, secs in sorted(timed, key=lambda t: -t[1]):
+        print(f"timing: [{name}] {secs}s")
     failures = check(current, baseline)
     for msg in failures:
         print(f"REGRESSION: {msg}")

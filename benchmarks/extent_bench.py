@@ -202,6 +202,7 @@ def main(argv: list[str] | None = None) -> None:
             raise SystemExit(2)
         json_path = argv[argv.index("--json") + 1]
 
+    t_start = time.perf_counter()
     workdir = tempfile.mkdtemp(prefix="sea_extent_bench_")
     try:
         print("name,us_per_call,derived")
@@ -234,6 +235,9 @@ def main(argv: list[str] | None = None) -> None:
                         "scan_overcommitted": scan["overcommitted"],
                         "scan_extents_punched": scan["extents_punched"],
                         "scan_hot_chunk_ratio": scan["hot_chunk_ratio"],
+                        "elapsed_s": round(
+                            time.perf_counter() - t_start, 2
+                        ),
                     },
                     f,
                     indent=2,

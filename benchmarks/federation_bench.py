@@ -235,6 +235,7 @@ def main(argv: list[str] | None = None) -> None:
             raise SystemExit(2)
         json_path = argv[argv.index("--json") + 1]
 
+    t_start = time.perf_counter()
     workdir = tempfile.mkdtemp(prefix="sea_federation_bench_")
     try:
         print("name,value,derived")
@@ -263,7 +264,17 @@ def main(argv: list[str] | None = None) -> None:
         )
         if json_path:
             with open(json_path, "w") as f:
-                json.dump({"rows": rows, **derived}, f, indent=2)
+                json.dump(
+                    {
+                        "rows": rows,
+                        **derived,
+                        "elapsed_s": round(
+                            time.perf_counter() - t_start, 2
+                        ),
+                    },
+                    f,
+                    indent=2,
+                )
         raise SystemExit(0 if ok else 1)
     finally:
         shutil.rmtree(workdir, ignore_errors=True)

@@ -152,6 +152,7 @@ def main(argv: list[str] | None = None) -> None:
             print("usage: multiproc_bench [--json PATH]")
             raise SystemExit(2)
         json_path = argv[argv.index("--json") + 1]
+    t_start = time.perf_counter()
     out = bench_multiproc()
     print("name,value,derived")
     ok = True
@@ -182,6 +183,7 @@ def main(argv: list[str] | None = None) -> None:
     if top["scaling_vs_1proc"] < COLLAPSE_FLOOR:
         ok = False
     if json_path:
+        out["elapsed_s"] = round(time.perf_counter() - t_start, 2)
         with open(json_path, "w") as f:
             json.dump(out, f, indent=2)
     raise SystemExit(0 if ok else 1)

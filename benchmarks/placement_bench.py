@@ -145,6 +145,7 @@ def main(argv: list[str] | None = None) -> None:
             print("usage: placement_bench [--json PATH]")
             raise SystemExit(2)
         json_path = argv[argv.index("--json") + 1]
+    t_start = time.perf_counter()
     print("name,us_per_call,derived")
     ok = True
     rows = bench_placement_ledger_vs_walk(quick=True)
@@ -159,7 +160,15 @@ def main(argv: list[str] | None = None) -> None:
     ok = speedup >= 5.0
     if json_path:
         with open(json_path, "w") as f:
-            json.dump({"rows": rows, "open_speedup": round(speedup, 1)}, f, indent=2)
+            json.dump(
+                {
+                    "rows": rows,
+                    "open_speedup": round(speedup, 1),
+                    "elapsed_s": round(time.perf_counter() - t_start, 2),
+                },
+                f,
+                indent=2,
+            )
     raise SystemExit(0 if ok else 1)
 
 

@@ -271,6 +271,7 @@ def main(argv: list[str] | None = None) -> None:
             raise SystemExit(2)
         json_path = argv[argv.index("--json") + 1]
 
+    t_start = time.perf_counter()
     workdir = tempfile.mkdtemp(prefix="sea_readahead_bench_")
     try:
         print("name,us_per_call,derived")
@@ -304,6 +305,9 @@ def main(argv: list[str] | None = None) -> None:
                         "cold_seq_speedup": round(speedup, 2),
                         "wasted_ratio": round(wasted_ratio, 3),
                         "fastpath_overhead_reduction": round(reduction, 3),
+                        "elapsed_s": round(
+                            time.perf_counter() - t_start, 2
+                        ),
                     },
                     f,
                     indent=2,

@@ -155,6 +155,7 @@ def main(argv: list[str] | None = None) -> None:
             print("usage: resolve_bench [--json PATH]")
             raise SystemExit(2)
         json_path = argv[argv.index("--json") + 1]
+    t_start = time.perf_counter()
     print("name,us_per_call,derived")
     rows = bench_resolver_vs_seed()
     for row in rows:
@@ -179,6 +180,7 @@ def main(argv: list[str] | None = None) -> None:
                     "rows": rows,
                     "resolve_speedup": round(speedup, 1),
                     "hit_flatness": round(flatness, 2),
+                    "elapsed_s": round(time.perf_counter() - t_start, 2),
                 },
                 f,
                 indent=2,

@@ -1,0 +1,342 @@
+"""Training-I/O benchmark: async sharded checkpointing + device feed.
+
+Three acceptance targets for the training-I/O PR (ISSUE 8), all on
+*modelled* speeds so the measurement is hardware-independent and
+deterministic:
+
+* **Async checkpoint overlap** — a step loop (modelled compute:
+  ``_STEP_S`` per step) checkpoints a multi-leaf ~24 MiB state every
+  ``_CKPT_EVERY`` steps through a paced ``open_fn`` (every checkpoint
+  byte pays ``bytes / _BW_CKPT``, the modelled burst-buffer write
+  bandwidth). Blocking saves with ``checkpoint_workers=1`` — the seed
+  path — must cost >= ``_MIN_BLOCKING_OVERHEAD`` x the no-checkpoint
+  wall clock, while ``save(..., async_=True)`` with a worker fan-out
+  must stay under ``_MAX_ASYNC_OVERHEAD`` x: the same bytes disappear
+  behind compute.
+* **Device feed** — a real Sea-staged ``DataPipeline`` feeding a step
+  loop where each batch pays a modelled host->device put (``_PUT_S``)
+  plus compute (``_FEED_STEP_S``). ``device_iter`` double-buffers the
+  put of batch N+1 against compute on batch N and must beat the
+  unbuffered put-then-compute loop by >= ``_MIN_FEED_SPEEDUP`` x.
+* **Sharded write-once** — on a 2-device mesh (host platform devices)
+  a state with a sharded and a replicated leaf saves each shard exactly
+  once: manifest shard files are unique and total payload bytes stay
+  within npy-header slack of the logical state bytes
+  (``sharded_write_ratio`` ~ 1.0), and the checkpoint restores
+  bit-exact.
+
+``PYTHONPATH=src python -m benchmarks.training_bench [--json PATH]``
+prints ``name,seconds,derived`` rows; ``--json`` dumps the derived
+ratios for ``benchmarks.check_regression``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.checkpoint.manager import CheckpointManager  # noqa: E402
+from repro.core import Sea, SeaConfig, TierSpec  # noqa: E402
+from repro.data.pipeline import DataPipeline, write_dataset  # noqa: E402
+
+_STEP_S = 0.025              # modelled fwd/bwd compute per step
+_N_STEPS = 16                # steps per arm
+_CKPT_EVERY = 4              # checkpoint cadence (saves at 4, 8, 12)
+_N_LEAVES = 12               # state leaves (float32, 2 MiB each -> 24 MiB)
+_LEAF_ELEMS = 512 * 1024
+_BW_CKPT = 125e6             # modelled burst-buffer write bandwidth (B/s)
+_ASYNC_WORKERS = 4
+_MIN_BLOCKING_OVERHEAD = 2.0
+_MAX_ASYNC_OVERHEAD = 1.15
+
+_FEED_STEP_S = 0.02          # modelled compute per batch
+_PUT_S = 0.02                # modelled host->device transfer per batch
+_MIN_FEED_SPEEDUP = 1.5
+
+_MAX_SHARD_SLACK = 0.01      # payload/logical ratio slack (npy headers)
+
+
+def _make_sea(workdir: str, tag: str, *, workers: int) -> Sea:
+    cfg = SeaConfig(
+        mount=os.path.join(workdir, tag, "mount"),
+        tiers=[
+            TierSpec(name="bb", roots=(os.path.join(workdir, tag, "bb"),)),
+            TierSpec(
+                name="pfs",
+                roots=(os.path.join(workdir, tag, "pfs"),),
+                persistent=True,
+            ),
+        ],
+        max_file_size=1 << 23,
+        n_procs=1,
+        checkpoint_workers=workers,
+    )
+    return Sea(cfg)
+
+
+class _PacedFile:
+    """Write-paced file proxy: every written byte pays 1/_BW_CKPT s —
+    the modelled burst-buffer bandwidth — on the *writing* thread, so
+    blocking saves stall the step loop and async saves stall only the
+    background writers."""
+
+    def __init__(self, f):
+        self._f = f
+
+    def write(self, b):
+        if not isinstance(b, str):
+            time.sleep(len(b) / _BW_CKPT)
+        return self._f.write(b)
+
+    def __getattr__(self, name):
+        return getattr(self._f, name)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return self._f.__exit__(*exc)
+
+
+def _paced_open(fs):
+    def open_fn(path, mode="r"):
+        f = fs.open(path, mode)
+        return _PacedFile(f) if "w" in mode else f
+
+    return open_fn
+
+
+def _make_state():
+    rng = np.random.default_rng(0)
+    params = {
+        f"w{i:02d}": jnp.asarray(
+            rng.standard_normal(_LEAF_ELEMS, dtype=np.float32)
+        )
+        for i in range(_N_LEAVES)
+    }
+    return {"params": params, "step": jnp.zeros((), jnp.int32)}
+
+
+def _run_steps(state, mgr: CheckpointManager | None, async_: bool) -> float:
+    t0 = time.perf_counter()
+    for step in range(1, _N_STEPS + 1):
+        time.sleep(_STEP_S)  # modelled compute
+        if mgr is not None and step % _CKPT_EVERY == 0 and step < _N_STEPS:
+            mgr.save(step, state, async_=async_)
+    if mgr is not None:
+        mgr.wait()
+    return time.perf_counter() - t0
+
+
+def bench_checkpoint_overlap(workdir: str):
+    state = _make_state()
+    t_nockpt = _run_steps(state, None, False)
+
+    sea_b = _make_sea(workdir, "ckpt_blocking", workers=1)
+    try:
+        mgr = CheckpointManager(sea_b, open_fn=_paced_open(sea_b.fs))
+        t_block = _run_steps(state, mgr, False)
+    finally:
+        sea_b.shutdown()
+
+    sea_a = _make_sea(workdir, "ckpt_async", workers=_ASYNC_WORKERS)
+    try:
+        mgr = CheckpointManager(sea_a, open_fn=_paced_open(sea_a.fs))
+        t_async = _run_steps(state, mgr, True)
+        overlap_hits = sea_a.fs.telemetry.snapshot()["ckpt_overlap_hits"]
+    finally:
+        sea_a.shutdown()
+
+    blocking_x = t_block / t_nockpt
+    async_x = t_async / t_nockpt
+    rows = [
+        {"name": "steps_no_ckpt", "seconds": round(t_nockpt, 3),
+         "derived": f"{_N_STEPS}_steps"},
+        {"name": "steps_blocking_ckpt", "seconds": round(t_block, 3),
+         "derived": f"overhead={blocking_x:.2f}x"},
+        {"name": "steps_async_ckpt", "seconds": round(t_async, 3),
+         "derived": f"overhead={async_x:.2f}x_overlap_hits={overlap_hits}"},
+    ]
+    return rows, blocking_x, async_x
+
+
+def bench_device_feed(workdir: str):
+    sea = _make_sea(workdir, "feed", workers=2)
+    try:
+        write_dataset(
+            sea, "bench", n_shards=2, tokens_per_shard=8192, vocab_size=211
+        )
+
+        def paced_put(batch):
+            time.sleep(_PUT_S)  # modelled host->device transfer
+            return batch
+
+        with DataPipeline(
+            sea, "bench", batch_size=4, seq_len=128, evict_consumed=False
+        ) as pipe:
+            t0 = time.perf_counter()
+            n_unbuf = 0
+            for batch in pipe:
+                paced_put(batch)
+                time.sleep(_FEED_STEP_S)
+                n_unbuf += 1
+            t_unbuf = time.perf_counter() - t0
+
+        with DataPipeline(
+            sea, "bench", batch_size=4, seq_len=128, evict_consumed=False
+        ) as pipe:
+            t0 = time.perf_counter()
+            n_buf = 0
+            for _batch in pipe.device_iter(depth=2, put_fn=paced_put):
+                time.sleep(_FEED_STEP_S)
+                n_buf += 1
+            t_buf = time.perf_counter() - t0
+    finally:
+        sea.shutdown()
+
+    assert n_buf == n_unbuf > 0, (n_buf, n_unbuf)
+    speedup = t_unbuf / t_buf
+    rows = [
+        {"name": "feed_unbuffered", "seconds": round(t_unbuf, 3),
+         "derived": f"{n_unbuf}_batches"},
+        {"name": "feed_double_buffered", "seconds": round(t_buf, 3),
+         "derived": f"speedup={speedup:.2f}x"},
+    ]
+    return rows, speedup
+
+
+def bench_sharded_write_once(workdir: str):
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+    devices = jax.devices()[:2]
+    mesh = Mesh(np.array(devices), ("d",))
+    rng = np.random.default_rng(1)
+    w = rng.standard_normal((len(devices) * 128, 4096), dtype=np.float32)
+    b = rng.standard_normal(4096, dtype=np.float32)
+    state = {
+        "w": jax.device_put(w, NamedSharding(mesh, PartitionSpec("d"))),
+        "b": jax.device_put(b, NamedSharding(mesh, PartitionSpec())),
+    }
+    logical = w.nbytes + b.nbytes
+
+    sea = _make_sea(workdir, "sharded", workers=_ASYNC_WORKERS)
+    try:
+        t0 = time.perf_counter()
+        mgr = CheckpointManager(sea)
+        mgr.save(1, state)
+        t_save = time.perf_counter() - t0
+        with sea.fs.open(
+            os.path.join(mgr.root, "step_00000001", "manifest.json")
+        ) as f:
+            manifest = json.load(f)
+        files = [
+            ent["file"]
+            for meta in manifest["leaves"].values()
+            for ent in meta["shards"]
+        ]
+        payload = sum(
+            ent["bytes"]
+            for meta in manifest["leaves"].values()
+            for ent in meta["shards"]
+        )
+        restored = mgr.restore(
+            1, {"w": np.zeros_like(w), "b": np.zeros_like(b)}
+        )
+    finally:
+        sea.shutdown()
+
+    unique = len(files) == len(set(files))
+    ratio = payload / logical
+    roundtrip_ok = bool(
+        np.array_equal(np.asarray(restored["w"]), w)
+        and np.array_equal(np.asarray(restored["b"]), b)
+    )
+    rows = [
+        {"name": "sharded_save", "seconds": round(t_save, 3),
+         "derived": (
+             f"devices={len(devices)}_files={len(files)}"
+             f"_ratio={ratio:.4f}"
+         )},
+    ]
+    return rows, unique, ratio, roundtrip_ok
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        if argv.index("--json") + 1 >= len(argv):
+            print("usage: training_bench [--json PATH]")
+            raise SystemExit(2)
+        json_path = argv[argv.index("--json") + 1]
+
+    t_start = time.perf_counter()
+    workdir = tempfile.mkdtemp(prefix="sea_training_bench_")
+    try:
+        print("name,seconds,derived")
+        ckpt_rows, blocking_x, async_x = bench_checkpoint_overlap(workdir)
+        feed_rows, feed_speedup = bench_device_feed(workdir)
+        shard_rows, unique, ratio, roundtrip_ok = bench_sharded_write_once(
+            workdir
+        )
+        rows = ckpt_rows + feed_rows + shard_rows
+        for row in rows:
+            print(f"{row['name']},{row['seconds']},{row['derived']}")
+        print(
+            f"acceptance_blocking_overhead,{blocking_x:.2f},"
+            f">={_MIN_BLOCKING_OVERHEAD}x_required"
+        )
+        print(
+            f"acceptance_async_overhead,{async_x:.2f},"
+            f"<={_MAX_ASYNC_OVERHEAD}x_required"
+        )
+        print(
+            f"acceptance_feed_speedup,{feed_speedup:.2f},"
+            f">={_MIN_FEED_SPEEDUP}x_required"
+        )
+        print(
+            f"acceptance_sharded_write_once,"
+            f"{1.0 if unique and roundtrip_ok else 0.0},"
+            f"ratio={ratio:.4f}"
+        )
+        ok = (
+            blocking_x >= _MIN_BLOCKING_OVERHEAD
+            and async_x <= _MAX_ASYNC_OVERHEAD
+            and feed_speedup >= _MIN_FEED_SPEEDUP
+            and unique
+            and roundtrip_ok
+            and 1.0 <= ratio <= 1.0 + _MAX_SHARD_SLACK
+        )
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(
+                    {
+                        "rows": rows,
+                        "blocking_overhead_x": round(blocking_x, 2),
+                        "async_overhead_x": round(async_x, 2),
+                        "feed_speedup": round(feed_speedup, 2),
+                        "sharded_unique_files": unique,
+                        "sharded_write_ratio": round(ratio, 4),
+                        "sharded_roundtrip_ok": roundtrip_ok,
+                        "elapsed_s": round(time.perf_counter() - t_start, 2),
+                    },
+                    f,
+                    indent=2,
+                )
+        raise SystemExit(0 if ok else 1)
+    finally:
+        shutil.rmtree(workdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

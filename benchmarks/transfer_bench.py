@@ -187,6 +187,7 @@ def main(argv: list[str] | None = None) -> None:
             raise SystemExit(2)
         json_path = argv[argv.index("--json") + 1]
 
+    t_start = time.perf_counter()
     workdir = tempfile.mkdtemp(prefix="sea_transfer_bench_")
     try:
         print("name,us_per_call,derived")
@@ -205,6 +206,9 @@ def main(argv: list[str] | None = None) -> None:
                         "rows": rows,
                         "large_ratio": round(ratio, 2),
                         "overlap_speedup": round(speedup, 2),
+                        "elapsed_s": round(
+                            time.perf_counter() - t_start, 2
+                        ),
                     },
                     f,
                     indent=2,

@@ -107,6 +107,18 @@ class SeaConfig:
                                         # extent map; staging, admission,
                                         # readahead and eviction all operate
                                         # at this granularity
+    #: training I/O (async checkpoint writer + device-feed pipeline)
+    checkpoint_async: bool = True       # training drivers overlap checkpoint
+                                        # writes with compute (save() itself
+                                        # defaults to blocking; this knob is
+                                        # what launch/train passes through)
+    checkpoint_workers: int = 2         # per-save cap on concurrent leaf
+                                        # writes fanned through the shared
+                                        # TransferEngine worker pool
+    device_prefetch: int = 2            # device batches held in flight by
+                                        # DataPipeline.device_iter (host ->
+                                        # device double buffering; 1 = no
+                                        # overlap beyond the current batch)
     #: beyond-paper options (all default OFF for paper faithfulness)
     stripe_chunk_bytes: int = 0         # >0 enables striping across same-level roots
     lru_evict: bool = False             # auto-evict LRU when a tier is full
@@ -162,6 +174,10 @@ class SeaConfig:
             raise ValueError(
                 "federation_node_ttl_s must exceed federation_heartbeat_s"
             )
+        if self.checkpoint_workers <= 0:
+            raise ValueError("checkpoint_workers must be positive")
+        if self.device_prefetch <= 0:
+            raise ValueError("device_prefetch must be positive")
 
     # -- presets (paper §3.1.1: "two main modes based on flushing spec") ----
     def in_memory(self, final_globs: tuple[str, ...]) -> "SeaConfig":
@@ -280,6 +296,9 @@ class SeaConfig:
             open_fast_path=sea.getboolean("open_fast_path", True),
             extent_map=sea.getboolean("extent_map", False),
             extent_bytes=sea.getint("extent_bytes", 32 << 20),
+            checkpoint_async=sea.getboolean("checkpoint_async", True),
+            checkpoint_workers=sea.getint("checkpoint_workers", 2),
+            device_prefetch=sea.getint("device_prefetch", 2),
             flushlist=_read_list(FLUSHLIST_NAME),
             evictlist=_read_list(EVICTLIST_NAME),
             prefetchlist=_read_list(PREFETCHLIST_NAME),

@@ -947,6 +947,39 @@ class SeaFS:
             self.resolver.invalidate(key)
             self._fed_unpublish(key)
 
+    def rmdir(self, path: str) -> None:
+        """Remove an (empty) directory under the mount. A directory is a
+        virtual union, so the removal visits every root of every tier;
+        roots where it is empty are pruned even if another root still
+        holds entries, in which case ENOTEMPTY is raised afterwards (the
+        union still lists the survivors). FileNotFoundError if the
+        directory existed on no root."""
+        if not self.is_sea_path(path):
+            os.rmdir(path)
+            return
+        key = self.key_of(path)
+        found = False
+        not_empty = False
+        for tier in self.hierarchy.tiers:
+            for root in tier.roots:
+                real = os.path.join(root, key)
+                if not os.path.isdir(real):
+                    continue
+                found = True
+                try:
+                    os.rmdir(real)
+                except OSError as e:
+                    if e.errno == errno.ENOTEMPTY:
+                        not_empty = True
+                    else:
+                        raise
+        if not found:
+            raise FileNotFoundError(
+                errno.ENOENT, os.strerror(errno.ENOENT), path
+            )
+        if not_empty:
+            raise OSError(errno.ENOTEMPTY, os.strerror(errno.ENOTEMPTY), path)
+
     def rename(self, src: str, dst: str) -> None:
         s_in, d_in = self.is_sea_path(src), self.is_sea_path(dst)
         if not s_in and not d_in:

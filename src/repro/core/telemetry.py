@@ -117,6 +117,19 @@ class Telemetry:
                                     # fast path (base: folded dead threads)
     fastpath_redirect_hits: int = 0  # redirects taken on the fast path
                                      # (base: folded dead threads)
+    ckpt_save_s: float = 0.0        # seconds the step loop was blocked in
+                                    # CheckpointManager.save (async saves
+                                    # count only snapshot + handoff)
+    ckpt_bytes: int = 0             # checkpoint leaf payload bytes written
+    ckpt_overlap_hits: int = 0      # async saves whose background write
+                                    # finished with no caller blocked on the
+                                    # handle (the overlap fully hid the I/O)
+    ckpt_restore_fallbacks: int = 0  # checkpoints discarded by restore_latest
+                                     # (corrupt/partial) before an older step
+                                     # restored
+    device_feed_stalls: int = 0     # device_iter consumers that found the
+                                    # feed queue empty (compute outran the
+                                    # host->device stage)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _tls: threading.local = field(default_factory=threading.local, repr=False)
     _locals: list = field(default_factory=list, repr=False)
@@ -272,6 +285,24 @@ class Telemetry:
         with self._lock:
             self.peer_fallbacks += 1
 
+    # -- training I/O (checkpoint writer + device feed) ----------------------
+    def record_ckpt_save(self, seconds: float, nbytes: int = 0) -> None:
+        with self._lock:
+            self.ckpt_save_s += seconds
+            self.ckpt_bytes += nbytes
+
+    def record_ckpt_overlap_hit(self) -> None:
+        with self._lock:
+            self.ckpt_overlap_hits += 1
+
+    def record_ckpt_restore_fallback(self) -> None:
+        with self._lock:
+            self.ckpt_restore_fallbacks += 1
+
+    def record_device_feed_stall(self) -> None:
+        with self._lock:
+            self.device_feed_stalls += 1
+
     # -- thread-batched fast-path counters ----------------------------------
     def local(self) -> ThreadCounters:
         """This thread's lock-free counter block (created and registered
@@ -354,6 +385,11 @@ class Telemetry:
                 "peer_fallbacks": self.peer_fallbacks,
                 "fastpath_opens": self.fastpath_opens,
                 "fastpath_redirect_hits": self.fastpath_redirect_hits,
+                "ckpt_save_s": self.ckpt_save_s,
+                "ckpt_bytes": self.ckpt_bytes,
+                "ckpt_overlap_hits": self.ckpt_overlap_hits,
+                "ckpt_restore_fallbacks": self.ckpt_restore_fallbacks,
+                "device_feed_stalls": self.device_feed_stalls,
             }
             locals_ = list(self._locals)
         # fold the LIVE per-thread fast-path blocks in (non-destructive

@@ -235,6 +235,92 @@ class DataPipeline:
                 "labels": chunk[:, 1:].copy(),
             }
 
+    # -- device feed ------------------------------------------------------------
+    def device_iter(self, *, depth: int | None = None, put_fn=None):
+        """Batches already on device: a feeder thread runs ``put_fn``
+        (default ``jax.device_put`` per array) on batch N+1..N+depth
+        while the consumer computes on batch N, so the host->device copy
+        — the last hop of the base->cache->host->device pipeline — is
+        double-buffered behind compute exactly like the staging thread
+        double-buffers the base->cache->host hops. ``depth`` defaults to
+        the ``device_prefetch`` config knob. A consumer that finds the
+        buffer empty records a ``device_feed_stalls`` telemetry tick."""
+        if depth is None:
+            depth = max(1, getattr(self.fs.config, "device_prefetch", 2))
+        if put_fn is None:
+            import jax
+
+            def put_fn(batch):
+                return {k: jax.device_put(v) for k, v in batch.items()}
+
+        fed: "queue.Queue" = queue.Queue(maxsize=depth)
+        done = threading.Event()
+
+        def _feed() -> None:
+            try:
+                for batch in self:
+                    item = (0, put_fn(batch))
+                    while True:
+                        if done.is_set():
+                            return  # consumer gone: nobody reads a sentinel
+                        if self._stop.is_set():
+                            self._put_sentinel(fed, (-1, None), done)
+                            return
+                        try:
+                            fed.put(item, timeout=0.05)
+                            break
+                        except queue.Full:
+                            continue
+                self._put_sentinel(fed, (-1, None), done)
+            except BaseException as e:
+                self._put_sentinel(fed, (-2, e), done)
+
+        t = threading.Thread(
+            target=_feed, name="sea-device-feed", daemon=True
+        )
+        t.start()
+        try:
+            while True:
+                try:
+                    tag, item = fed.get_nowait()
+                except queue.Empty:
+                    if done.is_set():
+                        return
+                    self.fs.telemetry.record_device_feed_stall()
+                    tag, item = fed.get()
+                if tag == -2:
+                    raise RuntimeError("device feed failed") from item
+                if tag == -1:
+                    return
+                yield item
+        finally:
+            # stop + JOIN the feeder (it may be blocked in put): mirror
+            # of close() for the device stage
+            done.set()
+            while t.is_alive():
+                try:
+                    while True:
+                        fed.get_nowait()
+                except queue.Empty:
+                    pass
+                t.join(timeout=0.05)
+
+    @staticmethod
+    def _put_sentinel(q: "queue.Queue", item, done: threading.Event) -> None:
+        while not done.is_set():
+            try:
+                q.put(item, timeout=0.05)
+                return
+            except queue.Full:
+                continue
+
+    # -- lifecycle --------------------------------------------------------------
+    def __enter__(self) -> "DataPipeline":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     def close(self) -> None:
         """Stop and JOIN the staging thread (it may be blocked putting
         into the bounded staged queue: drain until it exits, so no

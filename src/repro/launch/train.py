@@ -136,39 +136,48 @@ def main(argv=None) -> dict:
     else:
         log(f"[init] resumed from checkpoint step {start_step}")
 
+    async_ckpt = bool(getattr(sea.fs.config, "checkpoint_async", True))
     pipe = DataPipeline(
         sea, "corpus", batch_size=args.batch, seq_len=args.seq,
         start_shard=0,
     )
-    it = iter(pipe)
+    it = pipe.device_iter()   # batches arrive already device_put
     losses = []
     t_start = time.time()
-    for step in range(start_step, args.steps):
-        try:
-            batch = next(it)
-        except StopIteration:
-            pipe = DataPipeline(sea, "corpus", batch_size=args.batch,
-                                seq_len=args.seq)
-            it = iter(pipe)
-            batch = next(it)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
-        t0 = time.time()
-        state, metrics = train_step(state, batch)
-        loss = float(metrics["loss"])
-        losses.append(loss)
-        hb.beat(step)
-        if not args.quiet and (step % 10 == 0 or step == args.steps - 1):
-            toks = args.batch * args.seq / (time.time() - t0)
-            log(f"[step {step:5d}] loss={loss:.4f} "
-                f"gnorm={float(metrics['grad_norm']):.2f} tok/s={toks:,.0f}")
-        if args.simulate_failure and step + 1 == args.simulate_failure:
-            log(f"[fault] simulating crash at step {step + 1}")
-            os._exit(17)   # hard abort: no drain, no atexit
-        if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
-            d = ckpt.save(step + 1, state)
-            log(f"[ckpt] step {step + 1} -> {d} "
-                f"(burst tier: {sea.fs.where(d + '/manifest.json')})")
-    pipe.close()
+    try:
+        for step in range(start_step, args.steps):
+            try:
+                batch = next(it)
+            except StopIteration:
+                pipe.close()
+                pipe = DataPipeline(sea, "corpus", batch_size=args.batch,
+                                    seq_len=args.seq)
+                it = pipe.device_iter()
+                batch = next(it)
+            t0 = time.time()
+            state, metrics = train_step(state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            hb.beat(step)
+            if not args.quiet and (step % 10 == 0 or step == args.steps - 1):
+                toks = args.batch * args.seq / (time.time() - t0)
+                log(f"[step {step:5d}] loss={loss:.4f} "
+                    f"gnorm={float(metrics['grad_norm']):.2f} tok/s={toks:,.0f}")
+            if args.simulate_failure and step + 1 == args.simulate_failure:
+                log(f"[fault] simulating crash at step {step + 1}")
+                os._exit(17)   # hard abort: no drain, no atexit
+            if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                # async: the step loop pays only the device->host snapshot;
+                # leaf writes overlap the next ckpt_every steps of compute
+                out = ckpt.save(step + 1, state, async_=async_ckpt)
+                d = out.directory if async_ckpt else out
+                log(f"[ckpt] step {step + 1} -> {d} "
+                    f"({'async' if async_ckpt else 'blocking'})")
+    finally:
+        # error path included: never leave the staging / device-feed
+        # threads reading shards after the loop is gone
+        pipe.close()
+    ckpt.wait()      # last async save must commit before the final drain
     sea.shutdown()   # final flush: checkpoints materialize on the PFS tier
     wall = time.time() - t_start
     result = {

@@ -159,3 +159,24 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
         return {"params": param_specs, "opt": opt_specs, "step": ()}
 
     return init_state, train_step, state_specs
+
+
+def make_state_shardings(mesh, state_specs):
+    """NamedSharding tree from a state PartitionSpec-tuple tree — the
+    plumbing from ``state_specs(...)`` to the checkpoint manager's
+    addressable-shard save: place the state with these shardings and
+    ``CheckpointManager.save`` writes each shard exactly once per
+    cluster (each host serializes only its ``replica_id == 0`` shards),
+    and ``restore(..., shardings=...)`` reshards elastically."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def is_spec(v):
+        return isinstance(v, tuple) and all(
+            a is None or isinstance(a, (str, tuple)) for a in v
+        )
+
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, PartitionSpec(*spec)),
+        state_specs,
+        is_leaf=is_spec,
+    )

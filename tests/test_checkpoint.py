@@ -1,8 +1,10 @@
 """Burst-buffer checkpoint manager: roundtrip, atomicity, corruption
-fallback, GC, elastic restore."""
+fallback, GC, elastic restore, async saves, crash-mid-save windows."""
 
 import json
 import os
+import threading
+import time
 
 import jax
 import jax.numpy as jnp
@@ -131,3 +133,208 @@ def test_bf16_bit_exact(tmp_path):
     assert np.array_equal(
         np.asarray(st["w"]).view(np.uint16), np.asarray(got["w"]).view(np.uint16)
     )
+
+
+# ------------------------------------------------------------ async + crash
+def assert_ledger_matches_walk(fs):
+    """No leaked reservations / phantom bytes (mirrors tests/test_ledger)."""
+    ledger = fs.hierarchy.ledger
+    assert ledger is not None
+    for tier in fs.hierarchy:
+        for root in tier.roots:
+            got, want = ledger.verify(root)
+            assert got == want, f"{tier.name}:{root} ledger={got} walk={want}"
+
+
+def test_async_save_roundtrip(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=3)
+    st = state_tree(9)
+    h = mgr.save(9, st, async_=True)
+    assert h.step == 9
+    d = h.result(timeout=30)
+    assert h.done() and d == mgr._step_dir(9)
+    assert mgr.available_steps() == [9]
+    got = mgr.restore(9, jax.eval_shape(lambda: st))
+    assert trees_equal(st, got)
+    snap = sea.fs.telemetry.snapshot()
+    assert snap["ckpt_bytes"] > 0
+    assert snap["ckpt_save_s"] >= 0.0
+
+
+def test_async_save_overlap_counted_when_unwaited(tmp_path):
+    """A background write that finishes before anyone blocks on the
+    handle is a fully hidden save — the overlap counter must say so."""
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea)
+    h = mgr.save(1, state_tree(1), async_=True)
+    deadline = time.time() + 30
+    while not h.done() and time.time() < deadline:
+        time.sleep(0.002)  # poll done() — never block in result()
+    assert h.done()
+    assert sea.fs.telemetry.snapshot()["ckpt_overlap_hits"] == 1
+    assert h.result() == mgr._step_dir(1)  # after-the-fact result is free
+
+
+def test_saves_serialize_and_new_save_surfaces_old_failure(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=5)
+    mgr.open_fn = _FailOnWrite(sea.fs, fail_on=1)
+    h = mgr.save(1, state_tree(1), async_=True)
+    with pytest.raises(IOError, match="injected"):
+        mgr.save(2, state_tree(2))  # waits for (and re-raises) save 1
+    mgr.open_fn = None
+    assert mgr.save(3, state_tree(3))  # manager stays usable
+    assert mgr.available_steps() == [3]
+    assert h.done()
+
+
+def test_gc_reaps_unmarkered_partials_and_empty_dirs(tmp_path):
+    """Seed leak regression: crashed-partial (un-markered) step dirs were
+    invisible to available_steps so GC never cleaned them, and pruned
+    steps left their empty step_XXXXXXXX directory behind forever."""
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=1)
+    mgr.save(1, state_tree(1))
+    d2 = mgr._step_dir(2)
+    ser.save_tree(state_tree(2), d2, open_fn=sea.fs.open)  # no marker
+    assert mgr.available_steps() == [1]
+    mgr.save(3, state_tree(3))  # GC: prunes step 1, reaps partial step 2
+    assert mgr.available_steps() == [3]
+    for root in (tmp_path / "t0", tmp_path / "pfs"):
+        ckdir = root / "checkpoints"
+        if ckdir.is_dir():
+            names = set(os.listdir(ckdir))
+            assert names <= {"step_00000003"}, names
+    assert_ledger_matches_walk(sea.fs)
+
+
+def test_restore_fallback_counted_and_logged(tmp_path, caplog):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=3)
+    mgr.save(1, state_tree(1))
+    mgr.save(2, state_tree(2))
+    d2 = mgr._step_dir(2)
+    key = sea.fs.key_of(os.path.join(d2, "00000.npy"))
+    tier, real = sea.fs.hierarchy.locate(key)
+    with open(real, "r+b") as f:
+        f.seek(200)
+        f.write(b"\xde\xad\xbe\xef")
+    with caplog.at_level("WARNING", logger="repro.checkpoint"):
+        s, got = mgr.restore_latest(jax.eval_shape(lambda: state_tree()))
+    assert s == 1
+    assert sea.fs.telemetry.snapshot()["ckpt_restore_fallbacks"] == 1
+    assert any("step 2" in r.getMessage() for r in caplog.records)
+
+
+class _FailOnWrite:
+    """open_fn hook that kills the writer at the Nth write-open — the
+    crash-boundary injection (leaf / manifest / marker)."""
+
+    def __init__(self, fs, fail_on: int, mid_write: bool = False):
+        self.fs = fs
+        self.fail_on = fail_on
+        self.mid_write = mid_write
+        self.opens = 0
+        self._lock = threading.Lock()
+
+    def __call__(self, path, mode="r"):
+        if "w" not in mode:
+            return self.fs.open(path, mode)
+        with self._lock:
+            n = self.opens
+            self.opens += 1
+        if n != self.fail_on:
+            return self.fs.open(path, mode)
+        if not self.mid_write:
+            raise IOError(f"injected writer death opening write #{n}")
+        return _DieAfterFirstWrite(self.fs.open(path, mode))
+
+
+class _DieAfterFirstWrite:
+    """File proxy that dies after the first chunk: the file commits
+    half-written (close still runs — reservations must not leak)."""
+
+    def __init__(self, f):
+        self._f = f
+        self._writes = 0
+
+    def write(self, b):
+        self._writes += 1
+        if self._writes > 1:
+            raise IOError("injected writer death mid-stream")
+        return self._f.write(b)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self._f.close()
+
+
+# state_tree has 4 leaves: write-opens are leaves 0-3, manifest #4, marker #5
+@pytest.mark.parametrize("workers", [1, 4])
+@pytest.mark.parametrize(
+    "boundary", ["between_leaves", "mid_leaf", "before_manifest", "before_marker"]
+)
+def test_crash_mid_save_leaves_nothing_restorable(tmp_path, workers, boundary):
+    fail_on, mid = {
+        "between_leaves": (2, False),
+        "mid_leaf": (1, True),
+        "before_manifest": (4, False),
+        "before_marker": (5, False),
+    }[boundary]
+    sea = make_sea(tmp_path, checkpoint_workers=workers)
+    mgr = CheckpointManager(sea, keep_n=3)
+    mgr.save(1, state_tree(1))
+    mgr.open_fn = _FailOnWrite(sea.fs, fail_on, mid_write=mid)
+    h = mgr.save(2, state_tree(2), async_=True)
+    with pytest.raises(IOError, match="injected"):
+        h.result(timeout=30)
+    mgr.open_fn = None
+    # the dead partial is invisible: restore falls back to step 1 ...
+    assert mgr.available_steps() == [1]
+    s, got = mgr.restore_latest(jax.eval_shape(lambda: state_tree()))
+    assert s == 1 and trees_equal(got, state_tree(1))
+    # ... the ledger reconciles clean (no leaked reservations) ...
+    assert_ledger_matches_walk(sea.fs)
+    # ... and the next save's GC reaps the partial: zero leaves visible
+    mgr.save(3, state_tree(3))
+    assert mgr.available_steps() == [1, 3]
+    for root in (tmp_path / "t0", tmp_path / "pfs"):
+        assert not (root / "checkpoints" / "step_00000002").exists()
+    assert_ledger_matches_walk(sea.fs)
+
+
+def test_sharded_leaf_written_once_and_reassembled(tmp_path):
+    """A leaf sharded over the local devices must serialize each shard
+    exactly once (replica_id-0 only) and restore bit-exact."""
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea)
+    st = state_tree(3)
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+        mesh = Mesh(np.asarray(jax.devices()).reshape(n_dev), ("d",))
+        st = {
+            "w": jax.device_put(
+                jnp.arange(n_dev * 8 * 4, dtype=jnp.float32).reshape(n_dev * 8, 4),
+                NamedSharding(mesh, P("d", None)),
+            ),
+            "r": jax.device_put(  # fully replicated: still one file
+                jnp.ones((6,), jnp.float32), NamedSharding(mesh, P())
+            ),
+        }
+    mgr.save(1, st)
+    man = ser.load_manifest(mgr._step_dir(1), open_fn=sea.fs.open)
+    logical = sum(np.asarray(x).nbytes for x in jax.tree.leaves(st))
+    files = [s["file"] for m in man["leaves"].values() for s in m["shards"]]
+    assert len(files) == len(set(files))  # each shard exactly once
+    payload = sum(
+        s["bytes"] for m in man["leaves"].values() for s in m["shards"]
+    )
+    headers = len(files) * 200  # .npy header slop upper bound
+    assert logical <= payload <= logical + headers
+    got = mgr.restore(1, jax.eval_shape(lambda: st))
+    assert trees_equal(st, got)
