@@ -1,12 +1,13 @@
 """CI perf-regression gate for the placement/multiproc/resolve/transfer/
-readahead/extent/federation/training benchmarks.
+readahead/extent/federation/training/seacheck benchmarks.
 
-Compares a freshly produced ``BENCH_pr8.json`` (written by
+Compares a freshly produced ``BENCH_pr9.json`` (written by
 ``placement_bench --json`` + ``multiproc_bench --json`` +
 ``resolve_bench --json`` + ``transfer_bench --json`` +
 ``readahead_bench --json`` + ``extent_bench --json`` +
-``federation_bench --json`` + ``training_bench --json``, merged by the
-CI workflow) against the committed ``benchmarks/BENCH_baseline.json``.
+``federation_bench --json`` + ``training_bench --json`` +
+``seacheck_bench --json``, merged by the CI workflow) against the
+committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
@@ -21,6 +22,9 @@ The structural gates are machine-independent and strict:
     > MIN_OVERLAP_SPEEDUP x over serial copies. (Transfer gates are
     pure ratios — absolute throughputs are machine-dependent, so no
     baseline comparison is applied to them.)
+  * seacheck: the SEACHECK=1 runtime lock-order detector keeps the
+    instrumented tier-1 subset under MAX_SEACHECK_OVERHEAD_X x the
+    uninstrumented wall-clock (both legs are real pytest subprocesses),
   * predictive readahead: cold sequential block reads >= MIN_SEQ_SPEEDUP x
     faster with readahead on (modelled tier bandwidths: deterministic),
     wasted-prefetch bytes < MAX_WASTED_RATIO of staged bytes on a
@@ -56,7 +60,7 @@ Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
 slower than the committed number.
 
-``python -m benchmarks.check_regression BENCH_pr2.json [baseline.json]``
+``python -m benchmarks.check_regression BENCH_pr9.json [baseline.json]``
 """
 
 from __future__ import annotations
@@ -86,6 +90,7 @@ MIN_BLOCKING_OVERHEAD = 2.0  # blocking-save step loop vs no-ckpt loop
 MAX_ASYNC_OVERHEAD = 1.15   # async-save step loop vs no-ckpt loop
 MIN_FEED_SPEEDUP = 1.5      # double-buffered device feed vs unbuffered
 MAX_SHARDED_RATIO = 1.01    # ckpt payload / logical state bytes (npy headers)
+MAX_SEACHECK_OVERHEAD_X = 2.0  # SEACHECK=1 tier-1 subset vs uninstrumented
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -318,6 +323,19 @@ def check(current: dict, baseline: dict | None) -> list[str]:
         if not training["sharded_roundtrip_ok"]:
             fail("training", "sharded checkpoint did not restore bit-exact")
 
+    seacheck = current.get("seacheck")
+    if seacheck is None:
+        fail("seacheck", "section missing (seacheck_bench not run)")
+    else:
+        overhead = seacheck["overhead_x"]
+        if overhead >= MAX_SEACHECK_OVERHEAD_X:
+            fail(
+                "seacheck",
+                f"SEACHECK=1 instrumentation overhead {overhead}x "
+                f">= allowed {MAX_SEACHECK_OVERHEAD_X}x (the instrumented "
+                f"matrix leg is only viable while detection stays cheap)",
+            )
+
     if baseline is not None:
         base_rows = baseline["placement"]["rows"]
         for r in rows:
@@ -348,7 +366,7 @@ def check(current: dict, baseline: dict | None) -> list[str]:
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: check_regression.py BENCH_pr8.json [baseline.json]")
+        print("usage: check_regression.py BENCH_pr9.json [baseline.json]")
         raise SystemExit(2)
     with open(argv[0]) as f:
         current = json.load(f)

@@ -1,0 +1,93 @@
+"""Overhead gate for the seacheck runtime lock-order detector.
+
+Runs a lock-heavy tier-1 subset twice — uninstrumented and under
+``SEACHECK=1`` — as real pytest subprocesses (the instrumentation must
+be installed before ``repro`` imports, so in-process toggling would not
+measure the real leg) and reports the wall-clock ratio. The CI
+``SEACHECK=1`` matrix leg is only viable if instrumentation stays cheap:
+``check_regression`` gates ``overhead_x`` at < 2.0.
+
+``python -m benchmarks.seacheck_bench [--json PATH]``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: lock-heavy, wall-clock-bounded subset: the shared journal (fcntl +
+#: thread-lock pairing), the transfer engine (worker pool + per-key
+#: locks), and the extent plane (per-map locks + validity journal)
+SUBSET = (
+    "tests/test_shared_ledger.py",
+    "tests/test_transfer.py",
+    "tests/test_extents.py",
+)
+
+MAX_OVERHEAD_X = 2.0
+
+
+def _run_subset(instrumented: bool) -> float:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("SEACHECK", None)
+    if instrumented:
+        env["SEACHECK"] = "1"
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider", *SUBSET],
+        cwd=_REPO,
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=600,
+    )
+    elapsed = time.perf_counter() - t0
+    if proc.returncode != 0:
+        label = "SEACHECK=1" if instrumented else "uninstrumented"
+        print(proc.stdout + proc.stderr, file=sys.stderr)
+        raise SystemExit(f"seacheck_bench: {label} subset run failed")
+    return elapsed
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        if argv.index("--json") + 1 >= len(argv):
+            print("usage: seacheck_bench [--json PATH]")
+            raise SystemExit(2)
+        json_path = argv[argv.index("--json") + 1]
+    t_start = time.perf_counter()
+    # warm interpreter/page caches so the first leg isn't penalised
+    _run_subset(instrumented=False)
+    plain_s = _run_subset(instrumented=False)
+    instrumented_s = _run_subset(instrumented=True)
+    overhead = instrumented_s / plain_s
+    print("name,seconds,derived")
+    print(f"tier1_subset_plain,{plain_s:.2f},baseline")
+    print(f"tier1_subset_seacheck,{instrumented_s:.2f},SEACHECK=1")
+    print(f"acceptance_overhead,{overhead:.2f}x,<{MAX_OVERHEAD_X}x_required")
+    ok = overhead < MAX_OVERHEAD_X
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(
+                {
+                    "plain_s": round(plain_s, 2),
+                    "instrumented_s": round(instrumented_s, 2),
+                    "overhead_x": round(overhead, 2),
+                    "elapsed_s": round(time.perf_counter() - t_start, 2),
+                },
+                f,
+                indent=2,
+            )
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -263,7 +263,10 @@ class ExtentStore:
             return None
         em = ExtentMap(key, tier, root, size, self.extent_bytes)
         n = em.n_extents
-        em.valid = {int(i) for i in rec.get("valid", ()) if 0 <= int(i) < n}
+        # freshly constructed map, not yet published to _maps — no other
+        # thread can hold a reference, so no lock is needed here
+        valid = {int(i) for i in rec.get("valid", ()) if 0 <= int(i) < n}
+        em.valid = valid  # seacheck: ignore[lock-discipline]
         em.verified_at = time.monotonic()
         return em
 

@@ -274,6 +274,7 @@ class FederationRegistry:
             finally:
                 fcntl.lockf(acct.fd, fcntl.LOCK_UN)
 
+    # seacheck: holds-lock
     def _sync(self, acct: _FedAccount) -> None:
         size = os.fstat(acct.fd).st_size
         if size == 0:
@@ -306,6 +307,7 @@ class FederationRegistry:
         except (IndexError, ValueError):
             return -1, 0.0
 
+    # seacheck: holds-lock
     def _reload(self, acct: _FedAccount, size: int) -> None:
         data = os.pread(acct.fd, size, 0)
         nl = data.find(b"\n")
@@ -324,6 +326,7 @@ class FederationRegistry:
         acct.loaded = True
         self._replay_from(acct, acct.offset, size)
 
+    # seacheck: holds-lock
     def _replay_from(self, acct: _FedAccount, start: int, size: int) -> None:
         if size <= start:
             return
@@ -339,6 +342,7 @@ class FederationRegistry:
             acct.lines += 1
         acct.offset = start + len(data)
 
+    # seacheck: holds-lock
     @staticmethod
     def _apply(acct: _FedAccount, line: str) -> None:
         if line.startswith("W "):
@@ -363,6 +367,7 @@ class FederationRegistry:
                 if not holders:
                     del acct.entries[unquote(qkey)]
 
+    # seacheck: holds-lock
     def _append(self, acct: _FedAccount, line: str) -> None:
         data = line.encode()
         os.pwrite(acct.fd, data, acct.offset)
@@ -372,6 +377,7 @@ class FederationRegistry:
         if acct.lines > max(self.compact_min_records, 4 * total):
             self._rewrite(acct)
 
+    # seacheck: holds-lock
     def _rewrite(
         self, acct: _FedAccount, reconcile_ts: float | None = None
     ) -> None:

@@ -743,8 +743,13 @@ class SeaFS:
                 real = os.path.join(root, pkey)
                 os.makedirs(os.path.dirname(real), exist_ok=True)
                 part = data[i * chunk : (i + 1) * chunk]
-                with open(real, "wb") as f:
+                # stage + rename: a crash mid-write leaves only a .sea_tmp
+                # orphan (reaped later), never a short part under the
+                # resolvable stripe name
+                tmp = f"{real}.{os.getpid()}{_TMP_SUFFIX}"
+                with open(tmp, "wb") as f:
                     f.write(part)
+                os.replace(tmp, real)
                 tier.note_written(root, pkey, len(part))
                 self.resolver.note_location(pkey, tier, real)
             manifest = {"n_parts": n_parts, "chunk": chunk, "total": len(data),
@@ -916,7 +921,9 @@ class SeaFS:
             if keep_ap is not None and os.path.abspath(real) == keep_ap:
                 continue
             try:
-                os.remove(real)
+                # callers own the resolver invalidation + fed unpublish
+                # (contract in the docstring above)
+                os.remove(real)  # seacheck: ignore[invalidation-completeness]
             except FileNotFoundError:
                 continue  # raced an evict: already gone
             root = tier.root_of(real)
@@ -1424,7 +1431,9 @@ class SeaFS:
             try:
                 fd = os.open(em.part_real, os.O_RDWR)
                 try:
-                    punch_hole(fd, start, length)
+                    # punches an extent that was never marked valid — the
+                    # resolver and peers never saw it, nothing to invalidate
+                    punch_hole(fd, start, length)  # seacheck: ignore[invalidation-completeness]
                 finally:
                     os.close(fd)
             except OSError:

@@ -228,6 +228,7 @@ class SharedCapacityLedger:
         self._sync_inner(acct)
         acct.synced_at = time.monotonic()
 
+    # seacheck: holds-lock
     def _sync_inner(self, acct: _SharedAccount) -> None:
         size = os.fstat(acct.fd).st_size
         if size == 0:
@@ -258,6 +259,7 @@ class SharedCapacityLedger:
         except (IndexError, ValueError):
             return -1, 0.0
 
+    # seacheck: holds-lock
     def _reload(self, acct: _SharedAccount, size: int) -> None:
         data = os.pread(acct.fd, size, 0)
         nl = data.find(b"\n")
@@ -277,6 +279,7 @@ class SharedCapacityLedger:
         acct.loaded = True
         self._replay_from(acct, acct.offset, size)
 
+    # seacheck: holds-lock
     def _replay_from(self, acct: _SharedAccount, start: int, size: int) -> None:
         if size <= start:
             return
@@ -293,6 +296,7 @@ class SharedCapacityLedger:
             acct.lines += 1
         acct.offset = start + len(data)
 
+    # seacheck: holds-lock
     def _apply(self, acct: _SharedAccount, line: str) -> None:
         if line.startswith("W "):
             try:
@@ -308,6 +312,7 @@ class SharedCapacityLedger:
             if old is not None:
                 acct.used -= old
 
+    # seacheck: holds-lock
     def _append(self, acct: _SharedAccount, line: str) -> None:
         data = line.encode()
         os.pwrite(acct.fd, data, acct.offset)
@@ -316,6 +321,7 @@ class SharedCapacityLedger:
         if acct.lines > max(self.compact_min_records, 4 * len(acct.files)):
             self._rewrite(acct)
 
+    # seacheck: holds-lock
     def _rewrite(self, acct: _SharedAccount, reconcile_ts: float | None = None) -> None:
         """Compact: truncate and rewrite header + one W record per live file
         (the 'truncate' half of the append-truncate journal)."""
@@ -431,6 +437,7 @@ class SharedCapacityLedger:
             self._sync(acct)
             self._apply_write(acct, key, nbytes)
 
+    # seacheck: holds-lock
     def _apply_write(self, acct: _SharedAccount, key: str, nbytes: int) -> None:
         acct.used += nbytes - acct.files.get(key, 0)
         acct.files[key] = nbytes

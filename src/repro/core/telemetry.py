@@ -68,6 +68,61 @@ class ThreadCounters:
         c[2] += seconds
 
 
+#: The canonical counter registry: every scalar counter ``Telemetry``
+#: carries, with its meaning. This table is the single source of truth —
+#: ``snapshot()`` iterates it (a counter missing here silently vanishes
+#: from exports, so it must not be missable), and ``seacheck``'s
+#: telemetry-drift rule cross-checks it lexically against the dataclass
+#: fields and every increment site, in both directions. Add a counter by
+#: adding the field AND the registry row; the lint gate fails on either
+#: half alone.
+COUNTERS: dict[str, str] = {
+    "transfer_orphans_reaped": "dead .sea_tmp staging files swept",
+    "flushed_bytes": "bytes flushed cache->base",
+    "flushed_files": "files flushed cache->base",
+    "flush_failures": "flushes abandoned after exhausting retries",
+    "evicted_bytes": "bytes evicted from cache tiers",
+    "evicted_files": "files evicted from cache tiers",
+    "prefetched_bytes": "bytes staged by static prefetch lists",
+    "redirect_hits": "paths under the mount that Sea translated",
+    "passthrough": "paths outside the mount (left untouched)",
+    "ledger_hits": "O(1) capacity queries answered by the ledger",
+    "ledger_reconciles": "full-root walks (reconcile path only)",
+    "resolver_hits": "resolutions served by the location index",
+    "resolver_misses": "full probe cascades (cold or invalidated)",
+    "resolver_negative_hits": "misses absorbed by the negative cache",
+    "resolver_verify_fails": "cached paths that vanished (file moved)",
+    "resolver_invalidations": "entries dropped by mutation paths",
+    "dir_index_hits": "listdir unions served by the child index",
+    "dir_index_misses": "listdir unions that re-walked the roots",
+    "readahead_predictions": "speculative keys the predictor emitted",
+    "readahead_staged_files": "predictions whose staging copy committed",
+    "readahead_staged_bytes": "bytes speculatively staged base->cache",
+    "readahead_hits": "predicted keys subsequently opened",
+    "readahead_hit_bytes": "staged bytes that were then read hot",
+    "readahead_wasted_bytes": "staged bytes expired/cancelled unread",
+    "extent_hits": "reads served from a staged extent",
+    "extent_hit_bytes": "bytes those reads served from cache",
+    "extent_misses": "reads that found the extent unstaged",
+    "extent_miss_bytes": "bytes served from the base fallback",
+    "extents_staged": "extents whose staging copy committed",
+    "extent_staged_bytes": "bytes staged base->cache per-extent",
+    "extents_punched": "staged extents evicted by punch-hole",
+    "extent_punched_bytes": "bytes those punches deallocated",
+    "extent_promotions": "part files completed -> whole replicas",
+    "peer_hits": "local misses served by a peer's cache",
+    "peer_pull_bytes": "bytes pulled peer->cache",
+    "peer_fallbacks": "peer pulls that failed and fell back to base",
+    "fastpath_opens": "read opens served by the lock-free fast path",
+    "fastpath_redirect_hits": "redirects taken on the fast path",
+    "ckpt_save_s": "seconds the step loop was blocked in save",
+    "ckpt_bytes": "checkpoint leaf payload bytes written",
+    "ckpt_overlap_hits": "async saves that finished with no waiter",
+    "ckpt_restore_fallbacks": "corrupt checkpoints discarded by restore",
+    "device_feed_stalls": "device_iter consumers that found the feed empty",
+}
+
+
 @dataclass
 class Telemetry:
     per_tier: dict[str, TierCounters] = field(
@@ -316,6 +371,7 @@ class Telemetry:
                 self._locals.append(lc)
         return lc
 
+    # seacheck: holds-lock
     def _fold_dead_locked(self) -> None:
         """Fold counter blocks of dead threads into the base counters and
         drop them (caller holds ``self._lock``). Safe: a dead thread can
@@ -347,50 +403,9 @@ class Telemetry:
                 "transfers": {
                     k: vars(v).copy() for k, v in sorted(self.transfers.items())
                 },
-                "transfer_orphans_reaped": self.transfer_orphans_reaped,
-                "flushed_bytes": self.flushed_bytes,
-                "flushed_files": self.flushed_files,
-                "flush_failures": self.flush_failures,
-                "evicted_bytes": self.evicted_bytes,
-                "evicted_files": self.evicted_files,
-                "prefetched_bytes": self.prefetched_bytes,
-                "redirect_hits": self.redirect_hits,
-                "passthrough": self.passthrough,
-                "ledger_hits": self.ledger_hits,
-                "ledger_reconciles": self.ledger_reconciles,
-                "resolver_hits": self.resolver_hits,
-                "resolver_misses": self.resolver_misses,
-                "resolver_negative_hits": self.resolver_negative_hits,
-                "resolver_verify_fails": self.resolver_verify_fails,
-                "resolver_invalidations": self.resolver_invalidations,
-                "dir_index_hits": self.dir_index_hits,
-                "dir_index_misses": self.dir_index_misses,
-                "readahead_predictions": self.readahead_predictions,
-                "readahead_staged_files": self.readahead_staged_files,
-                "readahead_staged_bytes": self.readahead_staged_bytes,
-                "readahead_hits": self.readahead_hits,
-                "readahead_hit_bytes": self.readahead_hit_bytes,
-                "readahead_wasted_bytes": self.readahead_wasted_bytes,
-                "extent_hits": self.extent_hits,
-                "extent_hit_bytes": self.extent_hit_bytes,
-                "extent_misses": self.extent_misses,
-                "extent_miss_bytes": self.extent_miss_bytes,
-                "extents_staged": self.extents_staged,
-                "extent_staged_bytes": self.extent_staged_bytes,
-                "extents_punched": self.extents_punched,
-                "extent_punched_bytes": self.extent_punched_bytes,
-                "extent_promotions": self.extent_promotions,
-                "peer_hits": self.peer_hits,
-                "peer_pull_bytes": self.peer_pull_bytes,
-                "peer_fallbacks": self.peer_fallbacks,
-                "fastpath_opens": self.fastpath_opens,
-                "fastpath_redirect_hits": self.fastpath_redirect_hits,
-                "ckpt_save_s": self.ckpt_save_s,
-                "ckpt_bytes": self.ckpt_bytes,
-                "ckpt_overlap_hits": self.ckpt_overlap_hits,
-                "ckpt_restore_fallbacks": self.ckpt_restore_fallbacks,
-                "device_feed_stalls": self.device_feed_stalls,
             }
+            for name in COUNTERS:
+                snap[name] = getattr(self, name)
             locals_ = list(self._locals)
         # fold the LIVE per-thread fast-path blocks in (non-destructive
         # sums: the blocks only grow and are never reset, so no event is

@@ -454,6 +454,43 @@ def test_striped_roundtrip_property(tmp_path):
         assert fs.read_bytes(p) == data, size
 
 
+def test_striped_write_crash_leaves_no_partial_part(tmp_path, monkeypatch):
+    """A failure mid-stripe must never leave a short part under a
+    resolvable stripe name: parts commit via tmp + os.replace, so the
+    torn write exists only as a .sea_tmp staging orphan (seacheck
+    atomic-commit invariant)."""
+    import glob as _glob
+
+    import repro.core.seafs as seafs_mod
+
+    cfg = make_config(tmp_path, stripe_chunk_bytes=512)
+    cfg.tiers[0].capacity = 1
+    fs = SeaFS(cfg)
+    real_replace = os.replace
+    calls = {"n": 0}
+
+    def exploding_replace(src, dst, *a, **kw):
+        if ".sea_stripe." in str(dst):
+            calls["n"] += 1
+            if calls["n"] == 2:  # part 0 commits; part 1 "crashes"
+                raise OSError(5, "injected crash")
+        return real_replace(src, dst, *a, **kw)
+
+    monkeypatch.setattr(seafs_mod.os, "replace", exploding_replace)
+    p = os.path.join(fs.mount, "crash.bin")
+    with pytest.raises(OSError):
+        fs.write_bytes(p, os.urandom(2048))
+    visible = [
+        f
+        for f in _glob.glob(str(tmp_path / "*" / "*.sea_stripe.*"))
+        if ".sea_tmp" not in f
+    ]
+    assert calls["n"] == 2
+    # every part that became resolvable is a COMPLETE chunk; the torn
+    # one never appeared under its stripe name
+    assert visible and all(os.path.getsize(f) == 512 for f in visible)
+
+
 def test_striping_disabled_is_whole_file(tmp_path):
     fs = SeaFS(make_config(tmp_path))  # stripe_chunk_bytes=0
     p = os.path.join(fs.mount, "w.bin")

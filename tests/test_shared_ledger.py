@@ -118,6 +118,13 @@ def test_shared_ledger_cross_process_accounting(tmp_path):
     tier0 = fs.hierarchy.tiers[0]
     root0 = tier0.roots[0]
     # the parent's ledger replica sees the child's write without a re-walk
+    # (reconcile interval is 1e9 s — only journal replay can surface it).
+    # used_bytes has a documented advisory staleness of hint_window_s
+    # (50 ms): on a fast machine the child finishes inside the parent's
+    # hint window, so poll past it instead of racing it.
+    deadline = time.monotonic() + 5
+    while tier0.used_bytes(root0) != 1000 and time.monotonic() < deadline:
+        time.sleep(0.02)
     assert tier0.used_bytes(root0) == 300 + 700
     got, want = fs.hierarchy.ledger.verify(root0)
     assert got == want == 1000

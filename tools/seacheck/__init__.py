@@ -1,0 +1,21 @@
+"""seacheck — mechanical enforcement of Sea's data-plane contracts.
+
+Two layers:
+
+* ``seacheck lint`` (``seacheck.cli``): AST invariant rules over
+  ``src/repro`` — reservation pairing, atomic-commit discipline,
+  invalidation completeness, telemetry drift, lock discipline. Pure
+  stdlib; runs as a blocking CI gate.
+* ``seacheck.runtime``: opt-in (``SEACHECK=1``) lock-order / race
+  detector that instruments ``threading.Lock``/``RLock`` creation in
+  ``repro.core`` and reports ordering cycles and held-across-``fcntl``
+  acquisitions as pytest failures.
+
+See ``docs/SEACHECK.md`` for rules, suppressions, and the baseline
+workflow.
+"""
+
+from __future__ import annotations
+
+__all__ = ["__version__"]
+__version__ = "0.1"

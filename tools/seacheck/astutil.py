@@ -1,0 +1,101 @@
+"""Small AST conveniences shared by the rules (stdlib ``ast`` only)."""
+
+from __future__ import annotations
+
+import ast
+
+
+def annotate_parents(tree: ast.AST) -> None:
+    """Attach ``_sea_parent`` links so rules can walk upward."""
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            child._sea_parent = node  # type: ignore[attr-defined]
+
+
+def parent(node: ast.AST) -> ast.AST | None:
+    return getattr(node, "_sea_parent", None)
+
+
+def ancestors(node: ast.AST):
+    cur = parent(node)
+    while cur is not None:
+        yield cur
+        cur = parent(cur)
+
+
+def qualname(node: ast.AST) -> str:
+    """Dotted qualname of the enclosing def/class chain (``<module>`` at
+    module level)."""
+    names = []
+    cur: ast.AST | None = node
+    while cur is not None:
+        if isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            names.append(cur.name)
+        cur = parent(cur)
+    return ".".join(reversed(names)) or "<module>"
+
+
+def enclosing_function(
+    node: ast.AST,
+) -> ast.FunctionDef | ast.AsyncFunctionDef | None:
+    for anc in [node, *ancestors(node)]:
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            return anc
+    return None
+
+
+def call_name(call: ast.Call) -> str:
+    """Trailing name of the called function: ``a.b.c(...)`` -> ``c``."""
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        return f.attr
+    if isinstance(f, ast.Name):
+        return f.id
+    return ""
+
+
+def dotted_source(node: ast.AST) -> str:
+    """Best-effort source of a (possibly dotted) expression."""
+    try:
+        return ast.unparse(node)
+    except Exception:  # pragma: no cover - malformed synthetic nodes
+        return ""
+
+
+def names_in(node: ast.AST) -> set[str]:
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def in_with_matching(node: ast.AST, tokens: tuple[str, ...]) -> bool:
+    """Is ``node`` lexically inside a ``with`` statement whose context
+    expression source contains one of ``tokens``?"""
+    for anc in ancestors(node):
+        if isinstance(anc, (ast.With, ast.AsyncWith)):
+            for item in anc.items:
+                src = dotted_source(item.context_expr)
+                if any(tok in src for tok in tokens):
+                    return True
+    return False
+
+
+def string_fragments(node: ast.AST) -> list[str]:
+    """Every literal string fragment reachable inside an expression
+    (constants and f-string parts)."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Constant) and isinstance(n.value, str):
+            out.append(n.value)
+    return out
+
+
+def identifier_fragments(node: ast.AST) -> list[str]:
+    """Every Name id / Attribute attr inside an expression."""
+    out = []
+    for n in ast.walk(node):
+        if isinstance(n, ast.Name):
+            out.append(n.id)
+        elif isinstance(n, ast.Attribute):
+            out.append(n.attr)
+    return out

@@ -1,0 +1,8 @@
+"""Known-bad: ad-hoc counter increment outside Telemetry.record_* (rule d,
+non-telemetry-module side). Linted as if it were a data-plane module."""
+
+
+class Engine:
+    def copy(self, nbytes):
+        # bypasses the telemetry lock and the COUNTERS registry
+        self.telemetry.flushed_bytes += nbytes

@@ -1,0 +1,37 @@
+"""Known-bad: atomic-commit violations (rule b)."""
+
+import os
+import shutil
+
+import numpy as np
+
+
+def bare_write_to_tier_path(real, data):
+    # the destination is resolvable at byte 0: a reader races the write
+    with open(real, "wb") as f:
+        f.write(data)
+
+
+def shutil_copy_bypasses_engine(src, dst):
+    shutil.copyfile(src, dst)
+
+
+def np_save_in_place(real, arr):
+    np.save(real, arr)
+
+
+def sanctioned_tmp_replace(real, data):
+    tmp = f"{real}.{os.getpid()}.sea_tmp"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, real)
+
+
+def mount_api_is_fine(fs, path, data):
+    with fs.open(path, "wb") as f:
+        f.write(data)
+
+
+def reads_are_fine(real):
+    with open(real, "rb") as f:
+        return f.read()

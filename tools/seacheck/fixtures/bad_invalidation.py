@@ -1,0 +1,29 @@
+"""Known-bad: invalidation-completeness violations (rule c).
+
+Linted as if it were ``src/repro/core/seafs.py`` (the rule is scoped to
+the resolver-owning modules); ``_fed_unpublish`` below makes the module
+federation-aware, so compliant sites need resolver AND registry calls.
+"""
+
+import os
+
+
+class BadFS:
+    def evict_without_invalidation(self, key, real):
+        # the resolver keeps serving the dead path; peers keep pulling it
+        os.remove(real)
+
+    def evict_without_fed(self, key, real):
+        os.remove(real)
+        self.resolver.invalidate(key)
+
+    def evict_correctly(self, key, real):
+        os.remove(real)
+        self.resolver.invalidate(key)
+        self._fed_unpublish(key)
+
+    def machinery_is_exempt(self, path):
+        os.replace(path + ".tmp", path + ".heartbeat")
+
+    def _fed_unpublish(self, key):
+        raise NotImplementedError

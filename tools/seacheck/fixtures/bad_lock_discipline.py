@@ -1,0 +1,31 @@
+"""Known-bad: lock-discipline violations (rule e).
+
+Linted as if it were ``src/repro/core/seafs.py``: ``_open_counts`` etc.
+are documented as guarded by ``self._lock``.
+"""
+
+import threading
+
+
+class BadFS:
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._open_counts = {}
+        self._access_clock = {}
+
+    def unlocked_mutation(self, key):
+        self._open_counts[key] = self._open_counts.get(key, 0) + 1
+
+    def unlocked_method_mutation(self, key):
+        self._open_counts.pop(key, None)
+
+    def locked_mutation(self, key):
+        with self._lock:
+            self._open_counts[key] = 1
+
+    # seacheck: holds-lock
+    def _locked_helper(self, key):
+        self._access_clock[key] = 7
+
+    def lock_free_read_is_fine(self, key):
+        return self._open_counts.get(key)

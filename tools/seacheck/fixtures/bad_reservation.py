@@ -1,0 +1,46 @@
+"""Known-bad: reservation-pairing violations (rule a)."""
+
+
+def leaked_forever(ledger, root, nbytes):
+    # never committed, released, or handed off
+    res = ledger.try_reserve(root, nbytes, capacity=100, required=10)
+    if res is None:
+        return False
+    do_the_write(root)
+    return True
+
+
+def leaks_on_exception(ledger, tier, root, nbytes):
+    # commit exists, but do_the_write can raise first and nothing
+    # releases on the exception edge
+    res = ledger.try_reserve(root, nbytes, capacity=100, required=10)
+    do_the_write(root)
+    ledger.commit(res, "key", nbytes)
+
+
+def paired_correctly(ledger, root, nbytes):
+    res = ledger.try_reserve(root, nbytes, capacity=100, required=10)
+    if res is None:
+        return 0
+    try:
+        do_the_write(root)
+        ledger.commit(res, "key", nbytes)
+    except Exception:
+        ledger.release(res)
+        raise
+    return nbytes
+
+
+def escapes_to_caller(ledger, root, nbytes):
+    res = ledger.try_reserve(root, nbytes, capacity=100, required=10)
+    return res
+
+
+def suppressed_leak(ledger, root, nbytes):
+    res = ledger.try_reserve(root, nbytes, capacity=100, required=10)  # seacheck: ignore[reservation-pairing]
+    do_the_write(root)
+    return True
+
+
+def do_the_write(root):
+    raise NotImplementedError

@@ -1,0 +1,33 @@
+"""Known-bad: telemetry-drift violations (rule d).
+
+Linted as if it were ``src/repro/core/telemetry.py``: the COUNTERS table
+registers a ghost, misses a field, and an increment targets an
+unregistered name; ``snapshot`` ignores the registry.
+"""
+
+import threading
+from dataclasses import dataclass, field
+
+COUNTERS = {
+    "flushed_bytes": "bytes flushed",
+    "ghost_counter": "registered but not a field",
+}
+
+
+@dataclass
+class Telemetry:
+    flushed_bytes: int = 0
+    unregistered_field: int = 0
+    _lock: threading.Lock = field(default_factory=threading.Lock)
+
+    def record_flush(self, nbytes):
+        with self._lock:
+            self.flushed_bytes += nbytes
+
+    def record_sneaky(self):
+        with self._lock:
+            self.sneaky_counter += 1
+
+    def snapshot(self):
+        with self._lock:
+            return {"flushed_bytes": self.flushed_bytes}

@@ -1,0 +1,45 @@
+"""pytest wiring for the runtime detector (``SEACHECK=1`` legs).
+
+Activated from ``tests/conftest.py`` when ``SEACHECK=1``: installs the
+lock instrumentation at configure time (before any test module imports
+``repro``), drains findings after every test — failing the test that
+produced them, so the offending schedule is named — and fails the session
+if anything slips through teardown.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from . import runtime
+
+
+def pytest_configure(config) -> None:
+    runtime.install()
+    config._seacheck_late_findings = []
+
+
+@pytest.fixture(autouse=True)
+def _seacheck_findings_guard():
+    """Fail the test that produced a lock-order / held-across-fcntl
+    finding (drained per-test so one bad test cannot poison the rest)."""
+    yield
+    found = runtime.drain_findings()
+    if found:
+        pytest.fail(
+            "seacheck runtime findings:\n"
+            + "\n".join(f.render() for f in found),
+            pytrace=False,
+        )
+
+
+def pytest_sessionfinish(session, exitstatus) -> None:
+    # teardown-time findings (daemon threads, atexit paths) bypass the
+    # per-test fixture; surface them as a session failure
+    late = runtime.drain_findings()
+    if late:
+        rep = session.config.pluginmanager.get_plugin("terminalreporter")
+        if rep is not None:
+            for f in late:
+                rep.write_line(f.render(), red=True)
+        session.exitstatus = 1

@@ -1,0 +1,145 @@
+"""Rule ``atomic-commit``: files on tier roots may only appear via the
+tmp + ``os.replace`` protocol (or an allowlisted journal writer).
+
+The transfer engine's invariant (ARCHITECTURE.md "Data plane"): *a reader —
+or a crash at any chunk boundary — can never observe a partially-written
+file under any resolvable path.* A bare ``open(path, "w")``,
+``shutil.copy*`` or ``np.save`` that targets a tier path breaks it: the
+destination becomes resolvable at byte 0.
+
+Scope: ``repro/core`` modules (the only code that touches real tier
+paths). Flagged calls:
+
+* builtin ``open`` / ``io.open`` / ``os.fdopen`` with a literal write/append
+  mode (``w``, ``wb``, ``a``, ``x``, ``+``...) whose target does not
+  mention a staging name (``tmp``/``TMP_SUFFIX``/``.sea_tmp``) — writes to
+  a tmp name followed by ``os.replace`` are the sanctioned protocol;
+* any ``shutil.copy``/``copyfile``/``copy2``/``copytree``/``move`` — byte
+  movement belongs to the TransferEngine;
+* ``np.save``/``numpy.save``/``savez`` — array bytes go through the mount
+  (``fs.open``), never straight to a real path.
+
+The mount-level ``self.open(...)`` / ``fs.open(...)`` API is exempt: it IS
+the commit protocol (reservation + close-commit). The journal/ledger
+writers built on ``os.open``+``os.pwrite`` under an fcntl lock are a
+different, append-truncate protocol and are not produced by ``open()`` —
+they never trip this rule.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_name, identifier_fragments, qualname, string_fragments
+from ..violations import SourceFile, Violation
+
+RULE_ID = "atomic-commit"
+RULE_DOC = (
+    "tier-path writes must use tmp + os.replace (or an allowlisted "
+    "journal writer)"
+)
+
+#: only the data-plane package creates files under tier roots
+SCOPE_FRAGMENT = "repro/core/"
+
+_WRITE_MODE_CHARS = ("w", "a", "x", "+")
+_SHUTIL_COPIES = {"copy", "copyfile", "copy2", "copytree", "move"}
+_NP_SAVES = {"save", "savez", "savez_compressed"}
+#: receivers whose .open() is the mount API (SeaFS.open - the commit
+#: protocol itself), not a raw file creation
+_MOUNT_RECEIVERS = {"self", "fs", "seafs", "mount"}
+_TMP_HINTS = ("tmp", "temp")
+
+
+def _is_write_mode(call: ast.Call) -> bool:
+    mode = None
+    if len(call.args) >= 2:
+        mode = call.args[1]
+    for kw in call.keywords:
+        if kw.arg == "mode":
+            mode = kw.value
+    if mode is None:
+        return False  # default "r"
+    if not (isinstance(mode, ast.Constant) and isinstance(mode.value, str)):
+        return False  # dynamic mode: out of lexical reach
+    return any(c in mode.value for c in _WRITE_MODE_CHARS)
+
+
+def _expr_is_staging(target: ast.AST) -> bool:
+    idents = [s.lower() for s in identifier_fragments(target)]
+    if any(any(h in i for h in _TMP_HINTS) for i in idents):
+        return True
+    frags = [s.lower() for s in string_fragments(target)]
+    return any(any(h in f for h in _TMP_HINTS) or ".sea_tmp" in f for f in frags)
+
+
+def _dest_arg(call: ast.Call, pos: int, kwname: str) -> ast.AST | None:
+    """The destination expression of a call: positional ``pos`` or the
+    ``kwname`` keyword."""
+    for kw in call.keywords:
+        if kw.arg == kwname:
+            return kw.value
+    if len(call.args) > pos:
+        return call.args[pos]
+    return None
+
+
+def _target_is_staging(call: ast.Call) -> bool:
+    if not call.args:
+        return False
+    return _expr_is_staging(call.args[0])
+
+
+def _receiver(call: ast.Call) -> str:
+    f = call.func
+    if isinstance(f, ast.Attribute):
+        if isinstance(f.value, ast.Name):
+            return f.value.id
+        if isinstance(f.value, ast.Attribute):
+            return f.value.attr
+    return ""
+
+
+def check(sf: SourceFile, tree: ast.AST) -> list[Violation]:
+    if SCOPE_FRAGMENT not in sf.path:
+        return []
+    out: list[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = call_name(node)
+        recv = _receiver(node)
+        msg = None
+        if name == "open" and recv in ("", "io", "os"):
+            # builtin open / io.open / os.fdopen; the mount API
+            # (self.open/fs.open) is the commit protocol itself
+            if _is_write_mode(node) and not _target_is_staging(node):
+                msg = (
+                    "bare write-open can expose a partial file under a "
+                    "resolvable path; stage to a *tmp* name and os.replace, "
+                    "or go through the mount API (fs.open)"
+                )
+        elif name == "open" and recv in _MOUNT_RECEIVERS:
+            pass
+        elif recv == "shutil" and name in _SHUTIL_COPIES:
+            # a copy whose DESTINATION is a staging name is one leg of the
+            # sanctioned tmp + os.replace protocol, not a bypass
+            dst = _dest_arg(node, 1, "dst")
+            if dst is None or not _expr_is_staging(dst):
+                msg = (
+                    f"shutil.{name} bypasses the TransferEngine's "
+                    "atomic-commit + admission protocol; use engine.copy / "
+                    "fs.copyfile"
+                )
+        elif recv in ("np", "numpy") and name in _NP_SAVES:
+            dst = _dest_arg(node, 0, "file")
+            if dst is None or not _expr_is_staging(dst):
+                msg = (
+                    f"{recv}.{name} writes the destination in place; route "
+                    "array bytes through the mount (fs.open) instead"
+                )
+        if msg is not None and not sf.suppressed(node.lineno, RULE_ID):
+            out.append(
+                Violation(RULE_ID, sf.path, node.lineno, qualname(node), msg)
+            )
+    return out

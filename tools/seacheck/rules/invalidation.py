@@ -1,0 +1,149 @@
+"""Rule ``invalidation-completeness``: replica-lifecycle sites must
+invalidate the resolver — and, where the module is federation-aware,
+publish/unpublish the registry — in the same function.
+
+ARCHITECTURE.md ("Namespace resolver" / "Cluster federation"): the
+invalidation list and the publish/unpublish list are *the same list by
+construction*. PRs 3-7 each hand-fixed a site that moved/removed/created a
+replica without telling the resolver (stale hits) or the registry (peers
+pulling a ghost). This rule pins the construction.
+
+Scope: the modules that orchestrate replica lifecycle AND own a resolver
+reference (``seafs.py``, ``flusher.py``). A function is a *lifecycle site*
+if it calls ``os.replace`` / ``os.remove`` / ``os.unlink`` / ``os.rename``
+/ ``punch_hole`` on something that is not obviously non-replica machinery
+(heartbeat/spool/journal/marker/tmp-reap paths, identified by the target
+expression's identifiers). Such a function must also contain:
+
+* a resolver maintenance call (``invalidate``/``invalidate_all``/
+  ``note_location``/``refresh``), and
+* a federation registry call (``_fed_*`` / ``publish`` / ``unpublish`` /
+  ``unpublish_all`` / ``expunge``) when the module references federation
+  at all.
+
+Helpers whose *caller* owns the bookkeeping carry a per-line suppression
+with a justification (grep ``seacheck: ignore[invalidation-completeness]``).
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import call_name, identifier_fragments, qualname, string_fragments
+from ..violations import SourceFile, Violation
+
+RULE_ID = "invalidation-completeness"
+RULE_DOC = (
+    "replica moves/removals must invalidate the resolver and update the "
+    "federation registry in the same function"
+)
+
+#: modules that own resolver + federation references
+SCOPE_SUFFIXES = ("repro/core/seafs.py", "repro/core/flusher.py")
+
+_LIFECYCLE_OS = {"replace", "remove", "unlink", "rename"}
+_LIFECYCLE_BARE = {"punch_hole"}
+_RESOLVER_CALLS = {
+    "invalidate",
+    "invalidate_all",
+    "note_location",
+    "refresh",
+}
+_FED_CALLS = {
+    "publish",
+    "unpublish",
+    "unpublish_all",
+    "expunge",
+    "retire",
+}
+#: target-identifier fragments that mark non-replica machinery files
+_MACHINERY_HINTS = (
+    "tmp",
+    "temp",
+    "heartbeat",
+    "hb_",
+    "spool",
+    "journal",
+    "marker",
+    "manifest",
+    "lock",
+    "res_",
+    ".res",
+    "telemetry",
+)
+
+
+def _is_lifecycle_call(node: ast.Call) -> bool:
+    f = node.func
+    name = call_name(node)
+    if (
+        isinstance(f, ast.Attribute)
+        and isinstance(f.value, ast.Name)
+        and f.value.id == "os"
+        and name in _LIFECYCLE_OS
+    ):
+        return True
+    return name in _LIFECYCLE_BARE
+
+
+def _targets_machinery(node: ast.Call) -> bool:
+    idents = [s.lower() for s in identifier_fragments(node)]
+    frags = [s.lower() for s in string_fragments(node)]
+    for hint in _MACHINERY_HINTS:
+        if any(hint in i for i in idents) or any(hint in f for f in frags):
+            return True
+    return False
+
+
+def _module_is_federated(tree: ast.AST) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and (
+            node.attr.startswith("_fed_") or node.attr in _FED_CALLS
+        ):
+            return True
+        if isinstance(node, ast.Name) and node.id.startswith("_fed_"):
+            return True
+    return False
+
+
+def check(sf: SourceFile, tree: ast.AST) -> list[Violation]:
+    if not any(sf.path.endswith(s) for s in SCOPE_SUFFIXES):
+        return []
+    federated = _module_is_federated(tree)
+    out: list[Violation] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        lifecycle: list[ast.Call] = []
+        has_resolver = False
+        has_fed = False
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            name = call_name(node)
+            if _is_lifecycle_call(node) and not _targets_machinery(node):
+                lifecycle.append(node)
+            if name in _RESOLVER_CALLS:
+                has_resolver = True
+            if name.startswith("_fed_") or name in _FED_CALLS:
+                has_fed = True
+        if not lifecycle:
+            continue
+        site = lifecycle[0]
+        missing = []
+        if not has_resolver:
+            missing.append("resolver invalidation")
+        if federated and not has_fed:
+            missing.append("federation publish/unpublish")
+        if missing and not sf.suppressed(site.lineno, RULE_ID):
+            out.append(
+                Violation(
+                    RULE_ID,
+                    sf.path,
+                    site.lineno,
+                    qualname(site),
+                    f"replica-lifecycle call without {' or '.join(missing)} "
+                    "in the same function",
+                )
+            )
+    return out

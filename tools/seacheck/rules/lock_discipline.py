@@ -1,0 +1,155 @@
+"""Rule ``lock-discipline``: mutations of documented-guarded fields must
+happen under their documented lock.
+
+The guarded-state table below is transcribed from the modules' own
+docstrings ("every field is guarded by ``lock``", "guards the model +
+pending below", ...). For each configured module, any *mutation* of a
+guarded attribute — assignment, augmented assignment, ``del``, or a
+mutating method call (``append``/``pop``/``update``/...) — must be:
+
+* lexically inside a ``with`` statement whose context expression contains
+  one of the module's lock tokens (``self._lock``, ``acct.lock``,
+  ``self._locked(`` — the fcntl-wrapping contextmanagers count: they take
+  the thread lock), or
+* inside a function annotated ``# seacheck: holds-lock`` (the caller holds
+  the lock — the runtime layer is what actually verifies ownership), or
+* inside ``__init__`` (construction precedes sharing).
+
+Reads are deliberately NOT checked: the codebase has documented lock-free
+read paths (``resolve_fast``, ``is_hot``, extent-validity probes) whose
+whole point is mutating under the lock while probing without it.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import enclosing_function, in_with_matching, qualname
+from ..violations import SourceFile, Violation
+
+RULE_ID = "lock-discipline"
+RULE_DOC = "documented-guarded fields must be mutated under their lock"
+
+#: module suffix -> (guarded attribute names, acceptable lock tokens)
+GUARDED: dict[str, tuple[set[str], tuple[str, ...]]] = {
+    "repro/core/seafs.py": (
+        {"_open_counts", "_open_writers", "_access_clock", "_key_locks"},
+        ("self._lock",),
+    ),
+    "repro/core/ledger.py": (
+        {"files", "used", "reserved", "last_reconcile", "version"},
+        (".lock", "._lock"),
+    ),
+    "repro/core/shared_ledger.py": (
+        {"files", "used", "offset", "lines", "generation", "reconcile_ts"},
+        (".lock", "._locked("),
+    ),
+    "repro/core/federation.py": (
+        {"entries", "offset", "lines", "generation", "reconcile_ts"},
+        (".lock", "._locked(", "._cache_lock"),
+    ),
+    "repro/core/flusher.py": (
+        {"_pending", "_active", "_deferred", "_failed", "_inflight"},
+        ("self._cv",),
+    ),
+    # _runs/_succ are deliberately absent: they are confined to the single
+    # digestion thread (never touched under the lock), not lock-guarded
+    "repro/core/prefetcher.py": (
+        {"_pending", "_recent", "_inflight"},
+        ("self._lock",),
+    ),
+    "repro/core/telemetry.py": (
+        {"_locals"},
+        ("self._lock",),
+    ),
+    "repro/core/extents.py": (
+        {"valid", "_maps"},
+        (".lock", "._lock"),
+    ),
+}
+
+_MUTATING_METHODS = {
+    "append",
+    "appendleft",
+    "add",
+    "discard",
+    "remove",
+    "pop",
+    "popleft",
+    "popitem",
+    "clear",
+    "update",
+    "setdefault",
+    "extend",
+    "move_to_end",
+    "insert",
+}
+
+
+def _guarded_attr(node: ast.AST, fields: set[str]) -> ast.Attribute | None:
+    """The guarded Attribute mutated by this target expression, if any.
+    Matches ``X.field`` and ``X.field[...]``."""
+    if isinstance(node, ast.Subscript):
+        node = node.value
+    if isinstance(node, ast.Attribute) and node.attr in fields:
+        return node
+    return None
+
+
+def _mutations(tree: ast.AST, fields: set[str]):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for el in t.elts if isinstance(t, ast.Tuple) else [t]:
+                    a = _guarded_attr(el, fields)
+                    if a is not None:
+                        yield node, a
+        elif isinstance(node, ast.AugAssign):
+            a = _guarded_attr(node.target, fields)
+            if a is not None:
+                yield node, a
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                a = _guarded_attr(t, fields)
+                if a is not None:
+                    yield node, a
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if isinstance(f, ast.Attribute) and f.attr in _MUTATING_METHODS:
+                a = _guarded_attr(f.value, fields)
+                if a is not None:
+                    yield node, a
+
+
+def check(sf: SourceFile, tree: ast.AST) -> list[Violation]:
+    cfg = next(
+        (v for suffix, v in GUARDED.items() if sf.path.endswith(suffix)), None
+    )
+    if cfg is None:
+        return []
+    fields, tokens = cfg
+    out: list[Violation] = []
+    for node, attr in _mutations(tree, fields):
+        fn = enclosing_function(node)
+        if fn is None:
+            continue  # module-level initialisation
+        if fn.name in ("__init__", "__new__"):
+            continue
+        if sf.holds_lock(fn.lineno):
+            continue
+        if in_with_matching(node, tokens):
+            continue
+        if sf.suppressed(node.lineno, RULE_ID):
+            continue
+        out.append(
+            Violation(
+                RULE_ID,
+                sf.path,
+                node.lineno,
+                qualname(node),
+                f"mutation of guarded field {attr.attr!r} outside "
+                f"`with {tokens[0]}...` (annotate the function "
+                "`# seacheck: holds-lock` if the caller holds it)",
+            )
+        )
+    return out

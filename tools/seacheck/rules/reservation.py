@@ -1,0 +1,171 @@
+"""Rule ``reservation-pairing``: every ``try_reserve``/``reserve`` result
+must be committed, released, or handed off on every path — including
+exception edges.
+
+The data plane's capacity invariant (``used + reserved <= capacity``,
+ARCHITECTURE.md "Write commit protocol") only holds if no code path can
+abandon an active reservation: a leaked one pins phantom budget against a
+capped root until a reconcile expires it (in-process ledgers: forever).
+
+Per call site ``res = <ledger>.try_reserve(...)`` the rule accepts:
+
+* **escape** — ``res`` is returned/yielded, passed as a call argument
+  (``commit_write(res, ...)``, ``tier.release_write(res)``), stored into an
+  attribute/subscript, or swallowed into a comprehension: responsibility
+  moved to the caller/owner, which this rule checks at *that* site.
+* **resolution** — a ``res.release()`` / ``res.commit(...)`` method call,
+  or ``res`` passed to a call whose name contains ``commit`` or
+  ``release``.
+
+and then requires that, when any *risky* statement (a call that may raise)
+sits between the reservation and its resolution, at least one resolution
+sits on an exception edge — a ``finally`` block or an ``except`` handler.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from ..astutil import (
+    ancestors,
+    annotate_parents,  # noqa: F401  (re-exported for tests)
+    call_name,
+    enclosing_function,
+    names_in,
+    qualname,
+)
+from ..violations import SourceFile, Violation
+
+RULE_ID = "reservation-pairing"
+RULE_DOC = (
+    "try_reserve results must be committed/released on all paths, "
+    "including exception edges"
+)
+
+_RESERVE_NAMES = {"try_reserve", "reserve", "reserve_write"}
+_RESOLVE_HINTS = ("commit", "release")
+
+
+def _is_reserve_call(node: ast.AST) -> bool:
+    return isinstance(node, ast.Call) and call_name(node) in _RESERVE_NAMES
+
+
+def _on_exception_edge(node: ast.AST) -> bool:
+    """Is ``node`` inside a ``finally`` block or an ``except`` handler?"""
+    cur = node
+    for anc in ancestors(node):
+        if isinstance(anc, ast.Try) and any(
+            cur is s or _contains(s, cur) for s in anc.finalbody
+        ):
+            return True
+        if isinstance(anc, ast.ExceptHandler):
+            return True
+        cur = anc
+    return False
+
+
+def _contains(tree: ast.AST, target: ast.AST) -> bool:
+    return any(n is target for n in ast.walk(tree))
+
+
+def check(sf: SourceFile, tree: ast.AST) -> list[Violation]:
+    out: list[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Assign) or not _is_reserve_call(node.value):
+            continue
+        if len(node.targets) != 1 or not isinstance(node.targets[0], ast.Name):
+            continue  # tuple/attribute targets are an escape by storage
+        var = node.targets[0].id
+        fn = enclosing_function(node)
+        if fn is None:
+            continue
+        # the ledger's own definition of try_reserve delegates to
+        # _create_reservation; only *call sites* of the public API matter
+        if fn.name in _RESERVE_NAMES:
+            continue
+        v = _analyze(sf, fn, node, var)
+        if v is not None and not sf.suppressed(v.line, RULE_ID):
+            out.append(v)
+    return out
+
+
+def _analyze(
+    sf: SourceFile, fn: ast.AST, assign: ast.Assign, var: str
+) -> Violation | None:
+    resolutions: list[ast.Call] = []
+    risky = False
+    seen_assign = False
+    for node in ast.walk(fn):
+        if node is assign:
+            seen_assign = True
+            continue
+        if isinstance(node, (ast.Return, ast.Yield, ast.YieldFrom)):
+            if node.value is not None and var in names_in(node.value):
+                return None  # escapes to the caller
+        if isinstance(node, (ast.Assign, ast.AugAssign)):
+            targets = (
+                node.targets if isinstance(node, ast.Assign) else [node.target]
+            )
+            for t in targets:
+                if not isinstance(t, ast.Name) and var in names_in(t):
+                    return None  # stored into an attribute/subscript/container
+        if isinstance(node, ast.Call):
+            arg_names = set()
+            for a in node.args:
+                arg_names |= names_in(a)
+            for kw in node.keywords:
+                arg_names |= names_in(kw.value)
+            name = call_name(node)
+            if var in arg_names:
+                if any(h in name for h in _RESOLVE_HINTS):
+                    resolutions.append(node)
+                else:
+                    return None  # handed off to another callable
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == var
+            ):
+                resolutions.append(node)  # res.commit(...) / res.release()
+            elif name not in _RESERVE_NAMES and not _is_trivial_call(node):
+                risky = True
+    if not seen_assign:  # pragma: no cover - walk always revisits assign
+        return None
+    line = assign.lineno
+    sym = qualname(assign)
+    if not resolutions:
+        return Violation(
+            RULE_ID,
+            sf.path,
+            line,
+            sym,
+            f"reservation {var!r} is never committed, released, or handed off",
+        )
+    if risky and not any(_on_exception_edge(r) for r in resolutions):
+        return Violation(
+            RULE_ID,
+            sf.path,
+            line,
+            sym,
+            f"reservation {var!r} can leak past an exception: no "
+            "commit/release on a finally/except edge while other calls "
+            "can raise",
+        )
+    return None
+
+
+_TRIVIAL_CALLS = {
+    "len",
+    "max",
+    "min",
+    "int",
+    "float",
+    "str",
+    "repr",
+    "isinstance",
+    "getattr",
+}
+
+
+def _is_trivial_call(node: ast.Call) -> bool:
+    return call_name(node) in _TRIVIAL_CALLS

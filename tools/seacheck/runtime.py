@@ -1,0 +1,403 @@
+"""Runtime lock-order / race detector (layer 2, opt-in via ``SEACHECK=1``).
+
+:func:`install` monkeypatches ``threading.Lock`` / ``threading.RLock`` so
+that locks *created from* ``repro/core`` modules are wrapped in an
+instrumented proxy. Each acquisition records:
+
+* the per-thread **held-lock stack**;
+* a global **site-order graph**: creation site A -> creation site B
+  whenever a lock born at B is acquired while one born at A is held. A
+  cycle in this graph is a potential deadlock (thread 1 takes A then B,
+  thread 2 takes B then A) and is reported even if the schedules never
+  actually collide in the run;
+* for locks born at the *same* site (the per-key RLock pool, the ledger's
+  per-root locks), the **instance-pair order**: acquiring instance x then
+  y and elsewhere y then x is the classic ABBA inversion the sorted-key
+  two-lock protocol in ``SeaFS.rename``/``copyfile`` exists to prevent;
+* blocking ``fcntl.flock``/``fcntl.lockf`` calls made while instrumented
+  locks are held (cross-process waits under an in-process lock), unless
+  the calling function is in :data:`FCNTL_ALLOWLIST`.
+
+Findings accumulate in-process; the pytest plugin drains them after every
+test and fails the test that produced them.
+
+``install()`` must run **before** ``repro`` modules import: dataclass
+``field(default_factory=threading.Lock)`` (telemetry) binds the factory at
+class-creation time, so late installation leaves those locks dark.
+
+Overhead is bounded: one dict/list update under one global bookkeeping
+lock per acquire/release. ``benchmarks/seacheck_bench.py`` gates the
+instrumented tier-1 subset at < 2x the uninstrumented wall-clock.
+"""
+
+from __future__ import annotations
+
+import fcntl
+import os
+import sys
+import threading
+from dataclasses import dataclass, field
+
+#: (file basename, function name) pairs allowed to block in fcntl while
+#: holding an instrumented lock — each is a documented thread-lock +
+#: fcntl-lock pairing where the thread lock serializes this process's fd
+#: (POSIX locks are per (process, inode)) and the fcntl wait is the
+#: cross-process admission; the thread lock is never waited on by a
+#: holder of the fcntl lock, so the pairing cannot deadlock.
+FCNTL_ALLOWLIST = {
+    ("shared_ledger.py", "_locked"),
+    ("federation.py", "_locked"),
+}
+
+#: source-path fragments whose lock creations get instrumented
+DEFAULT_PATH_FRAGMENTS = ("repro/core",)
+
+
+@dataclass
+class Finding:
+    kind: str      # "lock-order-cycle" | "lock-order-inversion" | "held-across-fcntl"
+    message: str
+    sites: tuple[str, ...] = ()
+    thread: str = ""
+
+    def render(self) -> str:
+        where = f" [{' -> '.join(self.sites)}]" if self.sites else ""
+        return f"seacheck.runtime: {self.kind}: {self.message}{where}"
+
+
+class _Held:
+    __slots__ = ("lock", "count")
+
+    def __init__(self, lock):
+        self.lock = lock
+        self.count = 1
+
+
+@dataclass
+class _State:
+    """All detector bookkeeping, behind one (uninstrumented) lock."""
+
+    guard: threading.Lock = field(default_factory=threading.Lock)
+    edges: dict[str, set[str]] = field(default_factory=dict)
+    #: (site, id_lo, id_hi) -> first observed direction (True = lo first)
+    pair_order: dict[tuple[str, int, int], bool] = field(default_factory=dict)
+    findings: list[Finding] = field(default_factory=list)
+    reported_cycles: set[frozenset[str]] = field(default_factory=set)
+    reported_pairs: set[tuple[str, int, int]] = field(default_factory=set)
+    reported_fcntl: set[str] = field(default_factory=set)
+
+
+_state = _State()
+_tls = threading.local()
+_installed = False
+_orig: dict[str, object] = {}
+
+
+def _held_stack() -> list[_Held]:
+    stack = getattr(_tls, "held", None)
+    if stack is None:
+        stack = _tls.held = []
+    return stack
+
+
+# -- graph bookkeeping -------------------------------------------------------
+def _find_path(src: str, dst: str) -> list[str] | None:
+    """DFS path src -> dst in the site-order graph (caller holds guard)."""
+    seen = {src}
+    stack = [(src, [src])]
+    while stack:
+        node, path = stack.pop()
+        if node == dst:
+            return path
+        for nxt in _state.edges.get(node, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append((nxt, path + [nxt]))
+    return None
+
+
+def _note_acquire(lock: "_WrappedLock", count: int = 1) -> None:
+    stack = _held_stack()
+    for rec in stack:
+        if rec.lock is lock:
+            rec.count += count
+            return
+    tname = threading.current_thread().name
+    with _state.guard:
+        for rec in stack:
+            a, b = rec.lock.site, lock.site
+            if a == b:
+                if rec.lock is not lock:
+                    _note_same_site_pair(a, rec.lock, lock, tname)
+                continue
+            added = b not in _state.edges.setdefault(a, set())
+            if added:
+                _state.edges[a].add(b)
+                # a fresh a->b edge closes a cycle iff b already reaches a
+                path = _find_path(b, a)
+                if path is not None:
+                    cycle = frozenset(path)
+                    if cycle not in _state.reported_cycles:
+                        _state.reported_cycles.add(cycle)
+                        _state.findings.append(
+                            Finding(
+                                "lock-order-cycle",
+                                "lock acquisition order forms a cycle "
+                                "(potential deadlock)",
+                                sites=tuple(path + [path[0]]),
+                                thread=tname,
+                            )
+                        )
+    stack.append(_Held(lock))
+    if count > 1:
+        stack[-1].count = count
+
+
+def _note_same_site_pair(site, held, acquired, tname: str) -> None:
+    """Two distinct instances from one creation site (caller holds guard):
+    the per-key/per-root lock pools. Record the id-order direction; seeing
+    both directions is an ABBA inversion."""
+    lo, hi = sorted((id(held), id(acquired)))
+    key = (site, lo, hi)
+    direction = id(held) == lo
+    first = _state.pair_order.setdefault(key, direction)
+    if first != direction and key not in _state.reported_pairs:
+        _state.reported_pairs.add(key)
+        _state.findings.append(
+            Finding(
+                "lock-order-inversion",
+                "two locks from one creation site acquired in both "
+                "orders (ABBA; acquire in a canonical — e.g. sorted-key "
+                "— order)",
+                sites=(site, site),
+                thread=tname,
+            )
+        )
+
+
+def _note_release(lock: "_WrappedLock") -> None:
+    stack = _held_stack()
+    for i in range(len(stack) - 1, -1, -1):
+        if stack[i].lock is lock:
+            stack[i].count -= 1
+            if stack[i].count <= 0:
+                del stack[i]
+            return
+
+
+def _forget(lock: "_WrappedLock") -> int:
+    """Remove every recursion level of ``lock`` from the held stack
+    (Condition.wait's _release_save); returns the forgotten count."""
+    stack = _held_stack()
+    for i in range(len(stack) - 1, -1, -1):
+        if stack[i].lock is lock:
+            count = stack[i].count
+            del stack[i]
+            return count
+    return 0
+
+
+# -- instrumented proxies ----------------------------------------------------
+class _WrappedLock:
+    _real_factory = staticmethod(threading.Lock)
+
+    __slots__ = ("_lock", "site")
+
+    def __init__(self, site: str):
+        self._lock = type(self)._real_factory()
+        self.site = site
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._lock.acquire(blocking, timeout)
+        if got:
+            _note_acquire(self)
+        return got
+
+    def release(self) -> None:
+        _note_release(self)
+        self._lock.release()
+
+    def locked(self) -> bool:
+        fn = getattr(self._lock, "locked", None)
+        return bool(fn()) if fn is not None else False
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<seacheck {type(self).__name__} site={self.site}>"
+
+
+class _WrappedRLock(_WrappedLock):
+    _real_factory = staticmethod(threading.RLock)
+
+    __slots__ = ()
+
+    # Condition-protocol delegation (threading.Condition(wrapped_rlock))
+    def _is_owned(self):
+        return self._lock._is_owned()
+
+    def _release_save(self):
+        count = _forget(self)
+        return (self._lock._release_save(), count)
+
+    def _acquire_restore(self, state):
+        real_state, count = state
+        self._lock._acquire_restore(real_state)
+        _note_acquire(self, count=max(count, 1))
+
+
+def _creation_frame(depth: int = 2):
+    """First caller frame with a real source file. Skips synthetic frames
+    (``<string>``): a dataclass ``field(default_factory=threading.Lock)``
+    fires from the exec-generated ``__init__``, and the interesting caller
+    is whoever constructed the dataclass."""
+    f = sys._getframe(depth)
+    while f is not None and f.f_code.co_filename.startswith("<"):
+        f = f.f_back
+    return f
+
+
+def _make_factory(wrapper_cls, original, fragments):
+    def factory():
+        f = _creation_frame(2)
+        if f is not None:
+            fname = f.f_code.co_filename.replace(os.sep, "/")
+            if any(frag in fname for frag in fragments):
+                short = "/".join(fname.rsplit("/", 2)[-2:])
+                return wrapper_cls(f"{short}:{f.f_lineno}")
+        return original()
+
+    factory._seacheck_original = original  # type: ignore[attr-defined]
+    return factory
+
+
+def instrumented_lock(site: str, *, rlock: bool = False) -> _WrappedLock:
+    """An always-instrumented lock for tests and fixtures."""
+    return (_WrappedRLock if rlock else _WrappedLock)(site)
+
+
+# -- fcntl interposition -----------------------------------------------------
+def _blocking_lock_op(op: int) -> bool:
+    return bool(op & (fcntl.LOCK_EX | fcntl.LOCK_SH)) and not (
+        op & fcntl.LOCK_NB
+    )
+
+
+def _fcntl_caller_allowlisted() -> bool:
+    f = sys._getframe(2)
+    while f is not None:
+        code = f.f_code
+        fname = code.co_filename.replace(os.sep, "/")
+        if "seacheck" not in fname:
+            return (os.path.basename(fname), code.co_name) in FCNTL_ALLOWLIST
+        f = f.f_back
+    return False  # pragma: no cover
+
+
+def _note_fcntl(kind: str) -> None:
+    stack = _held_stack()
+    if not stack or _fcntl_caller_allowlisted():
+        return
+    held_sites = tuple(rec.lock.site for rec in stack)
+    tname = threading.current_thread().name
+    with _state.guard:
+        key = f"{kind}@{held_sites}"
+        if key in _state.reported_fcntl:
+            return
+        _state.reported_fcntl.add(key)
+        _state.findings.append(
+            Finding(
+                "held-across-fcntl",
+                f"blocking {kind} while holding in-process lock(s) — a "
+                "cross-process wait under a thread lock (allowlist the "
+                "site in FCNTL_ALLOWLIST only with a written deadlock "
+                "argument)",
+                sites=held_sites,
+                thread=tname,
+            )
+        )
+
+
+def _wrap_flock(orig):
+    def flock(fd, operation):
+        if _blocking_lock_op(operation):
+            _note_fcntl("fcntl.flock")
+        return orig(fd, operation)
+
+    flock._seacheck_original = orig  # type: ignore[attr-defined]
+    return flock
+
+
+def _wrap_lockf(orig):
+    def lockf(fd, cmd, *args):
+        if _blocking_lock_op(cmd):
+            _note_fcntl("fcntl.lockf")
+        return orig(fd, cmd, *args)
+
+    lockf._seacheck_original = orig  # type: ignore[attr-defined]
+    return lockf
+
+
+# -- lifecycle ---------------------------------------------------------------
+def install(path_fragments: tuple[str, ...] = DEFAULT_PATH_FRAGMENTS) -> None:
+    """Patch the lock factories and fcntl. Idempotent. Must run before
+    ``repro`` imports (dataclass default_factory binds at class creation)."""
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    _orig["Lock"] = threading.Lock
+    _orig["RLock"] = threading.RLock
+    _orig["flock"] = fcntl.flock
+    _orig["lockf"] = fcntl.lockf
+    threading.Lock = _make_factory(  # type: ignore[misc]
+        _WrappedLock, _orig["Lock"], path_fragments
+    )
+    threading.RLock = _make_factory(  # type: ignore[misc]
+        _WrappedRLock, _orig["RLock"], path_fragments
+    )
+    fcntl.flock = _wrap_flock(_orig["flock"])
+    fcntl.lockf = _wrap_lockf(_orig["lockf"])
+
+
+def uninstall() -> None:
+    global _installed
+    if not _installed:
+        return
+    _installed = False
+    threading.Lock = _orig.pop("Lock")  # type: ignore[misc]
+    threading.RLock = _orig.pop("RLock")  # type: ignore[misc]
+    fcntl.flock = _orig.pop("flock")
+    fcntl.lockf = _orig.pop("lockf")
+
+
+def installed() -> bool:
+    return _installed
+
+
+def findings() -> list[Finding]:
+    with _state.guard:
+        return list(_state.findings)
+
+
+def drain_findings() -> list[Finding]:
+    with _state.guard:
+        out = list(_state.findings)
+        _state.findings.clear()
+        return out
+
+
+def reset() -> None:
+    """Clear the order graphs AND findings (test isolation)."""
+    with _state.guard:
+        _state.edges.clear()
+        _state.pair_order.clear()
+        _state.findings.clear()
+        _state.reported_cycles.clear()
+        _state.reported_pairs.clear()
+        _state.reported_fcntl.clear()

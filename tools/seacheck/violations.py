@@ -1,0 +1,105 @@
+"""Violation model, suppression comments, and the accepted-violations baseline.
+
+A violation is identified for baseline purposes by ``(rule, path, symbol)``
+— NOT by line number — so unrelated edits above a baselined site do not
+resurrect it and force baseline churn. ``symbol`` is the dotted qualname of
+the enclosing function/class (module-level code uses ``<module>``).
+
+Suppression is per-line: a trailing ``# seacheck: ignore[rule-id]`` (or the
+blanket ``# seacheck: ignore``) on the flagged line silences it.  A
+function-level ``# seacheck: holds-lock`` annotation on (or immediately
+above) a ``def`` line asserts that every mutation inside the function runs
+with the relevant lock already held by the caller — the lexical
+lock-discipline rule trusts it, and the runtime layer is what actually
+verifies lock ownership.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import dataclass, field
+
+#: rule id -> short human name (filled by rules/__init__ registration)
+RULES: dict[str, str] = {}
+
+_IGNORE_RE = re.compile(r"#\s*seacheck:\s*ignore(?:\[([a-z0-9-]+)\])?")
+_HOLDS_LOCK_RE = re.compile(r"#\s*seacheck:\s*holds-lock\b")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str        # e.g. "reservation-pairing"
+    path: str        # repo-relative posix path
+    line: int        # 1-based line of the offending node
+    symbol: str      # dotted qualname of the enclosing def/class
+    message: str
+
+    def key(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.symbol)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.symbol}: {self.message}"
+
+
+@dataclass
+class SourceFile:
+    """One parsed module plus the per-line suppression table."""
+
+    path: str                    # repo-relative posix path
+    source: str
+    lines: list[str] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.lines = self.source.splitlines()
+
+    def suppressed(self, line: int, rule: str) -> bool:
+        if not 1 <= line <= len(self.lines):
+            return False
+        m = _IGNORE_RE.search(self.lines[line - 1])
+        if m is None:
+            return False
+        return m.group(1) is None or m.group(1) == rule
+
+    def holds_lock(self, def_line: int) -> bool:
+        """True when the ``def`` at ``def_line`` carries (or is preceded
+        by) a ``# seacheck: holds-lock`` annotation. Decorator and
+        comment lines between the annotation and the ``def`` are
+        skipped, so the annotation sits naturally above a decorated
+        method."""
+        ln = def_line
+        while 1 <= ln <= len(self.lines):
+            text = self.lines[ln - 1]
+            if _HOLDS_LOCK_RE.search(text):
+                return True
+            stripped = text.strip()
+            if ln != def_line and not (
+                stripped.startswith("@") or stripped.startswith("#")
+            ):
+                return False
+            ln -= 1
+        return False
+
+
+def load_baseline(path: str) -> dict[tuple[str, str, str], str]:
+    """``{(rule, path, symbol): reason}`` from the baseline JSON file."""
+    try:
+        with open(path) as f:
+            entries = json.load(f)
+    except FileNotFoundError:
+        return {}
+    out = {}
+    for e in entries:
+        out[(e["rule"], e["path"], e["symbol"])] = e.get("reason", "")
+    return out
+
+
+def filter_baselined(
+    violations: list[Violation], baseline: dict[tuple[str, str, str], str]
+) -> tuple[list[Violation], list[tuple[str, str, str]]]:
+    """Split out baselined violations; also return baseline entries that no
+    longer match anything (stale entries should be pruned, not hoarded)."""
+    live_keys = {v.key() for v in violations}
+    fresh = [v for v in violations if v.key() not in baseline]
+    stale = [k for k in baseline if k not in live_keys]
+    return fresh, stale
