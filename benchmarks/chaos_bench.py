@@ -1,0 +1,323 @@
+"""Chaos benchmark: kill a cache root mid-workload and measure the cost
+of degrading around it — the acceptance scenario of the failure-domain
+PR.
+
+Three phases, each on a fresh store seeded with the same working set:
+
+* **Healthy** — stage the working set into the node cache, then read it
+  warm. This is the baseline the degraded run is compared against.
+* **EIO kill** — same staging, but partway through the measured read
+  pass every touch of the cache root starts failing with ``EIO``
+  (injected through the unified fault plane at the ``seafs.open`` /
+  ``seafs.write`` / ``transfer.chunk`` sites, path-scoped to the root).
+  Every read must still return bit-exact bytes (served degraded from
+  the base tier), no open may surface the fault to the application, and
+  the root's circuit breaker must be OPEN by the end. The plane is then
+  lifted and probe writes re-admit the root: ``readmitted`` gates that
+  the breaker actually closed again.
+* **Hung I/O** — a copy onto the cache root stalls forever
+  (``transfer.chunk:delay``); with ``transfer_deadline_s`` set the
+  watchdog must abort it within the deadline (plus scheduling grace),
+  release its admission reservation, and trip the breaker.
+
+The fault schedule is seeded: ``SEA_CHAOS_SEED`` pins it, otherwise a
+random seed is drawn and printed so any run can be replayed.
+
+``PYTHONPATH=src python -m benchmarks.chaos_bench [--json PATH]``
+prints the same ``name,value,derived`` CSV as the other benches;
+``--json`` dumps rows + derived ratios for ``benchmarks.check_regression``
+(the ``chaos`` section).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import random
+import shutil
+import sys
+import tempfile
+import time
+
+from repro.core import Sea, SeaConfig, TierSpec, faults
+from repro.core.faults import FaultPlane
+from repro.core.health import CLOSED, OPEN
+from repro.core.transfer import TransferDeadlineError
+
+_N_FILES = 16
+_FILE_BYTES = 256 << 10
+_KILL_AFTER = _N_FILES // 3       # files read before the root dies
+_DEADLINE_S = 0.3                 # hung-copy watchdog deadline
+_RECOVERY_TIMEOUT_S = 10.0
+_MAX_DEGRADED_OVERHEAD_X = 10.0   # degraded read pass vs healthy warm pass
+_MAX_DEADLINE_GRACE_S = 2.0       # scheduling slop on top of the deadline
+
+SEED = int(os.environ.get("SEA_CHAOS_SEED", "0") or "0") or (
+    random.SystemRandom().randrange(1 << 30)
+)
+
+
+def _key(i: int) -> str:
+    return f"chaos_{i:05d}.bin"
+
+
+def _config(workdir: str, **kw) -> SeaConfig:
+    return SeaConfig(
+        mount=os.path.join(workdir, "mount"),
+        tiers=[
+            TierSpec(name="cache", roots=(os.path.join(workdir, "c0"),)),
+            TierSpec(
+                name="pfs", roots=(os.path.join(workdir, "pfs"),),
+                persistent=True,
+            ),
+        ],
+        max_file_size=2 * _FILE_BYTES,
+        # breaker tuned fast so recovery fits in a bench run
+        health_window_s=5.0,
+        health_min_events=4,
+        # the seeding writes sit in the same stats window as the kill's
+        # failures, so a dead root plateaus around ~40% error rate here;
+        # 0.3 keeps the breaker fail-fast for the bench
+        health_error_threshold=0.3,
+        health_open_s=0.2,
+        fault_seed=SEED,
+        **kw,
+    )
+
+
+def _seed_via_fs(fs) -> dict[str, str]:
+    """Write the working set through Sea (replica on the cache root) and
+    persist each file (replica on base — degradation has a target), then
+    drop the resolver cache so reads route through the cache replica
+    rather than the location ``persist`` just noted."""
+    rng = random.Random(SEED)
+    digests: dict[str, str] = {}
+    for i in range(_N_FILES):
+        blob = rng.randbytes(_FILE_BYTES)
+        p = os.path.join(fs.mount, _key(i))
+        with fs.open(p, "wb") as f:
+            f.write(blob)
+        fs.persist(p)
+        digests[_key(i)] = hashlib.sha256(blob).hexdigest()
+    fs.resolver.invalidate_all()
+    return digests
+
+
+def _read_pass(fs, on_file=None) -> tuple[float, dict[str, str], int]:
+    """Read the whole set; returns (elapsed, digests, open_failures).
+    ``on_file(i)`` runs before file i — the kill switch hook. Each read
+    invalidates its resolver entry first so every open re-resolves
+    through the (possibly dead) cache replica; both the healthy and the
+    degraded pass pay this, so the overhead ratio stays like-for-like."""
+    digests: dict[str, str] = {}
+    failures = 0
+    t0 = time.perf_counter()
+    for i in range(_N_FILES):
+        if on_file is not None:
+            on_file(i)
+        p = os.path.join(fs.mount, _key(i))
+        fs.resolver.invalidate(fs.key_of(p))
+        try:
+            with fs.open(p, "rb") as f:
+                digests[_key(i)] = hashlib.sha256(f.read()).hexdigest()
+        except OSError:
+            failures += 1
+    return time.perf_counter() - t0, digests, failures
+
+
+def _fresh_store(tmp: str, tag: str, **cfg_kw) -> tuple[Sea, dict[str, str]]:
+    sea = Sea(_config(os.path.join(tmp, tag), **cfg_kw))
+    return sea, _seed_via_fs(sea.fs)
+
+
+def bench_chaos(tmp: str) -> tuple[list[dict], dict]:
+    # ---------------------------------------------------------- healthy
+    sea, expected = _fresh_store(tmp, "healthy")
+    fs = sea.fs
+    try:
+        healthy_s, digests, _ = _read_pass(fs)  # cache-served
+        if digests != expected:
+            raise RuntimeError("healthy run returned corrupt data")
+    finally:
+        sea.shutdown()
+
+    # --------------------------------------------------------- EIO kill
+    sea, expected = _fresh_store(tmp, "eio")
+    fs = sea.fs
+    tier = fs.hierarchy.cache_tiers[0]
+    root = tier.roots[0]
+    kill_spec = ";".join(
+        f"{site}:errno=EIO,path={root}/*"
+        for site in ("seafs.open", "seafs.write", "transfer.chunk")
+    )
+    try:
+        def _kill(i: int) -> None:
+            if i == _KILL_AFTER:
+                faults.activate(FaultPlane.from_spec(kill_spec, seed=SEED))
+
+        degraded_s, digests, open_failures = _read_pass(fs, on_file=_kill)
+        torn = sum(1 for k, d in digests.items() if expected[k] != d)
+        snap = fs.telemetry.snapshot()
+        breaker_open = fs.health.breaker_state(root) == OPEN
+
+        # lift the fault; probe writes must re-admit the root
+        faults.deactivate()
+        t0 = time.perf_counter()
+        readmitted = False
+        probe = 0
+        while time.perf_counter() - t0 < _RECOVERY_TIMEOUT_S:
+            if fs.health.breaker_state(root) == CLOSED:
+                readmitted = True
+                break
+            time.sleep(fs.config.health_open_s / 2)
+            with fs.open(os.path.join(fs.mount, f"probe_{probe}.bin"),
+                         "wb") as f:
+                f.write(b"p" * 4096)
+            probe += 1
+        recovery_s = time.perf_counter() - t0
+        sea.flusher.drain()
+        reservation_leaked = tier.reserved_bytes(root)
+    finally:
+        faults.deactivate()
+        sea.shutdown()
+
+    # ---------------------------------------------------------- hung I/O
+    sea = Sea(_config(os.path.join(tmp, "hung"),
+                      transfer_deadline_s=_DEADLINE_S))
+    fs = sea.fs
+    tier = fs.hierarchy.cache_tiers[0]
+    root = tier.roots[0]
+    try:
+        faults.activate(
+            FaultPlane.from_spec("transfer.chunk:delay=60,n=1", seed=SEED)
+        )
+        src = os.path.join(tmp, "hung", "pfs", "hung.bin")
+        with open(src, "wb") as f:
+            f.write(b"h" * _FILE_BYTES)
+        t0 = time.perf_counter()
+        aborted = False
+        try:
+            fs.transfer.copy(
+                src, os.path.join(root, "hung.bin"),
+                src_tier=fs.hierarchy.base, dst_tier=tier, dst_root=root,
+                key="hung.bin", admit="require",
+            )
+        except TransferDeadlineError:
+            aborted = True
+        deadline_abort_s = time.perf_counter() - t0
+        hung_snap = fs.telemetry.snapshot()
+        hung_leaked = tier.reserved_bytes(root)
+    finally:
+        faults.deactivate()
+        sea.shutdown()
+
+    derived = {
+        "seed": SEED,
+        "healthy_s": round(healthy_s, 3),
+        "degraded_s": round(degraded_s, 3),
+        "degraded_overhead_x": round(degraded_s / max(healthy_s, 1e-9), 2),
+        "torn_reads": torn,
+        "open_failures": open_failures,
+        "degraded_reads": snap["degraded_reads"],
+        "breaker_opens": snap["breaker_opens"],
+        "breaker_open_after_kill": int(breaker_open),
+        "readmitted": int(readmitted),
+        "recovery_s": round(recovery_s, 3),
+        "reservation_leaked": int(reservation_leaked + hung_leaked),
+        "deadline_s": _DEADLINE_S,
+        "deadline_abort_s": round(deadline_abort_s, 3),
+        "deadline_aborted": int(aborted),
+        "deadline_aborts": hung_snap["deadline_aborts"],
+    }
+    rows = [
+        {
+            "name": f"chaos_healthy_warm_{_N_FILES}x{_FILE_BYTES >> 10}KiB",
+            "value": round(healthy_s * 1e6 / _N_FILES, 2),
+            "derived": "us_per_file cache-served",
+        },
+        {
+            "name": f"chaos_degraded_read_{_N_FILES}x{_FILE_BYTES >> 10}KiB",
+            "value": round(degraded_s * 1e6 / _N_FILES, 2),
+            "derived": (
+                f"us_per_file overhead={derived['degraded_overhead_x']}x"
+                f" degraded_reads={derived['degraded_reads']}"
+            ),
+        },
+        {
+            "name": "chaos_breaker_recovery",
+            "value": round(recovery_s * 1e3, 1),
+            "derived": f"ms_to_readmit readmitted={derived['readmitted']}",
+        },
+        {
+            "name": "chaos_hung_copy_abort",
+            "value": round(deadline_abort_s * 1e3, 1),
+            "derived": (
+                f"ms_to_abort deadline={_DEADLINE_S * 1e3:.0f}ms"
+                f" leaked={derived['reservation_leaked']}"
+            ),
+        },
+    ]
+    return rows, derived
+
+
+def main(argv: list[str] | None = None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    json_path = None
+    if "--json" in argv:
+        if argv.index("--json") + 1 >= len(argv):
+            print("usage: chaos_bench [--json PATH]")
+            raise SystemExit(2)
+        json_path = argv[argv.index("--json") + 1]
+
+    print(f"chaos seed: {SEED} (rerun with SEA_CHAOS_SEED={SEED})",
+          file=sys.stderr)
+    t_start = time.perf_counter()
+    tmp = tempfile.mkdtemp(prefix="sea_chaos_bench_")
+    try:
+        print("name,value,derived")
+        rows, derived = bench_chaos(tmp)
+        for row in rows:
+            print(f"{row['name']},{row['value']},{row['derived']}")
+        print(
+            f"acceptance_degraded_clean,"
+            f"{derived['torn_reads'] + derived['open_failures']},"
+            f"==0_required"
+        )
+        print(
+            f"acceptance_readmitted,{derived['readmitted']},==1_required"
+        )
+        print(
+            f"acceptance_deadline_abort,{derived['deadline_abort_s']},"
+            f"<={_DEADLINE_S + _MAX_DEADLINE_GRACE_S}s_required"
+        )
+        ok = (
+            derived["torn_reads"] == 0
+            and derived["open_failures"] == 0
+            and derived["degraded_reads"] > 0
+            and derived["breaker_open_after_kill"] == 1
+            and derived["readmitted"] == 1
+            and derived["degraded_overhead_x"] <= _MAX_DEGRADED_OVERHEAD_X
+            and derived["deadline_aborted"] == 1
+            and derived["deadline_abort_s"]
+            <= _DEADLINE_S + _MAX_DEADLINE_GRACE_S
+            and derived["reservation_leaked"] == 0
+        )
+        if json_path:
+            with open(json_path, "w") as f:
+                json.dump(
+                    {
+                        "rows": rows,
+                        **derived,
+                        "elapsed_s": round(time.perf_counter() - t_start, 2),
+                    },
+                    f,
+                    indent=2,
+                )
+        raise SystemExit(0 if ok else 1)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

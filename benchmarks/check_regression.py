@@ -1,13 +1,13 @@
 """CI perf-regression gate for the placement/multiproc/resolve/transfer/
-readahead/extent/federation/training/seacheck benchmarks.
+readahead/extent/federation/training/seacheck/chaos benchmarks.
 
-Compares a freshly produced ``BENCH_pr9.json`` (written by
+Compares a freshly produced ``BENCH_pr10.json`` (written by
 ``placement_bench --json`` + ``multiproc_bench --json`` +
 ``resolve_bench --json`` + ``transfer_bench --json`` +
 ``readahead_bench --json`` + ``extent_bench --json`` +
 ``federation_bench --json`` + ``training_bench --json`` +
-``seacheck_bench --json``, merged by the CI workflow) against the
-committed ``benchmarks/BENCH_baseline.json``.
+``seacheck_bench --json`` + ``chaos_bench --json``, merged by the CI
+workflow) against the committed ``benchmarks/BENCH_baseline.json``.
 
 The structural gates are machine-independent and strict:
   * select() must stay O(1)-flat: ledger select cost at the largest
@@ -60,7 +60,7 @@ Absolute timings vary with runner hardware, so against the baseline only a
 gross regression fails: any ledger-path metric more than ABS_TOLERANCE_X
 slower than the committed number.
 
-``python -m benchmarks.check_regression BENCH_pr9.json [baseline.json]``
+``python -m benchmarks.check_regression BENCH_pr10.json [baseline.json]``
 """
 
 from __future__ import annotations
@@ -91,6 +91,8 @@ MAX_ASYNC_OVERHEAD = 1.15   # async-save step loop vs no-ckpt loop
 MIN_FEED_SPEEDUP = 1.5      # double-buffered device feed vs unbuffered
 MAX_SHARDED_RATIO = 1.01    # ckpt payload / logical state bytes (npy headers)
 MAX_SEACHECK_OVERHEAD_X = 2.0  # SEACHECK=1 tier-1 subset vs uninstrumented
+MAX_DEGRADED_OVERHEAD_X = 10.0  # killed-root read pass vs healthy warm pass
+MAX_DEADLINE_GRACE_S = 2.0  # scheduling slop on the hung-copy abort
 
 _BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_baseline.json")
 
@@ -336,6 +338,59 @@ def check(current: dict, baseline: dict | None) -> list[str]:
                 f"matrix leg is only viable while detection stays cheap)",
             )
 
+    chaos = current.get("chaos")
+    if chaos is None:
+        fail("chaos", "section missing (chaos_bench not run)")
+    else:
+        seed = chaos.get("seed", "?")
+        if chaos["torn_reads"]:
+            fail(
+                "chaos",
+                f"killed-root run returned corrupted reads: "
+                f"{chaos['torn_reads']} files (seed={seed})",
+            )
+        if chaos["open_failures"]:
+            fail(
+                "chaos",
+                f"{chaos['open_failures']} opens surfaced the dead root "
+                f"to the application instead of degrading (seed={seed})",
+            )
+        if chaos["degraded_reads"] <= 0 or not chaos["breaker_open_after_kill"]:
+            fail(
+                "chaos",
+                f"kill did not register: degraded_reads="
+                f"{chaos['degraded_reads']} breaker_open="
+                f"{chaos['breaker_open_after_kill']} (seed={seed})",
+            )
+        overhead = chaos["degraded_overhead_x"]
+        if overhead > MAX_DEGRADED_OVERHEAD_X:
+            fail(
+                "chaos",
+                f"degraded-mode read overhead {overhead}x vs healthy "
+                f"> allowed {MAX_DEGRADED_OVERHEAD_X}x (seed={seed})",
+            )
+        if not chaos["readmitted"]:
+            fail(
+                "chaos",
+                f"breaker never re-admitted the recovered root within "
+                f"{chaos.get('recovery_s', '?')}s (seed={seed})",
+            )
+        limit = chaos["deadline_s"] + MAX_DEADLINE_GRACE_S
+        if not chaos["deadline_aborted"] or chaos["deadline_abort_s"] > limit:
+            fail(
+                "chaos",
+                f"hung copy abort took {chaos['deadline_abort_s']}s "
+                f"(aborted={chaos['deadline_aborted']}) > deadline "
+                f"{chaos['deadline_s']}s + {MAX_DEADLINE_GRACE_S}s grace "
+                f"(seed={seed})",
+            )
+        if chaos["reservation_leaked"]:
+            fail(
+                "chaos",
+                f"failure paths leaked {chaos['reservation_leaked']} "
+                f"reserved bytes (seed={seed})",
+            )
+
     if baseline is not None:
         base_rows = baseline["placement"]["rows"]
         for r in rows:
@@ -366,7 +421,7 @@ def check(current: dict, baseline: dict | None) -> list[str]:
 def main(argv: list[str] | None = None) -> None:
     argv = sys.argv[1:] if argv is None else argv
     if not argv:
-        print("usage: check_regression.py BENCH_pr9.json [baseline.json]")
+        print("usage: check_regression.py BENCH_pr10.json [baseline.json]")
         raise SystemExit(2)
     with open(argv[0]) as f:
         current = json.load(f)

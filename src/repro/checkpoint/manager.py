@@ -62,6 +62,7 @@ class SaveHandle:
         self._done = threading.Event()
         self._exc: BaseException | None = None
         self._waiters = 0
+        self._consumed = False  # outcome observed via result()
         self._lock = threading.Lock()
 
     def done(self) -> bool:
@@ -78,6 +79,7 @@ class SaveHandle:
         finally:
             with self._lock:
                 self._waiters -= 1
+        self._consumed = True
         if self._exc is not None:
             raise self._exc
         return self.directory
@@ -104,6 +106,9 @@ class CheckpointManager:
         default_factory=threading.Lock, repr=False
     )
     _inflight: SaveHandle | None = field(default=None, repr=False)
+    #: last background save that failed with nobody blocked in result():
+    #: the next save()/wait() surfaces it instead of letting it vanish
+    _failed: SaveHandle | None = field(default=None, repr=False)
 
     @property
     def root(self) -> str:
@@ -128,7 +133,7 @@ class CheckpointManager:
         compute. ``blocking_flush=True`` additionally drains the flusher
         (implies a blocking save)."""
         t0 = time.monotonic()
-        prev = self._inflight
+        prev = self._unsettled()
         if prev is not None:
             prev.result()  # serialize saves; surface a failed background write
         d = self._step_dir(step)
@@ -154,9 +159,24 @@ class CheckpointManager:
     def wait(self) -> None:
         """Block until any in-flight async save committed (re-raising its
         failure). Call before shutdown so ``drain()`` sees every leaf."""
-        h = self._inflight
+        h = self._unsettled()
         if h is not None:
             h.result()
+
+    def _unsettled(self) -> SaveHandle | None:
+        """The handle the caller must settle before proceeding: the save
+        still in flight, or — when the background writer already finished
+        AND failed AND nobody observed it — the failed handle. Without the
+        second case a fast-failing async save whose thread cleared
+        ``_inflight`` first would silently swallow its error."""
+        with self._lock:
+            prev = self._inflight
+            if prev is not None:
+                return prev
+            prev, self._failed = self._failed, None
+        if prev is not None and prev._consumed:
+            prev = None  # someone already saw (and re-raised) the failure
+        return prev
 
     def _clear_partial(self, d: str) -> None:
         """Re-saving a step must not mix old and new leaves under a stale
@@ -211,6 +231,8 @@ class CheckpointManager:
         with self._lock:
             if self._inflight is handle:
                 self._inflight = None
+            if exc is not None:
+                self._failed = handle
         overlapped = handle._finish(exc)
         if exc is None and count_overlap and overlapped:
             fs.telemetry.record_ckpt_overlap_hit()

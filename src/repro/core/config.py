@@ -66,6 +66,25 @@ class SeaConfig:
                                         # "src->*", "*->dst", or "*" wildcard
     transfer_retries: int = 2           # retry-with-backoff on transient I/O
     transfer_backoff_s: float = 0.02    # first backoff; doubles per attempt
+    transfer_deadline_s: float = 0.0    # >0: abort a copy whose chunk loop
+                                        # makes no progress for this long —
+                                        # the reservation is released and the
+                                        # root's breaker trips (0 = disabled)
+    #: failure domains (per-root health tracking + circuit breakers)
+    health_window_s: float = 30.0       # sliding window the per-root error
+                                        # rate is computed over
+    health_error_threshold: float = 0.5  # error rate (within the window) that
+                                         # opens a cache root's breaker
+    health_min_events: int = 4          # minimum events in the window before
+                                        # the error rate can trip the breaker
+    health_open_s: float = 2.0          # how long an open breaker waits
+                                        # before admitting a half-open probe
+    #: fault injection (chaos testing; empty = plane inactive)
+    faults: str = ""                    # injection spec, e.g.
+                                        # "transfer.chunk:errno=EIO,p=0.5,n=3"
+                                        # (see repro.core.faults for grammar)
+    fault_seed: int = 0                 # seed of the injection schedule RNG
+                                        # (print it: reruns are reproducible)
     #: multi-process coordination (n_procs Sea instances on one node)
     shared_ledger: bool = False         # file-backed cross-process ledger under
                                         # each root + single-flusher election
@@ -150,6 +169,16 @@ class SeaConfig:
             raise ValueError("transfer_retries must be >= 0")
         if self.transfer_backoff_s < 0:
             raise ValueError("transfer_backoff_s must be >= 0")
+        if self.transfer_deadline_s < 0:
+            raise ValueError("transfer_deadline_s must be >= 0")
+        if self.health_window_s <= 0:
+            raise ValueError("health_window_s must be positive")
+        if not 0.0 < self.health_error_threshold <= 1.0:
+            raise ValueError("health_error_threshold must be in (0, 1]")
+        if self.health_min_events <= 0:
+            raise ValueError("health_min_events must be positive")
+        if self.health_open_s <= 0:
+            raise ValueError("health_open_s must be positive")
         self.transfer_bandwidth_caps = dict(self.transfer_bandwidth_caps)
         for pair, rate in self.transfer_bandwidth_caps.items():
             if float(rate) <= 0:
@@ -287,6 +316,13 @@ class SeaConfig:
             transfer_chunk_bytes=sea.getint("transfer_chunk_bytes", 32 << 20),
             transfer_retries=sea.getint("transfer_retries", 2),
             transfer_backoff_s=sea.getfloat("transfer_backoff_s", 0.02),
+            transfer_deadline_s=sea.getfloat("transfer_deadline_s", 0.0),
+            health_window_s=sea.getfloat("health_window_s", 30.0),
+            health_error_threshold=sea.getfloat("health_error_threshold", 0.5),
+            health_min_events=sea.getint("health_min_events", 4),
+            health_open_s=sea.getfloat("health_open_s", 2.0),
+            faults=sea.get("faults", ""),
+            fault_seed=sea.getint("fault_seed", 0),
             transfer_bandwidth_caps=caps,
             readahead=sea.getboolean("readahead", False),
             readahead_depth=sea.getint("readahead_depth", 4),
@@ -328,6 +364,9 @@ class SeaConfig:
             readahead=env.get("SEA_READAHEAD", "0") not in ("0", "", "false"),
             extent_map=env.get("SEA_EXTENT_MAP", "0") not in ("0", "", "false"),
             extent_bytes=int(env.get("SEA_EXTENT_BYTES", 32 << 20)),
+            transfer_deadline_s=float(env.get("SEA_TRANSFER_DEADLINE_S", "0")),
+            faults=env.get("SEA_FAULTS", ""),
+            fault_seed=int(env.get("SEA_FAULT_SEED", "0")),
         )
 
 

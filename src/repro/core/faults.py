@@ -1,0 +1,277 @@
+"""Unified errno classification and the fault-injection plane.
+
+Two concerns live here because they are two sides of the same contract:
+
+* ``classify`` — the single transient-vs-permanent-vs-capacity errno table
+  shared by the transfer engine's retry loop, the flusher's backoff logic,
+  and the health tracker's breaker trips.  Before this module each caller
+  kept its own partial copy of the table and they disagreed (ENOSPC burned
+  transfer retries while the flusher backed off forever).
+
+* ``FaultPlane`` — named injection sites threaded through seafs / transfer /
+  extents / federation / shared_ledger.  A site is a cheap module-level
+  ``fire("transfer.chunk", path=...)`` call that is a no-op unless a plane
+  is active.  Rules are parsed from a compact spec string (config ``faults``
+  or env ``SEA_FAULTS``) and driven by a seeded RNG so a chaos run is
+  reproducible from its printed seed.
+
+Spec grammar (rules separated by ``;``, fields by ``,``)::
+
+    <site-glob>:<action>[,key=value ...]
+
+    actions:  errno=<NAME|int>   raise OSError(errno) at the site
+              delay=<seconds>    sleep (cancel-aware) at the site
+              torn               truncate the in-flight file to half and
+                                 raise EIO (simulates a torn write)
+              crash              os._exit(86) — crash the process at the
+                                 site (use from subprocess tests only)
+    keys:     p=<0..1>           per-hit probability (seeded RNG)
+              n=<int>            fire at most n times, then disarm
+              after=<int>        skip the first `after` matching hits
+              path=<glob>        only fire when the site's path matches
+
+Example: ``transfer.chunk:errno=EIO,p=0.5,n=3;seafs.open:delay=0.2,path=*/disk0/*``
+"""
+
+from __future__ import annotations
+
+import errno as _errno
+import fnmatch
+import os
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+# ---------------------------------------------------------------------------
+# Shared errno classification (single source of truth — transfer.py and
+# flusher.py alias these rather than keeping private copies).
+# ---------------------------------------------------------------------------
+
+# Copy-mechanism errors: the fast path (copy_file_range / sendfile) is not
+# supported for this file pair — demote to the next implementation, do not
+# count against retries or health.
+FALLBACK_ERRNOS = frozenset(
+    {
+        _errno.EXDEV,
+        _errno.EINVAL,
+        _errno.ENOSYS,
+        _errno.EOPNOTSUPP,
+        getattr(_errno, "ENOTSUP", _errno.EOPNOTSUPP),
+        _errno.EBADF,
+    }
+)
+
+# Fail fast: retrying cannot help (wrong path shape, permissions, name too
+# long).  The flusher parks these on a long backoff instead of hammering.
+PERMANENT_ERRNOS = frozenset(
+    {
+        _errno.EISDIR,
+        _errno.ENOTDIR,
+        _errno.EACCES,
+        _errno.EPERM,
+        _errno.ENAMETOOLONG,
+    }
+)
+
+# Capacity exhaustion: retrying burns time without freeing bytes.  These trip
+# the root's circuit breaker so placement routes around the full root.
+CAPACITY_ERRNOS = frozenset({_errno.ENOSPC, getattr(_errno, "EDQUOT", _errno.ENOSPC)})
+
+#: classification labels returned by :func:`classify`
+TRANSIENT = "transient"
+PERMANENT = "permanent"
+CAPACITY = "capacity"
+
+
+def classify(exc: BaseException) -> str:
+    """Classify an I/O exception for retry/breaker decisions.
+
+    Returns ``"capacity"`` (ENOSPC/EDQUOT — trip the breaker, don't retry),
+    ``"permanent"`` (retry cannot help), or ``"transient"`` (worth a retry).
+    Non-OSError exceptions are transient: they are usually injected faults or
+    wrapper errors whose cause is unknown.
+    """
+    e = getattr(exc, "errno", None)
+    if e is None:
+        return TRANSIENT
+    if e in CAPACITY_ERRNOS:
+        return CAPACITY
+    if e in PERMANENT_ERRNOS:
+        return PERMANENT
+    return TRANSIENT
+
+
+# ---------------------------------------------------------------------------
+# Fault-injection plane
+# ---------------------------------------------------------------------------
+
+
+class FaultCrash(SystemExit):
+    """Raised in lieu of os._exit when a crash action runs with exit disabled."""
+
+
+@dataclass
+class FaultRule:
+    site: str  # fnmatch glob over site names
+    action: str = ""  # "errno" | "delay" | "torn" | "crash"
+    errno: int = _errno.EIO
+    delay_s: float = 0.0
+    prob: float = 1.0
+    limit: int = -1  # max fires; -1 = unlimited
+    after: int = 0  # skip the first `after` matching hits
+    path_glob: str = ""  # only fire when ctx path matches (empty = any)
+    # runtime state
+    hits: int = 0
+    fires: int = 0
+    rng: random.Random = field(default_factory=random.Random, repr=False)
+
+
+class FaultPlane:
+    """Deterministic, seeded fault schedule over named injection sites.
+
+    Thread-safe: rule state advances under an internal lock so concurrent
+    workers hitting the same site see a consistent schedule.
+    """
+
+    def __init__(self, rules: list[FaultRule] | None = None, *, seed: int = 0) -> None:
+        self.seed = int(seed)
+        self.rules: list[FaultRule] = list(rules or [])
+        self._lock = threading.Lock()
+        for i, r in enumerate(self.rules):
+            r.rng = random.Random((self.seed << 8) ^ i)
+
+    # -- spec parsing -------------------------------------------------------
+
+    @classmethod
+    def from_spec(cls, spec: str, *, seed: int = 0) -> "FaultPlane":
+        rules: list[FaultRule] = []
+        for raw in (spec or "").split(";"):
+            raw = raw.strip()
+            if not raw:
+                continue
+            site, _, rest = raw.partition(":")
+            if not rest:
+                raise ValueError(f"fault rule {raw!r}: missing action")
+            rule = FaultRule(site=site.strip())
+            for part in rest.split(","):
+                part = part.strip()
+                if not part:
+                    continue
+                k, sep, v = part.partition("=")
+                k = k.strip()
+                v = v.strip()
+                if k == "errno":
+                    rule.action = "errno"
+                    rule.errno = getattr(_errno, v) if not v.isdigit() else int(v)
+                elif k == "delay":
+                    rule.action = "delay"
+                    rule.delay_s = float(v)
+                elif k == "torn" and not sep:
+                    rule.action = "torn"
+                elif k == "crash" and not sep:
+                    rule.action = "crash"
+                elif k == "p":
+                    rule.prob = float(v)
+                elif k == "n":
+                    rule.limit = int(v)
+                elif k == "after":
+                    rule.after = int(v)
+                elif k == "path":
+                    rule.path_glob = v
+                else:
+                    raise ValueError(f"fault rule {raw!r}: unknown field {part!r}")
+            if not rule.action:
+                raise ValueError(f"fault rule {raw!r}: no action given")
+            rules.append(rule)
+        return cls(rules, seed=seed)
+
+    # -- firing -------------------------------------------------------------
+
+    def fire(self, site: str, *, path: str | None = None, cancel=None) -> None:
+        """Evaluate all rules against a site hit; may raise or delay."""
+        for rule in self.rules:
+            if not fnmatch.fnmatchcase(site, rule.site):
+                continue
+            if rule.path_glob and not (path and fnmatch.fnmatch(path, rule.path_glob)):
+                continue
+            with self._lock:
+                rule.hits += 1
+                if rule.hits <= rule.after:
+                    continue
+                if rule.limit >= 0 and rule.fires >= rule.limit:
+                    continue
+                if rule.prob < 1.0 and rule.rng.random() >= rule.prob:
+                    continue
+                rule.fires += 1
+            self._act(rule, site, path, cancel)
+
+    def _act(self, rule: FaultRule, site: str, path: str | None, cancel) -> None:
+        if rule.action == "errno":
+            raise OSError(rule.errno, f"{os.strerror(rule.errno)} [injected@{site}]", path)
+        if rule.action == "delay":
+            # Cancel-aware hang: a deadline watchdog setting the cancel event
+            # unblocks the sleep, modelling a mount that un-wedges on abort.
+            if cancel is not None:
+                cancel.wait(rule.delay_s)
+            else:
+                time.sleep(rule.delay_s)
+            return
+        if rule.action == "torn":
+            if path:
+                try:
+                    size = os.path.getsize(path)
+                    # deliberately NOT atomic: the whole point is to tear
+                    # the in-flight file the way a dying device would
+                    with open(path, "r+b") as f:  # seacheck: ignore[atomic-commit]
+                        f.truncate(size // 2)
+                except OSError:
+                    pass
+            raise OSError(_errno.EIO, f"torn write [injected@{site}]", path)
+        if rule.action == "crash":
+            os._exit(86)
+        raise AssertionError(f"unknown fault action {rule.action!r}")
+
+
+# ---------------------------------------------------------------------------
+# Process-global activation.  Sites call the module-level ``fire`` which is a
+# single attribute check when no plane is active — cheap enough to leave in
+# production code paths.
+# ---------------------------------------------------------------------------
+
+_ACTIVE: FaultPlane | None = None
+
+
+def activate(plane: FaultPlane | None) -> None:
+    global _ACTIVE
+    _ACTIVE = plane
+
+
+def deactivate() -> None:
+    global _ACTIVE
+    _ACTIVE = None
+
+
+def active_plane() -> FaultPlane | None:
+    return _ACTIVE
+
+
+def fire(site: str, *, path: str | None = None, cancel=None) -> None:
+    plane = _ACTIVE
+    if plane is not None:
+        plane.fire(site, path=path, cancel=cancel)
+
+
+#: Injection sites currently threaded through the data plane.  Keep this in
+#: sync with the table in docs/ARCHITECTURE.md ("Failure domains").
+SITES = (
+    "seafs.open",  # before opening a cache-tier real for read
+    "seafs.write",  # before each application write on a cache-tier handle
+    "transfer.chunk",  # after each chunk of a whole-file copy (path=tmp)
+    "transfer.range_chunk",  # after each chunk of an extent copy_range
+    "transfer.commit",  # just before the atomic os.replace commit
+    "extents.stage",  # before staging an extent into a part file
+    "federation.pull",  # before a peer pull copy begins
+    "flusher.flush",  # before the flusher copies a key to base
+    "shared_ledger.append",  # before a journal record is appended
+)

@@ -35,12 +35,15 @@ import fcntl
 import json
 import os
 import queue
+import sys
 import threading
 import time
 import traceback
 from urllib.parse import quote, unquote
 
+from . import faults
 from .extents import PART_SUFFIX
+from .faults import TRANSIENT, classify
 from .ledger import LEDGER_DIRNAME, TMP_SUFFIX
 from .lists import Mode
 from .seafs import SeaFS
@@ -111,6 +114,16 @@ class Flusher:
                 self._q.put(None)
             for t in self._threads:
                 t.join(timeout=30)
+                if t.is_alive():
+                    # a worker wedged in hung I/O must not look like a
+                    # clean stop: surface it and count it (the daemon
+                    # thread is abandoned; process exit reaps it)
+                    print(
+                        f"sea: flusher thread {t.name} still alive after a "
+                        "30s join — abandoning it",
+                        file=sys.stderr,
+                    )
+                    self.fs.telemetry.record_hung_thread_join()
         finally:
             # leadership MUST be returned even if a worker join blew up,
             # or every surviving follower waits out a dead lockfile holder
@@ -418,7 +431,7 @@ class Flusher:
             try:
                 try:
                     self.process(key)
-                except Exception:
+                except Exception as e:
                     # a failed flush (exhausted transfer retries, device
                     # error) must not kill the worker thread — but it
                     # must not vanish either: count it, surface the
@@ -426,13 +439,18 @@ class Flusher:
                     # next idle tick (drain()/shutdown also re-scan)
                     self.fs.telemetry.record_flush_failure()
                     traceback.print_exc()
+                    # backoff: a persistently failing key re-copies (and
+                    # tracebacks) at most ~once per second, not once per
+                    # idle tick. The shared errno table (repro.core.faults)
+                    # stretches it 30x for permanent/capacity classes —
+                    # EACCES or a full base tier will not heal in a second,
+                    # and cache-root ENOSPC already tripped the breaker
+                    # inside the engine instead of burning retries here.
+                    backoff = max(1.0, 10 * self.config.flush_interval_s)
+                    if classify(e) is not TRANSIENT:
+                        backoff *= 30
                     with self._cv:
-                        # backoff: a persistently failing key re-copies
-                        # (and tracebacks) at most ~once per second, not
-                        # once per idle tick
-                        self._failed[key] = time.monotonic() + max(
-                            1.0, 10 * self.config.flush_interval_s
-                        )
+                        self._failed[key] = time.monotonic() + backoff
             finally:
                 requeue = False
                 with self._cv:
@@ -450,22 +468,23 @@ class Flusher:
                 self._maybe_retry_failed()
 
     def _maybe_retry_failed(self) -> None:
-        """Re-submit one failed flush whose backoff has elapsed (the
+        """Re-submit every failed flush whose backoff has elapsed (the
         engine's own retry/backoff absorbed the fast transients; this
-        covers longer outages). Suspended during drain() — a permanently
-        failing key must not keep the pending set non-empty forever."""
-        retry = None
+        covers longer outages). The whole eligible backlog goes in one
+        tick: after a mass failure — a tier dying and recovering — the
+        old one-key-per-idle-tick behaviour drained N keys in
+        N*flush_interval_s instead of letting the worker pool chew them
+        concurrently. Suspended during drain() — a permanently failing
+        key must not keep the pending set non-empty forever."""
+        retries: list[str] = []
         with self._cv:
             if not self._draining:
                 now = time.monotonic()
-                for k, not_before in self._failed.items():
-                    if not_before <= now:
-                        retry = k
-                        break
-                if retry is not None:
-                    del self._failed[retry]
-        if retry is not None:
-            self.submit(retry)
+                retries = [k for k, nb in self._failed.items() if nb <= now]
+                for k in retries:
+                    del self._failed[k]
+        for k in retries:
+            self.submit(k)
 
     def _process_all_sync(self) -> None:
         while True:
@@ -550,6 +569,11 @@ class Flusher:
             # The engine copystats the source onto the committed copy, so
             # equality here means byte-for-byte freshness.
             return
+        # the flusher only ever drains *away from* cache roots: the
+        # destination is always the base tier, which the breaker never
+        # quarantines — a sick root's files still reach durability while
+        # nothing new is staged into it (placement filters it out)
+        faults.fire("flusher.flush", path=src)
         result = self.fs.transfer.copy(
             src,
             dst,

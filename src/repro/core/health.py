@@ -1,0 +1,201 @@
+"""Per-root health tracking and circuit breakers for cache roots.
+
+Every cache root gets a sliding-window record of recent I/O outcomes
+(success/failure + latency) fed by the seafs open paths, the transfer
+engine, the flusher, and federation pulls.  The window drives a circuit
+breaker per root:
+
+    closed ── error rate over threshold, ENOSPC, or deadline abort ──▶ open
+    open ──────────────── ``open_s`` elapsed ──────────────────▶ half-open
+    half-open ── probe success ──▶ closed        ── probe failure ──▶ open
+
+While a breaker is open the root is *quarantined*: `PlacementPolicy`
+excludes it from `eligible_roots` / prefetch selection, reads degrade to
+other roots, peers, or base, and the flusher keeps draining *from* it but
+nothing new is staged *into* it.  The base (persistent) tier is never
+tracked — call sites only feed cache-tier events, because base has no
+"elsewhere" to degrade to.
+
+Lock discipline (enforced by seacheck's lock_discipline rule): all breaker
+state — the ``_roots`` map and each root's ``br_state`` / ``br_opened`` /
+``br_probe`` / ``ev_window`` — is mutated only under ``self._lock``.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+
+from .faults import CAPACITY, classify
+
+#: breaker states
+CLOSED = "closed"
+OPEN = "open"
+HALF_OPEN = "half-open"
+
+
+class _RootState:
+    __slots__ = ("ev_window", "br_state", "br_opened", "br_probe", "lat_sum", "lat_n")
+
+    def __init__(self) -> None:
+        self.ev_window: deque = deque()  # (monotonic_ts, is_error)
+        self.br_state = CLOSED
+        self.br_opened = 0.0  # monotonic ts of last open transition
+        self.br_probe = 0.0  # monotonic ts the outstanding half-open probe was claimed
+        self.lat_sum = 0.0  # success latency accumulator (window-aligned-ish)
+        self.lat_n = 0
+
+
+class HealthTracker:
+    """Sliding-window error stats + a circuit breaker per cache root."""
+
+    def __init__(
+        self,
+        *,
+        window_s: float = 30.0,
+        error_threshold: float = 0.5,
+        min_events: int = 4,
+        open_s: float = 2.0,
+        telemetry=None,
+    ) -> None:
+        self.window_s = float(window_s)
+        self.error_threshold = float(error_threshold)
+        self.min_events = int(min_events)
+        self.open_s = float(open_s)
+        self.telemetry = telemetry
+        self._lock = threading.Lock()
+        self._roots: dict[str, _RootState] = {}
+
+    # -- event feed ---------------------------------------------------------
+
+    def record_success(self, root: str, seconds: float = 0.0) -> None:
+        """Feed a successful I/O against `root`; closes a half-open breaker."""
+        with self._lock:
+            st = self._state_locked(root)
+            st.ev_window.append((time.monotonic(), False))
+            st.lat_sum += seconds
+            st.lat_n += 1
+            self._purge_locked(st)
+            if st.br_state is not CLOSED:
+                # probe (or concurrent straggler) succeeded: re-admit the root
+                st.br_state = CLOSED
+                st.br_probe = 0.0
+                st.ev_window.clear()
+
+    def record_failure(self, root: str, exc: BaseException | None = None) -> None:
+        """Feed a failed I/O against `root`; may open the breaker.
+
+        ENOSPC/EDQUOT (capacity) failures trip the breaker immediately —
+        retrying cannot free bytes, so the root is routed around at once.
+        """
+        now = time.monotonic()
+        with self._lock:
+            st = self._state_locked(root)
+            st.ev_window.append((now, True))
+            self._purge_locked(st)
+            if st.br_state is HALF_OPEN:
+                self._open_locked(st, now, requarantine=True)
+                return
+            if st.br_state is OPEN:
+                return
+            if exc is not None and classify(exc) == CAPACITY:
+                self._open_locked(st, now)
+                return
+            n = len(st.ev_window)
+            errs = sum(1 for _, is_err in st.ev_window if is_err)
+            if n >= self.min_events and errs / n >= self.error_threshold:
+                self._open_locked(st, now)
+
+    def trip(self, root: str, reason: str = "") -> None:
+        """Open the breaker immediately (deadline abort, ENOSPC, operator)."""
+        now = time.monotonic()
+        with self._lock:
+            st = self._state_locked(root)
+            st.ev_window.append((now, True))
+            self._purge_locked(st)
+            if st.br_state is not OPEN:
+                self._open_locked(st, now, requarantine=st.br_state is HALF_OPEN)
+
+    # -- queries ------------------------------------------------------------
+
+    def allow(self, root: str) -> bool:
+        """May new work be placed on `root`?
+
+        Closed → yes.  Open → no, until ``open_s`` has elapsed; then exactly
+        one caller is admitted as the half-open probe (a stale unresolved
+        probe claim expires after another ``open_s``, admitting a new probe
+        so a crashed prober cannot wedge re-admission forever).
+        """
+        with self._lock:
+            st = self._roots.get(root)
+            if st is None or st.br_state is CLOSED:
+                return True
+            now = time.monotonic()
+            if st.br_state is OPEN:
+                if now - st.br_opened < self.open_s:
+                    return False
+                st.br_state = HALF_OPEN
+                st.br_probe = now
+                return True
+            # half-open: one outstanding probe at a time
+            if now - st.br_probe >= self.open_s:
+                st.br_probe = now
+                return True
+            return False
+
+    def quarantined(self, root: str) -> bool:
+        """True while the breaker is open (no probe admission implied)."""
+        with self._lock:
+            st = self._roots.get(root)
+            return st is not None and st.br_state is not CLOSED
+
+    def breaker_state(self, root: str) -> str:
+        with self._lock:
+            st = self._roots.get(root)
+            return CLOSED if st is None else st.br_state
+
+    def snapshot(self) -> dict:
+        """Per-root view for telemetry export / debugging."""
+        out = {}
+        with self._lock:
+            now = time.monotonic()
+            for root, st in self._roots.items():
+                n = len(st.ev_window)
+                errs = sum(1 for _, is_err in st.ev_window if is_err)
+                out[root] = {
+                    "state": st.br_state,
+                    "events": n,
+                    "errors": errs,
+                    "error_rate": (errs / n) if n else 0.0,
+                    "mean_latency_s": (st.lat_sum / st.lat_n) if st.lat_n else 0.0,
+                    "open_for_s": (now - st.br_opened) if st.br_state is not CLOSED else 0.0,
+                }
+        return out
+
+    # -- internals ----------------------------------------------------------
+
+    def _state_locked(self, root: str) -> _RootState:  # seacheck: holds-lock
+        st = self._roots.get(root)
+        if st is None:
+            st = self._roots[root] = _RootState()
+        return st
+
+    def _purge_locked(self, st: _RootState) -> None:  # seacheck: holds-lock
+        horizon = time.monotonic() - self.window_s
+        win = st.ev_window
+        while win and win[0][0] < horizon:
+            win.popleft()
+        if st.lat_n > 4096:  # keep the latency mean roughly window-sized
+            st.lat_sum /= 2.0
+            st.lat_n //= 2
+
+    def _open_locked(self, st: _RootState, now: float, requarantine: bool = False) -> None:  # seacheck: holds-lock
+        st.br_state = OPEN
+        st.br_opened = now
+        st.br_probe = 0.0
+        t = self.telemetry
+        if t is not None:
+            t.record_breaker_open()
+            if not requarantine:
+                t.record_root_quarantine()

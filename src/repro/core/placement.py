@@ -33,11 +33,21 @@ class PlacementPolicy:
         max_file_size: int,
         n_procs: int,
         rng: random.Random | None = None,
+        health=None,
     ):
         self.hierarchy = hierarchy
         self.max_file_size = max_file_size
         self.n_procs = n_procs
         self.rng = rng or random.Random()
+        #: HealthTracker (bound by SeaFS): quarantined cache roots are
+        #: excluded from selection until their breaker re-admits them —
+        #: the base tier is never filtered (unconditional fallback)
+        self.health = health
+
+    def _root_allowed(self, tier: Tier, root: str) -> bool:
+        if self.health is None or tier.spec.persistent:
+            return True
+        return self.health.allow(root)
 
     @property
     def required_bytes(self) -> int:
@@ -49,7 +59,8 @@ class PlacementPolicy:
         return [
             r
             for r in roots
-            if tier.admissible(
+            if self._root_allowed(tier, r)
+            and tier.admissible(
                 r, required=self.required_bytes, nbytes=self.max_file_size
             )
         ]
@@ -143,6 +154,8 @@ class PlacementPolicy:
             roots = list(tier.roots)
             self.rng.shuffle(roots)
             for r in roots:
-                if tier.free_bytes(r) >= max(nbytes, self.required_bytes):
+                if self._root_allowed(tier, r) and tier.free_bytes(r) >= max(
+                    nbytes, self.required_bytes
+                ):
                     return tier, r
         return None

@@ -54,6 +54,7 @@ default (beyond-paper behaviour).
 from __future__ import annotations
 
 import re
+import sys
 import threading
 import time
 from collections import OrderedDict, deque
@@ -208,6 +209,16 @@ class Prefetcher:
         t = self._thread
         if t is not None and t.is_alive():
             t.join(timeout=10)
+            if t.is_alive():
+                # a digestion thread wedged in hung I/O must not look
+                # like a clean stop: surface it and count it (the daemon
+                # thread is abandoned; process exit reaps it)
+                print(
+                    f"sea: readahead thread {t.name} still alive after a "
+                    "10s join — abandoning it",
+                    file=sys.stderr,
+                )
+                self.fs.telemetry.record_hung_thread_join()
         self.finalize()
 
     def finalize(self) -> None:

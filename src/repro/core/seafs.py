@@ -19,9 +19,12 @@ import threading
 import time
 from collections import defaultdict
 
+from . import faults
 from .config import SeaConfig
 from .extents import PART_SUFFIX, ExtentStore, extent_token, punch_hole
+from .faults import CAPACITY, FaultPlane, classify
 from .federation import FederationRegistry
+from .health import HealthTracker
 from .ledger import LEDGER_DIRNAME, TMP_SUFFIX, file_disk_usage
 from .lists import CompiledRules, Mode
 from .placement import PlacementPolicy
@@ -94,6 +97,20 @@ class _SeaFile:
 
     def __getattr__(self, name):
         return getattr(self._raw, name)
+
+    def write(self, data):
+        raw = self._raw
+        if not self._writing:
+            return raw.write(data)
+        try:
+            faults.fire("seafs.write", path=self._real)
+            return raw.write(data)
+        except OSError as e:
+            if self._tier.spec.persistent or classify(e) != CAPACITY:
+                raise
+            # the cache root filled mid-stream: migrate the half-written
+            # handle to the next eligible root (or base) and keep going
+            return self._fs._relocate_write(self, data, e)
 
     def __iter__(self):
         return iter(self._raw)
@@ -250,10 +267,21 @@ class SeaFS:
         self.telemetry = telemetry or Telemetry()
         if self.hierarchy.ledger is not None:
             self.hierarchy.ledger.telemetry = self.telemetry
+        # failure-domain layer: per-root sliding-window health feeding a
+        # circuit breaker; quarantined cache roots drop out of placement
+        # until a half-open probe succeeds (the base tier is never gated)
+        self.health = HealthTracker(
+            window_s=config.health_window_s,
+            error_threshold=config.health_error_threshold,
+            min_events=config.health_min_events,
+            open_s=config.health_open_s,
+            telemetry=self.telemetry,
+        )
         self.policy = PlacementPolicy(
             self.hierarchy,
             max_file_size=config.max_file_size,
             n_procs=config.n_procs,
+            health=self.health,
         )
         self.resolver = Resolver(
             self.hierarchy,
@@ -267,6 +295,13 @@ class SeaFS:
         )
         # the data plane: every tier-to-tier byte moves through here
         self.transfer = TransferEngine(config, self.telemetry, self.policy)
+        self.transfer.health = self.health
+        # fault-injection plane (tests/chaos benches only): activates the
+        # process-wide plane from the config spec string
+        if getattr(config, "faults", ""):
+            faults.activate(
+                FaultPlane.from_spec(config.faults, seed=config.fault_seed)
+            )
         self.mount = config.mount
         os.makedirs(self.mount, exist_ok=True)
         self._mount_prefix = self.mount + os.sep
@@ -485,6 +520,8 @@ class SeaFS:
                     if f is not None:
                         return f
             try:
+                if not writing:
+                    faults.fire("seafs.open", path=real)
                 raw = io.open(real, mode, **kw)
             except FileNotFoundError:
                 if reservation is not None:
@@ -504,6 +541,17 @@ class SeaFS:
                     # removed again mid-retry: raise the canonical error
                     # against the persistent location, like a plain miss
                     return self._open_base_miss(key, mode, **kw)
+            except OSError as e:
+                if reservation is not None:
+                    self.policy.release_write(tier, reservation)
+                if writing:
+                    self._drop_writer(key)
+                    raise
+                if tier.persistent:
+                    raise  # the base is the last resort; nothing slower
+                # a real I/O error from a cache device (EIO, dead mount):
+                # feed the breaker and degrade to any other replica
+                return self._open_read_degraded(key, mode, kw, tier, real, e)
             except Exception:
                 if reservation is not None:
                     self.policy.release_write(tier, reservation)
@@ -555,6 +603,7 @@ class SeaFS:
             # key-locked slow path, which owns that decision
             return None
         try:
+            faults.fire("seafs.open", path=real)
             raw = io.open(real, mode, **kw)
         except OSError:
             return None  # the open doubled as the verify: slow path heals
@@ -580,6 +629,133 @@ class SeaFS:
         return io.open(
             os.path.join(self.hierarchy.base.roots[0], key), mode, **kw
         )
+
+    def _open_read_degraded(self, key: str, mode: str, kw, tier, real, exc):
+        """A cache-tier read open failed with a genuine I/O error (not
+        ENOENT). Called under the key lock. Feed the root's breaker, then
+        serve the read from any OTHER replica — another root or tier, a
+        live peer, or the base copy — so a sick device degrades service
+        instead of failing the application. Re-raises the original error
+        only when no healthy replica exists anywhere (a cache-only key
+        whose sole copy sits on the dead root is genuinely lost)."""
+        root = tier.root_of(real)
+        if root is not None:
+            self.health.record_failure(root, exc)
+        bad = os.path.abspath(real)
+        self.resolver.invalidate(key)
+        for vtier, vreal in self.hierarchy.locate_all(key):
+            if os.path.abspath(vreal) == bad:
+                continue
+            if not vtier.persistent:
+                vroot = vtier.root_of(vreal)
+                if vroot is not None and self.health.quarantined(vroot):
+                    continue
+            try:
+                raw = io.open(vreal, mode, **kw)
+            except OSError:
+                continue
+            self.telemetry.record_degraded_read()
+            self.resolver.note_location(key, vtier, vreal)
+            with self._lock:
+                self._open_counts[key] += 1
+                self._access_clock[key] = time.monotonic()
+            return _SeaFile(self, key, raw, vtier, False, vreal)
+        if self.federation is not None:
+            pulled = self._pull_from_peer(key)
+            if pulled is not None:
+                vtier, vreal = pulled
+                try:
+                    raw = io.open(vreal, mode, **kw)
+                except OSError:
+                    raw = None
+                if raw is not None:
+                    self.telemetry.record_degraded_read()
+                    with self._lock:
+                        self._open_counts[key] += 1
+                        self._access_clock[key] = time.monotonic()
+                    return _SeaFile(self, key, raw, vtier, False, vreal)
+        raise exc
+
+    def _relocate_write(self, sf: _SeaFile, data, exc: OSError) -> int:
+        """A cache-root write hit ENOSPC/EDQUOT mid-stream: trip the
+        root's breaker (capacity exhaustion opens it instantly — retrying
+        cannot make room) and migrate the half-written handle to wherever
+        placement now lands (another root, a slower tier, or base),
+        carrying the already-flushed prefix over. Returns the write's
+        byte count on success; re-raises the original error when the
+        buffered prefix cannot be flushed (the device is genuinely full
+        and holds bytes we cannot recover), the handle is text-mode, or
+        placement offers nowhere new to go."""
+        key = sf._key
+        raw = sf._raw
+        if isinstance(raw, io.TextIOBase):
+            raise exc  # opaque text-mode positions: no safe migration
+        with self.key_lock(key):
+            old_tier, old_real, old_res = sf._tier, sf._real, sf._reservation
+            root = old_tier.root_of(old_real)
+            if root is not None:
+                self.health.trip(root, "enospc")
+            try:
+                raw.flush()
+                pos = raw.tell()
+            except (OSError, ValueError):
+                raise exc from None
+            make_room = self._lru_make_room if self.config.lru_evict else None
+            new_tier, new_root, new_res = self.policy.place_new(
+                reserve=True, make_room=make_room
+            )
+            new_real = os.path.join(new_root, key)
+            if os.path.abspath(new_real) == os.path.abspath(old_real):
+                # single-root hierarchy with no base room: nowhere to go
+                self.policy.release_write(new_tier, new_res)
+                raise exc
+            try:
+                os.makedirs(os.path.dirname(new_real), exist_ok=True)
+                # written in place like any application write handle: the
+                # registered writer + key lock already divert readers for
+                # the whole open, exactly as the normal write path does
+                with open(old_real, "rb") as fi, open(  # seacheck: ignore[atomic-commit]
+                    new_real, "wb"
+                ) as fo:  # seacheck: ignore[atomic-commit]
+                    _shutil.copyfileobj(fi, fo)
+                new_raw = io.open(new_real, "r+b")  # seacheck: ignore[atomic-commit]
+                new_raw.seek(pos)
+            except OSError:
+                self.policy.release_write(new_tier, new_res)
+                try:
+                    os.unlink(new_real)
+                except OSError:
+                    pass
+                raise exc from None
+            # settle the abandoned placement: reservation back, partial
+            # file gone, stale ledger entry (overwrite-in-place) dropped
+            if sf._fd is not None:
+                self._fd_index.pop(sf._fd, None)
+            try:
+                raw.close()
+            except OSError:
+                pass
+            self.policy.release_write(old_tier, old_res)
+            try:
+                os.unlink(old_real)
+            except OSError:
+                pass
+            if root is not None:
+                old_tier.note_removed(root, key)
+            self._fed_unpublish(key)  # close re-publishes the new replica
+            self.resolver.invalidate(key)
+            self.resolver.note_location(key, new_tier, new_real, verified=False)
+            sf._raw = new_raw
+            sf._tier = new_tier
+            sf._real = new_real
+            sf._reservation = new_res
+            try:
+                sf._fd = new_raw.fileno()
+            except (OSError, ValueError, AttributeError):
+                sf._fd = None
+            if sf._fd is not None:
+                self._fd_index[sf._fd] = (key, new_tier, new_real)
+            return new_raw.write(data)
 
     # -- federation (peer-aware miss resolution) -----------------------------
     def _fed_publish(self, key: str, root: str, nbytes: int) -> None:
@@ -675,6 +851,10 @@ class SeaFS:
                 self.resolver.note_location(key, tier, real)
                 if root is not None and not tier.persistent:
                     self._fed_publish(key, root, actual)
+                    # a committed application write is health evidence —
+                    # this is what lets a half-open probe write re-admit
+                    # a recovered root
+                    self.health.record_success(root, dt)
             self.telemetry.record_io(tier.name, written=max(nbytes, 0), seconds=dt)
         elif fast:
             # fast-path reads batch their I/O counters per thread — no
@@ -1411,6 +1591,7 @@ class SeaFS:
         if not admitted:
             return 0
         try:
+            faults.fire("extents.stage", path=em.part_real, cancel=cancel)
             self.transfer.copy_range(
                 located[1],
                 em.part_real,
@@ -1487,7 +1668,9 @@ class SeaFS:
             roots = list(tier.roots)
             self.policy.rng.shuffle(roots)
             for r in roots:
-                if tier.free_bytes(r) >= nbytes:
+                if self.policy._root_allowed(tier, r) and (
+                    tier.free_bytes(r) >= nbytes
+                ):
                     return tier, r
         return None
 

@@ -50,6 +50,7 @@ import time
 from contextlib import contextmanager
 from urllib.parse import quote, unquote
 
+from . import faults
 from .ledger import LEDGER_DIRNAME, scan_root
 
 _MAGIC = "SEALEDGER1"
@@ -315,6 +316,7 @@ class SharedCapacityLedger:
     # seacheck: holds-lock
     def _append(self, acct: _SharedAccount, line: str) -> None:
         data = line.encode()
+        faults.fire("shared_ledger.append")
         os.pwrite(acct.fd, data, acct.offset)
         acct.offset += len(data)
         acct.lines += 1

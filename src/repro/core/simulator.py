@@ -117,6 +117,8 @@ class SimResult:
     peer_hits: int = 0            # cold inputs served from a peer node's
                                   # cache (federation) instead of Lustre
     peer_pull_bytes: float = 0.0  # bytes moved over peer->node pull flows
+    degraded_placements: int = 0  # writes the tier-failure model diverted
+                                  # away from a down (breaker-open) tier
 
 
 class _Node:
@@ -187,6 +189,16 @@ class Simulator:
         peer_stream_bw: float = 0.0,         # per-flow cap of one peer pull
                                              # stream (0 = NIC-limited only),
                                              # the "peer->*" engine cap
+        tier_fail: str = "",                 # failure-domain model: this tier
+                                             # ("tmpfs" or "disk<j>") is dead
+                                             # — breaker open — during the
+                                             # window; placement degrades to
+                                             # the next tier exactly like the
+                                             # real quarantine path
+        tier_fail_start_s: float = 0.0,      # failure-window start (sim time)
+        tier_fail_recover_s: float = 0.0,    # window end — half-open probe
+                                             # re-admits the tier; 0 = the
+                                             # tier never recovers
     ):
         assert system in ("lustre", "sea", "sea-flushall")
         self.cl = cluster
@@ -262,6 +274,13 @@ class Simulator:
         self.input_owner: dict[int, int] = {}
         self.peer_hits = 0
         self.peer_pull_bytes = 0.0
+        # Tier-failure model: mirrors the health tracker's quarantine — a
+        # down tier is skipped by placement (writes degrade to the next
+        # tier/Lustre) and every avoided selection is a degraded placement.
+        self.tier_fail = tier_fail
+        self.tier_fail_start_s = float(tier_fail_start_s)
+        self.tier_fail_recover_s = float(tier_fail_recover_s)
+        self.degraded_placements = 0
         self.ttfb_s: float | None = None
         self.now = 0.0
         self.nodes = [_Node(i, cluster) for i in range(cluster.c)]
@@ -333,16 +352,30 @@ class Simulator:
             probes = 1 + self.cl.g + 1
         return self.resolve_probe_s * probes
 
+    def _tier_down(self, tier: str) -> bool:
+        """Is ``tier`` inside its modelled failure window (breaker open)?"""
+        if not self.tier_fail or self.tier_fail != tier:
+            return False
+        if self.now < self.tier_fail_start_s:
+            return False
+        return self.tier_fail_recover_s <= 0.0 or self.now < self.tier_fail_recover_s
+
     def sea_place_write(self, nd: _Node) -> tuple[str, tuple[str, ...]]:
         cl, F = self.cl, self.w.F
         reserve = cl.p * F
         if nd.tmpfs_used + F + reserve <= cl.t:
-            nd.tmpfs_used += F
-            nd.n_cached += 1
-            return "tmpfs", (f"mem_w{nd.idx}",)
+            if self._tier_down("tmpfs"):
+                self.degraded_placements += 1
+            else:
+                nd.tmpfs_used += F
+                nd.n_cached += 1
+                return "tmpfs", (f"mem_w{nd.idx}",)
         for probe in range(cl.g):
             j = (nd.disk_rr + probe) % cl.g
             if nd.disk_used[j] + F + reserve <= cl.r:
+                if self._tier_down(f"disk{j}"):
+                    self.degraded_placements += 1
+                    continue
                 nd.disk_rr = (j + 1) % cl.g
                 nd.disk_used[j] += F
                 nd.n_cached += 1
@@ -648,6 +681,7 @@ class Simulator:
             extents_staged=self.extents_staged,
             peer_hits=self.peer_hits,
             peer_pull_bytes=self.peer_pull_bytes,
+            degraded_placements=self.degraded_placements,
         )
 
     def _has_flush_work(self) -> bool:

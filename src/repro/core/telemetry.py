@@ -120,6 +120,11 @@ COUNTERS: dict[str, str] = {
     "ckpt_overlap_hits": "async saves that finished with no waiter",
     "ckpt_restore_fallbacks": "corrupt checkpoints discarded by restore",
     "device_feed_stalls": "device_iter consumers that found the feed empty",
+    "root_quarantines": "cache roots newly quarantined by the circuit breaker",
+    "breaker_opens": "breaker open transitions (incl. half-open re-trips)",
+    "degraded_reads": "reads rerouted around a sick root (other root/peer/base)",
+    "deadline_aborts": "transfers aborted by the progress-deadline watchdog",
+    "hung_thread_joins": "worker threads still alive after a bounded stop() join",
 }
 
 
@@ -185,6 +190,16 @@ class Telemetry:
     device_feed_stalls: int = 0     # device_iter consumers that found the
                                     # feed queue empty (compute outran the
                                     # host->device stage)
+    root_quarantines: int = 0       # cache roots newly quarantined (closed ->
+                                    # open breaker transitions)
+    breaker_opens: int = 0          # every open transition, including a
+                                    # half-open probe failing back to open
+    degraded_reads: int = 0         # reads served from another root, a peer,
+                                    # or base because the placed root is sick
+    deadline_aborts: int = 0        # copies aborted because no chunk progress
+                                    # happened within transfer_deadline_s
+    hung_thread_joins: int = 0      # stop() joins that timed out with the
+                                    # worker thread still alive
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
     _tls: threading.local = field(default_factory=threading.local, repr=False)
     _locals: list = field(default_factory=list, repr=False)
@@ -357,6 +372,26 @@ class Telemetry:
     def record_device_feed_stall(self) -> None:
         with self._lock:
             self.device_feed_stalls += 1
+
+    def record_root_quarantine(self) -> None:
+        with self._lock:
+            self.root_quarantines += 1
+
+    def record_breaker_open(self) -> None:
+        with self._lock:
+            self.breaker_opens += 1
+
+    def record_degraded_read(self) -> None:
+        with self._lock:
+            self.degraded_reads += 1
+
+    def record_deadline_abort(self) -> None:
+        with self._lock:
+            self.deadline_aborts += 1
+
+    def record_hung_thread_join(self) -> None:
+        with self._lock:
+            self.hung_thread_joins += 1
 
     # -- thread-batched fast-path counters ----------------------------------
     def local(self) -> ThreadCounters:

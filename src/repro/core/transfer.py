@@ -51,36 +51,18 @@ import socket
 import threading
 import time
 
+from . import faults
 from .config import SeaConfig
+from .faults import FALLBACK_ERRNOS, TRANSIENT, classify
 from .ledger import TMP_SUFFIX as _TMP_SUFFIX
 from .telemetry import Telemetry
 from .tiers import Tier
 
-#: errnos that demote the copy implementation instead of failing the
-#: transfer: cross-device / unsupported-by-fs for copy_file_range, bad
-#: descriptor types for sendfile, and plain "not implemented" kernels.
-_FALLBACK_ERRNOS = frozenset(
-    (
-        errno.EXDEV,
-        errno.EINVAL,
-        errno.ENOSYS,
-        errno.EOPNOTSUPP,
-        getattr(errno, "ENOTSUP", errno.EOPNOTSUPP),
-        errno.EBADF,
-    )
-)
-
-#: errnos that no amount of retrying fixes — fail fast, don't burn
-#: retries+backoff re-copying into the same wall
-_PERMANENT_ERRNOS = frozenset(
-    (
-        errno.EISDIR,
-        errno.ENOTDIR,
-        errno.EACCES,
-        errno.EPERM,
-        errno.ENAMETOOLONG,
-    )
-)
+#: errno classification lives in repro.core.faults (one shared table for
+#: the engine's retry loop, the flusher's backoff, and the breaker trips);
+#: the historical module-private names stay as aliases.
+_FALLBACK_ERRNOS = FALLBACK_ERRNOS
+_PERMANENT_ERRNOS = faults.PERMANENT_ERRNOS
 
 _HAS_COPY_FILE_RANGE = hasattr(os, "copy_file_range")
 _HAS_SENDFILE = hasattr(os, "sendfile")
@@ -114,6 +96,24 @@ class TransferAdmissionError(TransferError):
 
 class TransferCancelled(TransferError):
     """The transfer's cancel event fired between chunks."""
+
+
+class TransferDeadlineError(TransferError):
+    """The chunk loop made no progress for ``transfer_deadline_s``: the
+    watchdog aborted the copy, the reservation was released, and the
+    destination root's breaker was tripped."""
+
+
+class _WatchEntry:
+    """One in-flight copy under the progress-deadline watchdog."""
+
+    __slots__ = ("progress", "deadline_s", "cancel", "tripped")
+
+    def __init__(self, cancel: threading.Event, deadline_s: float):
+        self.progress = time.monotonic()  # last chunk completion
+        self.deadline_s = deadline_s
+        self.cancel = cancel
+        self.tripped = False
 
 
 class TransferResult:
@@ -232,8 +232,10 @@ class TransferEngine:
         self.n_workers = max(1, int(getattr(config, "transfer_workers", 4)))
         self.retries = max(0, int(getattr(config, "transfer_retries", 2)))
         self.backoff_s = float(getattr(config, "transfer_backoff_s", 0.02))
+        self.deadline_s = float(getattr(config, "transfer_deadline_s", 0.0))
         self.telemetry = telemetry or Telemetry()
         self.policy = policy  # bound by SeaFS after PlacementPolicy exists
+        self.health = None  # HealthTracker, bound by SeaFS (optional)
         self._caps_spec = dict(getattr(config, "transfer_bandwidth_caps", {}) or {})
         self._buckets: dict[str, _TokenBucket] = {}
         self._bucket_lock = threading.Lock()
@@ -249,6 +251,10 @@ class TransferEngine:
         self._q: "queue.Queue" = queue.Queue(maxsize=self.n_workers * 2)
         self._threads: list[threading.Thread] = []
         self._pool_lock = threading.Lock()
+        #: progress-deadline watchdog (armed only when transfer_deadline_s>0)
+        self._watch: set[_WatchEntry] = set()
+        self._watch_lock = threading.Lock()
+        self._watch_thread: threading.Thread | None = None
 
     # -- worker pool ---------------------------------------------------------
     def _ensure_pool(self) -> None:
@@ -332,6 +338,76 @@ class TransferEngine:
             self._q.put(None)
         for t in threads:
             t.join(timeout=10)
+
+    # -- progress-deadline watchdog ------------------------------------------
+    def _deadline_guard(self, cancel, on_chunk):
+        """Arm the watchdog for one copy when ``transfer_deadline_s`` is set.
+
+        Returns ``(cancel, on_chunk, entry)``: the (possibly new) cancel
+        event the watchdog will set on a stall, an ``on_chunk`` wrapper that
+        stamps per-chunk progress, and the watch entry to unregister (None
+        when deadlines are disabled).  The abort is cooperative — the chunk
+        loop (and cancel-aware injected hangs) observe the event between
+        chunks; a thread wedged *inside* a blocking syscall cannot be
+        interrupted from Python and is documented as out of contract.
+        Note the deadline measures *stall*, not total duration: a heavily
+        token-bucket-throttled transfer must configure a deadline above its
+        worst-case per-chunk wait.
+        """
+        if self.deadline_s <= 0:
+            return cancel, on_chunk, None
+        if cancel is None:
+            cancel = threading.Event()
+        entry = _WatchEntry(cancel, self.deadline_s)
+
+        def stamped(copied, total, path, _e=entry, _inner=on_chunk):
+            _e.progress = time.monotonic()
+            if _inner is not None:
+                _inner(copied, total, path)
+
+        with self._watch_lock:
+            self._watch.add(entry)
+            t = self._watch_thread
+            if t is None or not t.is_alive():
+                t = threading.Thread(
+                    target=self._watchdog, name="sea-transfer-watchdog", daemon=True
+                )
+                self._watch_thread = t
+                t.start()
+        return cancel, stamped, entry
+
+    def _watch_unregister(self, entry: _WatchEntry) -> None:
+        with self._watch_lock:
+            self._watch.discard(entry)
+
+    def _watchdog(self) -> None:
+        while True:
+            with self._watch_lock:
+                entries = list(self._watch)
+            now = time.monotonic()
+            tick = 0.25
+            for e in entries:
+                if e.tripped:
+                    continue
+                stalled = now - e.progress
+                if stalled >= e.deadline_s:
+                    e.tripped = True
+                    e.cancel.set()
+                else:
+                    tick = min(tick, max(0.005, (e.deadline_s - stalled) / 4))
+            time.sleep(tick)
+
+    def _deadline_abort(self, entry, src, dst, root, cause) -> "TransferDeadlineError":
+        """Account a watchdog trip: telemetry + breaker, build the error."""
+        self.telemetry.record_deadline_abort()
+        if root is not None and self.health is not None:
+            self.health.trip(root, "deadline")
+        err = TransferDeadlineError(
+            errno.ETIMEDOUT,
+            f"transfer {src} -> {dst} made no progress for {entry.deadline_s}s",
+        )
+        err.__cause__ = cause
+        return err
 
     # -- throttling ----------------------------------------------------------
     def _pair_cap(self, pair: str) -> float:
@@ -418,14 +494,37 @@ class TransferEngine:
         if res is None and accounted and admit is not None:
             res = self._admit(dst_tier, dst_root, src_size, mode=admit)
 
+        # per-root health: only cache destinations are tracked (base has no
+        # "elsewhere" to degrade to, so its breaker would only hurt)
+        health_root = (
+            dst_root
+            if self.health is not None and accounted and not dst_tier.spec.persistent
+            else None
+        )
+        cancel, on_chunk, watch = self._deadline_guard(cancel, on_chunk)
+        t1 = time.monotonic()
         try:
             nbytes, attempts, impl = self._copy_with_retries(
                 src, dst, pair, preserve_stat, cancel, on_chunk
             )
-        except BaseException:
+        except BaseException as e:
             if res is not None and isinstance(dst_tier, Tier):
                 dst_tier.release_write(res)
+            if watch is not None and watch.tripped:
+                raise self._deadline_abort(watch, src, dst, health_root, e) from e
+            if (
+                health_root is not None
+                and isinstance(e, OSError)
+                and not isinstance(e, (TransferCancelled, TransferAdmissionError))
+                and e.errno != errno.ENOENT  # src vanished, not a sick root
+            ):
+                self.health.record_failure(health_root, e)
             raise
+        finally:
+            if watch is not None:
+                self._watch_unregister(watch)
+        if health_root is not None:
+            self.health.record_success(health_root, time.monotonic() - t1)
         if accounted:
             if key is None:
                 key = os.path.relpath(dst, dst_root)
@@ -462,7 +561,12 @@ class TransferEngine:
         All of :meth:`copy`'s failure guarantees apply — a peer that
         dies or evicts mid-pull leaves no partial file, no leaked
         reservation, and ``dst`` untouched; the caller falls back to
-        the base tier and expunges the registry entry."""
+        the base tier and expunges the registry entry.
+
+        A configured ``transfer_deadline_s`` applies here too: a peer whose
+        export hangs mid-pull trips the watchdog, the pull cancels, and the
+        caller's OSError handler falls back to base."""
+        faults.fire("federation.pull", path=src)
         return self.copy(
             src,
             dst,
@@ -509,34 +613,42 @@ class TransferEngine:
         pair = f"{self._tier_name(src_tier)}->{self._tier_name(dst_tier)}"
         if cancel is not None and cancel.is_set():
             raise TransferCancelled(f"range transfer {src} -> {dst} cancelled")
+        cancel, on_chunk, watch = self._deadline_guard(cancel, on_chunk)
         delay = self.backoff_s
         last_exc: BaseException | None = None
-        for attempt in range(1, self.retries + 2):
-            try:
-                copied, impl = self._copy_range_once(
-                    src, dst, offset, length, pair, cancel, on_chunk
-                )
-            except TransferCancelled:
-                raise
-            except Exception as e:
-                last_exc = e
-                permanent = (
-                    isinstance(e, OSError) and e.errno in _PERMANENT_ERRNOS
-                )
-                if permanent or attempt > self.retries:
-                    break
-                if cancel is not None and cancel.is_set():
-                    raise TransferCancelled(
-                        f"range transfer to {dst} cancelled"
-                    ) from e
-                time.sleep(delay)
-                delay *= 2
-            else:
-                seconds = time.perf_counter() - t0
-                self.telemetry.record_transfer(
-                    pair, nbytes=copied, seconds=seconds, retries=attempt - 1
-                )
-                return TransferResult(copied, seconds, attempt, impl)
+        try:
+            for attempt in range(1, self.retries + 2):
+                try:
+                    copied, impl = self._copy_range_once(
+                        src, dst, offset, length, pair, cancel, on_chunk
+                    )
+                except TransferCancelled as e:
+                    if watch is not None and watch.tripped:
+                        raise self._deadline_abort(watch, src, dst, None, e) from e
+                    raise
+                except Exception as e:
+                    last_exc = e
+                    # transient errors retry; permanent and capacity
+                    # (ENOSPC) classes fail fast — see repro.core.faults
+                    if classify(e) is not TRANSIENT or attempt > self.retries:
+                        break
+                    if cancel is not None and cancel.is_set():
+                        if watch is not None and watch.tripped:
+                            raise self._deadline_abort(watch, src, dst, None, e) from e
+                        raise TransferCancelled(
+                            f"range transfer to {dst} cancelled"
+                        ) from e
+                    time.sleep(delay)
+                    delay *= 2
+                else:
+                    seconds = time.perf_counter() - t0
+                    self.telemetry.record_transfer(
+                        pair, nbytes=copied, seconds=seconds, retries=attempt - 1
+                    )
+                    return TransferResult(copied, seconds, attempt, impl)
+        finally:
+            if watch is not None:
+                self._watch_unregister(watch)
         if isinstance(last_exc, OSError):
             raise last_exc
         raise TransferError(
@@ -579,6 +691,7 @@ class TransferEngine:
                     on_chunk(copied, length, dst)
                 if self.chunk_hook is not None:
                     self.chunk_hook(copied, length, dst)
+                faults.fire("transfer.range_chunk", path=dst, cancel=cancel)
                 if bucket is not None:
                     self._throttle_wait(bucket.consume(n), ofd)
         if copied != length:
@@ -625,6 +738,7 @@ class TransferEngine:
                         shutil.copystat(src, tmp)
                     except OSError:
                         pass  # stat parity is best-effort (e.g. tmpfs xattrs)
+                faults.fire("transfer.commit", path=dst)
                 os.replace(tmp, dst)  # atomic commit
                 return nbytes, attempt, impl
             except TransferCancelled:
@@ -633,10 +747,9 @@ class TransferEngine:
             except Exception as e:
                 self._discard_tmp(tmp)
                 last_exc = e
-                permanent = (
-                    isinstance(e, OSError) and e.errno in _PERMANENT_ERRNOS
-                )
-                if permanent or attempt > self.retries:
+                # transient errors retry; permanent and capacity (ENOSPC)
+                # classes fail fast — see repro.core.faults for the table
+                if classify(e) is not TRANSIENT or attempt > self.retries:
                     break
                 if cancel is not None and cancel.is_set():
                     raise TransferCancelled(f"transfer to {dst} cancelled") from e
@@ -708,6 +821,7 @@ class TransferEngine:
                     on_chunk(copied, total, tmp)
                 if self.chunk_hook is not None:
                     self.chunk_hook(copied, total, tmp)
+                faults.fire("transfer.chunk", path=tmp, cancel=cancel)
                 if bucket is not None:
                     self._throttle_wait(bucket.consume(n), ofd)
         # size-verified completion: the committed file must hold exactly

@@ -66,6 +66,12 @@ GUARDED: dict[str, tuple[set[str], tuple[str, ...]]] = {
         {"valid", "_maps"},
         (".lock", "._lock"),
     ),
+    # breaker state: every transition (open/half-open/close, probe claims,
+    # window mutation) must happen inside the tracker's single lock
+    "repro/core/health.py": (
+        {"_roots", "br_state", "br_opened", "br_probe", "ev_window", "lat_sum", "lat_n"},
+        ("self._lock",),
+    ),
 }
 
 _MUTATING_METHODS = {
