@@ -79,7 +79,8 @@ class SaveHandle:
         finally:
             with self._lock:
                 self._waiters -= 1
-        self._consumed = True
+        with self._lock:
+            self._consumed = True
         if self._exc is not None:
             raise self._exc
         return self.directory
@@ -90,6 +91,13 @@ class SaveHandle:
         self._exc = exc
         with self._lock:
             overlapped = self._waiters == 0
+            if not overlapped:
+                # a blocked result() caller is about to observe (and for a
+                # failure, re-raise) this outcome: mark it consumed BEFORE
+                # releasing the waiter, so _unsettled() can never pop the
+                # handle in the window before the waiter returns and
+                # re-surface the same failure to a later save()/wait()
+                self._consumed = True
         self._done.set()
         return overlapped
 
@@ -228,12 +236,16 @@ class CheckpointManager:
                 self._gc()
         except BaseException as e:  # surfaced via handle.result()
             exc = e
+        overlapped = handle._finish(exc)
         with self._lock:
             if self._inflight is handle:
                 self._inflight = None
-            if exc is not None:
+            if exc is not None and not handle._consumed:
+                # failed with nobody blocked in result(): park it so the
+                # next save()/wait() surfaces the error. A waiter that WAS
+                # blocked has _consumed set by _finish, so the failure is
+                # never delivered twice.
                 self._failed = handle
-        overlapped = handle._finish(exc)
         if exc is None and count_overlap and overlapped:
             fs.telemetry.record_ckpt_overlap_hit()
 

@@ -119,8 +119,28 @@ class HealthTracker:
 
     # -- queries ------------------------------------------------------------
 
+    def admissible(self, root: str) -> bool:
+        """Pure eligibility query: *would* :meth:`allow` admit work on
+        `root` right now?  Never mutates breaker state — enumeration
+        (``eligible_roots``, spill/eviction eligibility checks) must not
+        consume the single half-open probe slot, or a recovered root's
+        re-admission can be starved by queries that never touch it.
+        Call :meth:`allow` only at the point a root is actually chosen
+        for I/O."""
+        with self._lock:
+            st = self._roots.get(root)
+            if st is None or st.br_state is CLOSED:
+                return True
+            now = time.monotonic()
+            if st.br_state is OPEN:
+                return now - st.br_opened >= self.open_s
+            # half-open: admissible only once the outstanding probe staled
+            return now - st.br_probe >= self.open_s
+
     def allow(self, root: str) -> bool:
-        """May new work be placed on `root`?
+        """May new work be placed on `root`?  Claims the probe slot —
+        call only when the root is actually chosen for I/O (use
+        :meth:`admissible` for side-effect-free filtering).
 
         Closed → yes.  Open → no, until ``open_s`` has elapsed; then exactly
         one caller is admitted as the half-open probe (a stale unresolved

@@ -45,6 +45,19 @@ class PlacementPolicy:
         self.health = health
 
     def _root_allowed(self, tier: Tier, root: str) -> bool:
+        """Side-effect-free eligibility filter: never claims the breaker's
+        half-open probe slot (enumeration must not starve re-admission —
+        see :meth:`HealthTracker.admissible`)."""
+        if self.health is None or tier.spec.persistent:
+            return True
+        return self.health.admissible(root)
+
+    def claim_root(self, tier: Tier, root: str) -> bool:
+        """Claim `root` for I/O that is actually about to happen: a closed
+        breaker is a free pass; a re-admitting breaker hands this caller
+        the single half-open probe slot (False = someone else holds it,
+        re-select). Call only at the point a root is *chosen*, never while
+        merely enumerating candidates."""
         if self.health is None or tier.spec.persistent:
             return True
         return self.health.allow(root)
@@ -99,13 +112,20 @@ class PlacementPolicy:
                 if make_room():
                     tier, root = self.select()
             if not reserve:
-                return tier, root, None
+                if tier is self.hierarchy.base or self.claim_root(tier, root):
+                    return tier, root, None
+                continue  # lost the half-open probe slot: re-select
             if tier is self.hierarchy.base:
                 # unconditional fallback: there is nowhere slower to go
                 return tier, root, self.reserve_write(tier, root)
             admitted, res = self.acquire_write(tier, root)
             if admitted:
-                return tier, root, res
+                # the root is definitely getting this write: claim the
+                # breaker probe slot last, so a lost admission race never
+                # burns the probe without I/O happening
+                if self.claim_root(tier, root):
+                    return tier, root, res
+                self.release_write(tier, res)
         tier = self.hierarchy.base
         root = tier.roots[0]
         return tier, root, self.reserve_write(tier, root)
@@ -154,8 +174,10 @@ class PlacementPolicy:
             roots = list(tier.roots)
             self.rng.shuffle(roots)
             for r in roots:
-                if self._root_allowed(tier, r) and tier.free_bytes(r) >= max(
-                    nbytes, self.required_bytes
+                if (
+                    self._root_allowed(tier, r)
+                    and tier.free_bytes(r) >= max(nbytes, self.required_bytes)
+                    and self.claim_root(tier, r)  # chosen: claim the probe
                 ):
                     return tier, r
         return None

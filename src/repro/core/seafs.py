@@ -102,15 +102,31 @@ class _SeaFile:
         raw = self._raw
         if not self._writing:
             return raw.write(data)
+        pre_pos = None
+        if not self._tier.spec.persistent:
+            # logical position before the write: a large buffered write
+            # goes straight to the raw fd, so ENOSPC can strike after a
+            # prefix of `data` already landed — post-failure tell() counts
+            # those bytes, and relocation trusting it would carry the
+            # prefix over AND rewrite the full data after it (silent
+            # duplication). Migration must rewind to here instead.
+            try:
+                pre_pos = raw.tell()
+            except (OSError, ValueError):
+                pre_pos = None
         try:
             faults.fire("seafs.write", path=self._real)
             return raw.write(data)
         except OSError as e:
-            if self._tier.spec.persistent or classify(e) != CAPACITY:
+            if (
+                self._tier.spec.persistent
+                or classify(e) != CAPACITY
+                or pre_pos is None
+            ):
                 raise
             # the cache root filled mid-stream: migrate the half-written
             # handle to the next eligible root (or base) and keep going
-            return self._fs._relocate_write(self, data, e)
+            return self._fs._relocate_write(self, data, e, pre_pos)
 
     def __iter__(self):
         return iter(self._raw)
@@ -676,12 +692,18 @@ class SeaFS:
                     return _SeaFile(self, key, raw, vtier, False, vreal)
         raise exc
 
-    def _relocate_write(self, sf: _SeaFile, data, exc: OSError) -> int:
+    def _relocate_write(self, sf: _SeaFile, data, exc: OSError, pre_pos: int) -> int:
         """A cache-root write hit ENOSPC/EDQUOT mid-stream: trip the
         root's breaker (capacity exhaustion opens it instantly — retrying
         cannot make room) and migrate the half-written handle to wherever
         placement now lands (another root, a slower tier, or base),
-        carrying the already-flushed prefix over. Returns the write's
+        carrying the already-flushed prefix over. ``pre_pos`` is the
+        handle's logical position captured *before* the failed write —
+        the failure may have pushed a prefix of ``data`` through to the
+        raw fd (post-failure ``tell()`` counts those bytes), so the
+        migrated handle is rewound to ``pre_pos`` and ``data`` rewritten
+        from there, overwriting any partially-landed prefix the copy
+        carried over instead of duplicating it. Returns the write's
         byte count on success; re-raises the original error when the
         buffered prefix cannot be flushed (the device is genuinely full
         and holds bytes we cannot recover), the handle is text-mode, or
@@ -696,8 +718,10 @@ class SeaFS:
             if root is not None:
                 self.health.trip(root, "enospc")
             try:
+                # bytes written *before* this call must reach the disk so
+                # the prefix copy below captures them; a failing flush
+                # means the buffer still holds bytes we cannot recover
                 raw.flush()
-                pos = raw.tell()
             except (OSError, ValueError):
                 raise exc from None
             make_room = self._lru_make_room if self.config.lru_evict else None
@@ -719,7 +743,7 @@ class SeaFS:
                 ) as fo:  # seacheck: ignore[atomic-commit]
                     _shutil.copyfileobj(fi, fo)
                 new_raw = io.open(new_real, "r+b")  # seacheck: ignore[atomic-commit]
-                new_raw.seek(pos)
+                new_raw.seek(pre_pos)
             except OSError:
                 self.policy.release_write(new_tier, new_res)
                 try:
@@ -911,8 +935,13 @@ class SeaFS:
         for tier in self.hierarchy.cache_tiers:
             roots = self.policy.eligible_roots(tier)
             if len(roots) >= 2:
-                target = (tier, roots)
-                break
+                # every stripe root is about to take writes: claim each
+                # breaker probe now (a root that loses the half-open race
+                # drops out of this stripe set)
+                roots = [r for r in roots if self.policy.claim_root(tier, r)]
+                if len(roots) >= 2:
+                    target = (tier, roots)
+                    break
         if target is None:
             return False
         tier, roots = target
@@ -1599,6 +1628,7 @@ class SeaFS:
                 length,
                 src_tier=located[0],
                 dst_tier=em.tier,
+                dst_root=em.root,
                 cancel=cancel,
             )
         except OSError:
@@ -1668,8 +1698,10 @@ class SeaFS:
             roots = list(tier.roots)
             self.policy.rng.shuffle(roots)
             for r in roots:
-                if self.policy._root_allowed(tier, r) and (
-                    tier.free_bytes(r) >= nbytes
+                if (
+                    self.policy._root_allowed(tier, r)
+                    and tier.free_bytes(r) >= nbytes
+                    and self.policy.claim_root(tier, r)  # chosen for I/O
                 ):
                     return tier, r
         return None

@@ -383,6 +383,13 @@ class TransferEngine:
     def _watchdog(self) -> None:
         while True:
             with self._watch_lock:
+                if not self._watch:
+                    # nothing left to watch: exit instead of ticking for
+                    # the life of the process. Clearing _watch_thread
+                    # under the lock lets _deadline_guard respawn the
+                    # thread race-free on the next armed copy.
+                    self._watch_thread = None
+                    return
                 entries = list(self._watch)
             now = time.monotonic()
             tick = 0.25
@@ -588,11 +595,17 @@ class TransferEngine:
         *,
         src_tier: Tier | str | None = None,
         dst_tier: Tier | str | None = None,
+        dst_root: str | None = None,
         cancel: threading.Event | None = None,
         on_chunk=None,
     ) -> TransferResult:
         """Stream ``length`` bytes of ``src`` starting at ``offset`` into
         the same range of ``dst`` — the extent-staging primitive.
+
+        ``dst_root`` (the cache root holding the extent part file) feeds
+        the same per-root health/breaker accounting as :meth:`copy`: a
+        deadline abort or I/O failure on an extent stage trips/records
+        against the destination root exactly like a whole-file copy.
 
         Unlike :meth:`copy` there is no staging tmp and no rename:
         ``dst`` is a preallocated *sparse* destination (an extent plane
@@ -613,9 +626,20 @@ class TransferEngine:
         pair = f"{self._tier_name(src_tier)}->{self._tier_name(dst_tier)}"
         if cancel is not None and cancel.is_set():
             raise TransferCancelled(f"range transfer {src} -> {dst} cancelled")
+        # per-root health: same contract as copy() — only cache
+        # destinations are tracked
+        health_root = (
+            dst_root
+            if self.health is not None
+            and dst_root is not None
+            and isinstance(dst_tier, Tier)
+            and not dst_tier.spec.persistent
+            else None
+        )
         cancel, on_chunk, watch = self._deadline_guard(cancel, on_chunk)
         delay = self.backoff_s
         last_exc: BaseException | None = None
+        t1 = time.monotonic()
         try:
             for attempt in range(1, self.retries + 2):
                 try:
@@ -624,7 +648,9 @@ class TransferEngine:
                     )
                 except TransferCancelled as e:
                     if watch is not None and watch.tripped:
-                        raise self._deadline_abort(watch, src, dst, None, e) from e
+                        raise self._deadline_abort(
+                            watch, src, dst, health_root, e
+                        ) from e
                     raise
                 except Exception as e:
                     last_exc = e
@@ -634,7 +660,9 @@ class TransferEngine:
                         break
                     if cancel is not None and cancel.is_set():
                         if watch is not None and watch.tripped:
-                            raise self._deadline_abort(watch, src, dst, None, e) from e
+                            raise self._deadline_abort(
+                                watch, src, dst, health_root, e
+                            ) from e
                         raise TransferCancelled(
                             f"range transfer to {dst} cancelled"
                         ) from e
@@ -642,6 +670,10 @@ class TransferEngine:
                     delay *= 2
                 else:
                     seconds = time.perf_counter() - t0
+                    if health_root is not None:
+                        self.health.record_success(
+                            health_root, time.monotonic() - t1
+                        )
                     self.telemetry.record_transfer(
                         pair, nbytes=copied, seconds=seconds, retries=attempt - 1
                     )
@@ -649,6 +681,12 @@ class TransferEngine:
         finally:
             if watch is not None:
                 self._watch_unregister(watch)
+        if (
+            health_root is not None
+            and isinstance(last_exc, OSError)
+            and last_exc.errno != errno.ENOENT  # src vanished, not a sick root
+        ):
+            self.health.record_failure(health_root, last_exc)
         if isinstance(last_exc, OSError):
             raise last_exc
         raise TransferError(

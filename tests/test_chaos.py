@@ -12,6 +12,7 @@ each test derives its schedule from the printed seed).
 """
 
 import errno
+import io
 import os
 import random
 import threading
@@ -326,6 +327,185 @@ def test_enospc_mid_write_degrades_on_each_root(tmp_path, bad):
         for r, _, names in os.walk(tmp_path):
             for n in names:
                 assert not n.endswith((".sea_part", ".sea_tmp")), os.path.join(r, n)
+    finally:
+        sea.shutdown()
+
+
+# ------------------------------------------- relocation: partial raw write
+class _PartialFullRaw(io.RawIOBase):
+    """Raw writer that lands a prefix of a large write on disk and then
+    raises ENOSPC — what a filling device does to a BufferedWriter whose
+    big write bypasses the buffer. Post-failure tell() counts the landed
+    prefix, so relocation trusting it would duplicate those bytes."""
+
+    def __init__(self, path, fire_at, partial):
+        super().__init__()
+        self._f = open(path, "wb", buffering=0)
+        self._fire_at = fire_at
+        self._partial = partial
+        self.fired = False
+
+    def writable(self):
+        return True
+
+    def seekable(self):
+        return True
+
+    def write(self, b):
+        b = bytes(b)
+        if not self.fired and len(b) >= self._fire_at:
+            self.fired = True
+            self._f.write(b[: self._partial])
+            raise OSError(errno.ENOSPC, "device full (injected, partial)")
+        return self._f.write(b)
+
+    def seek(self, pos, whence=0):
+        return self._f.seek(pos, whence)
+
+    def tell(self):
+        return self._f.tell()
+
+    def fileno(self):
+        return self._f.fileno()
+
+    def close(self):
+        if not self.closed:
+            self._f.close()
+        super().close()
+
+
+def test_enospc_partial_direct_write_relocates_without_duplication(tmp_path):
+    """REVIEW regression: ENOSPC striking after k bytes of a big buffered
+    write already reached the raw fd must not duplicate those k bytes
+    when the handle migrates — the relocated file rewinds to the
+    pre-write position, not to post-failure tell()."""
+    sea = make_sea(tmp_path, roots=("c0", "c1"))
+    fs = sea.fs
+    prefix, big = b"x" * 10, b"D" * 100
+    try:
+        p = os.path.join(fs.mount, "dup.bin")
+        f = fs.open(p, "wb")
+        old_real = f._real
+        f._raw.close()  # swap in a raw layer that fails like a full disk
+        f._raw = io.BufferedWriter(
+            _PartialFullRaw(old_real, fire_at=64, partial=7), buffer_size=16
+        )
+        assert f.write(prefix) == len(prefix)  # sits in the buffer
+        # big write: buffer flushes (10B), then 7B of `big` land on the
+        # raw fd before ENOSPC -> handle must relocate and keep going
+        assert f.write(big) == len(big)
+        assert f._real != old_real, "handle must have migrated"
+        f.close()
+        with fs.open(p, "rb") as g:
+            got = g.read()
+        assert got == prefix + big, (
+            f"relocated write duplicated the partially-landed prefix: "
+            f"len={len(got)}, want={len(prefix + big)}"
+        )
+    finally:
+        sea.shutdown()
+
+
+# ---------------------------------------------- enumeration vs. probe claim
+def test_admissible_is_pure_and_allow_still_claims():
+    ht = HealthTracker(open_s=0.05)
+    r = "/r0"
+    ht.trip(r)
+    assert not ht.admissible(r)
+    time.sleep(0.07)
+    for _ in range(10):
+        assert ht.admissible(r), "enumeration must be repeatable (no claim)"
+    assert ht.breaker_state(r) == OPEN, "pure queries must not transition"
+    assert ht.allow(r), "the actual claim still gets the probe slot"
+    assert ht.breaker_state(r) == HALF_OPEN
+    assert not ht.admissible(r), "a fresh outstanding probe filters the root"
+    time.sleep(0.07)
+    assert ht.admissible(r), "a stale probe claim re-opens enumeration"
+
+
+def test_enumeration_does_not_starve_halfopen_readmission(tmp_path):
+    """REVIEW regression: placement/spill eligibility queries used to call
+    allow(), consuming the single half-open probe slot without doing any
+    I/O — starving a recovered root's re-admission indefinitely."""
+    sea = make_sea(tmp_path)
+    fs = sea.fs
+    tier = fs.hierarchy.cache_tiers[0]
+    root = tier.roots[0]
+    try:
+        fs.health.trip(root)
+        time.sleep(fs.config.health_open_s + 0.05)
+        for _ in range(25):  # placement queries / spill checks
+            fs.policy.eligible_roots(tier)
+        assert fs.health.breaker_state(root) == OPEN, (
+            "eligibility enumeration must not consume the probe slot"
+        )
+        p = os.path.join(fs.mount, "probe.bin")
+        with fs.open(p, "wb") as f:
+            f.write(b"p" * 32)
+        assert fs.health.breaker_state(root) == CLOSED, (
+            "the first real write claims the probe and re-admits the root"
+        )
+    finally:
+        sea.shutdown()
+
+
+# --------------------------------------------------- watchdog thread hygiene
+def test_idle_watchdog_thread_exits_and_respawns(tmp_path):
+    """REVIEW regression: the deadline watchdog used to spin for the life
+    of the process once armed — it must exit when nothing is in flight
+    and respawn lazily for the next armed copy."""
+    sea = make_sea(tmp_path, transfer_deadline_s=0.2)
+    fs = sea.fs
+    try:
+        src = str(tmp_path / "pfs" / "w.bin")
+        with open(src, "wb") as f:
+            f.write(b"w" * 1024)
+        for i in range(2):
+            fs.transfer.copy(src, str(tmp_path / "pfs" / f"w{i}.out"))
+            deadline = time.monotonic() + 5
+            while (
+                fs.transfer._watch_thread is not None
+                and time.monotonic() < deadline
+            ):
+                time.sleep(0.02)
+            assert fs.transfer._watch_thread is None, (
+                "watchdog must exit once no copies are in flight"
+            )
+    finally:
+        sea.shutdown()
+
+
+# ------------------------------------------------ extent stalls feed breaker
+def test_range_deadline_abort_trips_destination_breaker(tmp_path):
+    """REVIEW regression: a deadline abort on an extent/range copy used to
+    pass root=None, so extent stalls never quarantined the destination
+    root the way whole-file stalls do."""
+    sea = make_sea(tmp_path, transfer_deadline_s=0.25, transfer_chunk_bytes=2048)
+    fs = sea.fs
+    tier = fs.hierarchy.cache_tiers[0]
+    root = tier.roots[0]
+    src = str(tmp_path / "pfs" / "ext.bin")
+    with open(src, "wb") as f:
+        f.write(b"e" * 8192)
+    dst = os.path.join(root, "ext.partfile")
+    with open(dst, "wb") as f:
+        f.truncate(8192)
+    faults.activate(FaultPlane.from_spec("transfer.range_chunk:delay=60,n=1"))
+    try:
+        with pytest.raises(TransferDeadlineError):
+            fs.transfer.copy_range(
+                src,
+                dst,
+                0,
+                8192,
+                src_tier=fs.hierarchy.base,
+                dst_tier=tier,
+                dst_root=root,
+            )
+        assert fs.health.breaker_state(root) == OPEN, (
+            "an extent-stage stall must trip the destination root's breaker"
+        )
+        assert fs.telemetry.snapshot()["deadline_aborts"] >= 1
     finally:
         sea.shutdown()
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint.manager import CheckpointManager
+from repro.checkpoint.manager import CheckpointManager, SaveHandle
 from repro.checkpoint import serialization as ser
 from repro.core import Sea, SeaConfig, TierSpec
 
@@ -187,6 +187,47 @@ def test_saves_serialize_and_new_save_surfaces_old_failure(tmp_path):
     assert mgr.save(3, state_tree(3))  # manager stays usable
     assert mgr.available_steps() == [3]
     assert h.done()
+
+
+def test_savehandle_finish_marks_consumed_before_releasing_waiter():
+    """Race regression: a result() caller blocked on a failing save must
+    consume the outcome atomically with being released — otherwise
+    _unsettled() in another thread can pop the failed handle in the
+    window before the waiter sets _consumed and re-raise the same
+    failure a second time to the next save()/wait()."""
+    h = SaveHandle(1, "/d")
+    raised = []
+
+    def waiter():
+        try:
+            h.result(timeout=10)
+        except IOError as e:
+            raised.append(e)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    deadline = time.time() + 5
+    while h._waiters == 0 and time.time() < deadline:
+        time.sleep(0.001)
+    assert h._waiters == 1
+    overlapped = h._finish(IOError("boom"))
+    assert not overlapped
+    assert h._consumed, "consumed must be set BEFORE the waiter is released"
+    t.join(10)
+    assert len(raised) == 1
+
+
+def test_failure_observed_via_result_is_not_resurfaced(tmp_path):
+    sea = make_sea(tmp_path)
+    mgr = CheckpointManager(sea, keep_n=5)
+    mgr.open_fn = _FailOnWrite(sea.fs, fail_on=1)
+    h = mgr.save(1, state_tree(1), async_=True)
+    with pytest.raises(IOError, match="injected"):
+        h.result(timeout=30)  # the direct waiter observes the failure
+    mgr.open_fn = None
+    mgr.wait()  # consumed: must be a no-op, never a second raise
+    assert mgr.save(2, state_tree(2))  # ditto for the next save
+    assert mgr.available_steps() == [2]
 
 
 def test_gc_reaps_unmarkered_partials_and_empty_dirs(tmp_path):
